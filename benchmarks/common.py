@@ -1,0 +1,20 @@
+"""Shared benchmark utilities. Every bench module exposes
+``run() -> list[(name, us_per_call, derived)]`` where ``us_per_call`` is the
+wall-clock python cost per simulated protocol event (for throughput claims)
+and ``derived`` is the paper-anchored quantity being reproduced."""
+from __future__ import annotations
+
+import time
+
+
+class WallTimer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0
+
+
+def fmt(x: float, nd=3) -> str:
+    return f"{x:.{nd}g}"

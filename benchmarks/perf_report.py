@@ -1,0 +1,78 @@
+"""§Perf report generator: renders the hillclimb iteration tables in
+EXPERIMENTS.md directly from the tagged dry-run artifacts, so every number
+in the doc is reproducible from `artifacts/dryrun/`.
+
+  PYTHONPATH=src python -m benchmarks.perf_report
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.analysis.roofline import MESHES, roofline_terms
+from repro.configs import get_config, get_shape
+
+ART = pathlib.Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+CELLS = {
+    "kimi-k2-1t-a32b x train_4k": [
+        ("k0 baseline", "kimi-k2-1t-a32b_train_4k_pod16x16", {}),
+        ("k1 +bf16 params", "k1_bf16_kimi-k2-1t-a32b_train_4k_pod16x16", {"param_dtype": "bfloat16"}),
+        ("k2 +ZeRO-1", "k2_zero1_kimi-k2-1t-a32b_train_4k_pod16x16", {"param_dtype": "bfloat16", "zero1": True}),
+        ("k3 +EP hints (refuted)", "k3_ephints_kimi-k2-1t-a32b_train_4k_pod16x16", {"param_dtype": "bfloat16", "zero1": True}),
+        ("k4 +microbatch 4", "k4_mb4_kimi-k2-1t-a32b_train_4k_pod16x16", {"param_dtype": "bfloat16", "zero1": True, "microbatches": 4}),
+        ("k5 final (bf16 moments)", "k5_final_kimi-k2-1t-a32b_train_4k_pod16x16", {"param_dtype": "bfloat16", "zero1": True}),
+        ("k6 final multi-pod", "k6_final_multipod_kimi-k2-1t-a32b_train_4k_pod2x16x16", {"param_dtype": "bfloat16", "zero1": True}),
+    ],
+    "granite-3-8b x train_4k": [
+        ("g0 baseline (dots)", "granite-3-8b_train_4k_pod16x16", {}),
+        ("g1 remat full", "g1_rematfull_granite-3-8b_train_4k_pod16x16", {"remat": "full"}),
+        ("g2 +microbatch 8", "g2_mb8_granite-3-8b_train_4k_pod16x16", {"remat": "full"}),
+        ("g3 +bf16 +ZeRO-1", "g3_bf16_zero1_granite-3-8b_train_4k_pod16x16", {"remat": "full", "param_dtype": "bfloat16", "zero1": True}),
+        ("g4 microbatch 16", "g4_mb16_granite-3-8b_train_4k_pod16x16", {"remat": "full", "param_dtype": "bfloat16", "zero1": True}),
+    ],
+    "mixtral-8x22b x prefill_32k": [
+        ("m0 baseline", "mixtral-8x22b_prefill_32k_pod16x16", {}),
+        ("m1 last-token unembed", "m1_logitslast_mixtral-8x22b_prefill_32k_pod16x16", {"logits_last": True}),
+        ("m2 +bf16 (refuted)", "m2_bf16_mixtral-8x22b_prefill_32k_pod16x16", {"logits_last": True, "param_dtype": "bfloat16"}),
+        ("m3 +SWA block-skip (kernel)", "m1_logitslast_mixtral-8x22b_prefill_32k_pod16x16", {"logits_last": True, "swa_block_skip": True}),
+        ("m4 multi-pod experts-over-pod", "m4_expertspod_mixtral-8x22b_prefill_32k_pod2x16x16", {"logits_last": True, "swa_block_skip": True, "param_dtype": "bfloat16"}),
+    ],
+    "whisper-large-v3 x prefill_32k (mini)": [
+        ("w0 baseline", "whisper-large-v3_prefill_32k_pod16x16", {}),
+        ("w1 last-token unembed", "w1_logitslast_whisper-large-v3_prefill_32k_pod16x16", {"logits_last": True}),
+    ],
+}
+
+
+def row(label: str, fname: str, variant: dict) -> str:
+    f = ART / f"{fname}.json"
+    if not f.exists():
+        return f"| {label} | (artifact missing) |"
+    a = json.loads(f.read_text())
+    if a.get("status") != "ok":
+        return f"| {label} | {a['status']} |"
+    arch, shape, mesh = a["arch"], a["shape"], a["mesh"]
+    t = roofline_terms(
+        get_config(arch), get_shape(shape), MESHES[mesh], variant,
+        coll_bytes_parsed=a["collectives"]["total_bytes"],
+    )
+    ma = a["memory_analysis"]
+    return (
+        f"| {label} | {t['compute_s']:.3f} | {t['memory_s']:.3f} | {t['collective_s']:.3f} "
+        f"| {ma['temp_size_in_bytes']/1e9:.1f} | {ma['argument_size_in_bytes']/1e9:.1f} "
+        f"| {a['collectives']['total_bytes']/1e9:.1f} | {t['roofline_frac']:.2f} |"
+    )
+
+
+def main() -> None:
+    for cell, iters in CELLS.items():
+        print(f"\n### {cell}\n")
+        print("| iteration | compute s | memory s | collective s | temp GB/dev | args GB/dev | HLO coll GB/dev | roofline frac |")
+        print("|---|---|---|---|---|---|---|---|")
+        for label, fname, variant in iters:
+            print(row(label, fname, variant))
+
+
+if __name__ == "__main__":
+    main()

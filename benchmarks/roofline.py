@@ -1,0 +1,101 @@
+"""Roofline table: merge dry-run artifacts (compiled memory/collectives)
+with the analytic model (flops/bytes — scan-aware) into EXPERIMENTS.md
+§Roofline rows. Also usable standalone:
+
+  PYTHONPATH=src python -m benchmarks.roofline [--mesh pod16x16] [--md out.md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.analysis.roofline import MESHES, roofline_terms
+from repro.configs import SHAPES, arch_ids, get_config, get_shape, supports_shape
+
+ART = pathlib.Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def load_artifact(arch, shape, mesh, tag: str = ""):
+    prefix = f"{tag}_" if tag else ""
+    f = ART / f"{prefix}{arch}_{shape}_{mesh}.json"
+    if f.exists():
+        return json.loads(f.read_text())
+    return None
+
+
+def cell_row(arch: str, shape_name: str, mesh_name: str, variant: dict | None = None,
+             tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, reason = supports_shape(cfg, shape)
+    row = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if not ok:
+        row["status"] = "skipped"
+        row["note"] = reason
+        return row
+    art = load_artifact(arch, shape_name, mesh_name, tag=tag)
+    coll = art["collectives"]["total_bytes"] if art and art.get("status") == "ok" else None
+    t = roofline_terms(cfg, shape, MESHES[mesh_name], variant, coll_bytes_parsed=coll)
+    row.update(status="ok", **{k: t[k] for k in (
+        "compute_s", "memory_s", "collective_s", "dominant",
+        "model_flops", "flops_total", "useful_flops_frac", "roofline_frac")})
+    if art and art.get("status") == "ok":
+        row["compiled_temp_gb"] = art["memory_analysis"].get("temp_size_in_bytes", 0) / 1e9
+        row["compiled_args_gb"] = art["memory_analysis"].get("argument_size_in_bytes", 0) / 1e9
+        row["hlo_coll_gb"] = art["collectives"]["total_bytes"] / 1e9
+        row["compile_s"] = art["compile_s"]
+    return row
+
+
+def table(mesh_name: str) -> list[dict]:
+    return [cell_row(a, s, mesh_name) for a in arch_ids() for s in SHAPES]
+
+
+def to_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
+           "useful/HLO flops | roofline frac | HLO coll GB/dev | temp GB/dev |")
+    sep = "|" + "---|" * 10
+    out = [hdr, sep]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['dominant']}** | {r['useful_flops_frac']:.2f} "
+            f"| {r['roofline_frac']:.2f} | {r.get('hlo_coll_gb', float('nan')):.1f} "
+            f"| {r.get('compiled_temp_gb', float('nan')):.1f} |"
+        )
+    return "\n".join(out)
+
+
+def run():
+    """CSV rows for benchmarks.run: one summary line per shape class."""
+    rows = []
+    tab = [r for r in table("pod16x16") if r["status"] == "ok"]
+    for shape in SHAPES:
+        sub = [r for r in tab if r["shape"] == shape]
+        if not sub:
+            continue
+        dom = max(set(x["dominant"] for x in sub),
+                  key=lambda d: sum(x["dominant"] == d for x in sub))
+        mean_frac = sum(x["roofline_frac"] for x in sub) / len(sub)
+        rows.append((
+            f"roofline_{shape}",
+            0.0,
+            f"{len(sub)} archs, typical bottleneck={dom}, "
+            f"mean roofline_frac={mean_frac:.2f}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16", choices=list(MESHES))
+    ap.add_argument("--md")
+    args = ap.parse_args()
+    md = to_markdown(table(args.mesh))
+    if args.md:
+        pathlib.Path(args.md).write_text(md + "\n")
+    print(md)

@@ -1,0 +1,46 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (
+        bench_acquisition,
+        bench_contention,
+        bench_extend_release,
+        bench_failover,
+        bench_liveness,
+        bench_memory,
+        bench_throughput,
+        roofline,
+    )
+
+    modules = [
+        ("fig2_acquisition", bench_acquisition),
+        ("s1_contention", bench_contention),
+        ("s5_liveness", bench_liveness),
+        ("s6_s7_extend_release", bench_extend_release),
+        ("s8_memory", bench_memory),
+        ("s8_throughput", bench_throughput),
+        ("s9_failover", bench_failover),
+        ("roofline", roofline),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for label, mod in modules:
+        t0 = time.time()
+        try:
+            for name, us, derived in mod.run():
+                print(f'{name},{us:.2f},"{derived}"')
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f'{label},NaN,"ERROR: {e!r}"', file=sys.stdout)
+        sys.stdout.flush()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Quickstart: a PaxosLease cell in 60 seconds.
+
+Builds a 5-node cell (every node is acceptor + proposer, as in Keyspace),
+walks through acquire -> extend -> owner crash -> failover -> release, and
+prints the timeline the invariant monitor saw.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs import CellConfig
+from repro.core import build_cell
+from repro.sim.network import NetConfig
+
+
+def main() -> None:
+    cfg = CellConfig(n_acceptors=5, max_lease_time=60.0, lease_timespan=10.0)
+    net = NetConfig(delay_min=0.01, delay_max=0.05, loss=0.05, duplicate=0.05)
+    cell = build_cell(cfg, n_proposers=5, seed=42, net=net)
+    env, mon = cell.env, cell.monitor
+
+    log = lambda msg: print(f"[t={env.now:7.2f}s] {msg}")
+
+    # 1. node 0 acquires the lease (two round-trips)
+    cell.nodes[0].proposer.acquire()
+    env.run_until(1.0)
+    log(f"owner = node {mon.owner_of('R')} (acquired in "
+        f"{mon.acquire_times[0]*1000:.0f} ms ~ 2 RTT)")
+
+    # 2. rivals contend but cannot take it; the owner keeps extending (§6)
+    for n in cell.nodes[1:3]:
+        n.proposer.acquire()
+    env.run_until(45.0)
+    log(f"after 45s of contention: owner = node {mon.owner_of('R')}, "
+        f"extends = {cell.nodes[0].proposer.stats['extended']}, handoffs = {mon.handoffs('R')}")
+
+    # 3. the owner crashes; the lease expires; a rival takes over
+    cell.nodes[0].crash()
+    log("node 0 (owner) crashed")
+    env.run_until(env.now + cfg.lease_timespan + 5.0)
+    log(f"failover complete: owner = node {mon.owner_of('R')}")
+
+    # 4. graceful release (§7): the next waiter takes over without waiting T
+    owner = mon.owner_of("R")
+    t0 = env.now
+    cell.nodes[owner].proposer.release()
+    log(f"node {owner} released the lease")
+    env.run_until(env.now + 5.0)
+    log(f"new owner = node {mon.owner_of('R')} after "
+        f"{min(t for t in mon.acquire_times if t > t0) - t0:.2f}s (vs T={cfg.lease_timespan}s)")
+
+    # 5. the referee: no two proposers ever overlapped
+    mon.assert_clean()
+    print("\nOwnership intervals:")
+    for iv in mon.history["R"]:
+        end = f"{iv.end:7.2f}" if iv.end is not None else "   open"
+        print(f"  node {iv.proposer_id}: [{iv.start:7.2f} .. {end}]")
+    print("\nlease invariant held throughout (0 violations)")
+
+
+if __name__ == "__main__":
+    main()

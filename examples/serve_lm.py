@@ -1,0 +1,58 @@
+"""Batched-request serving driver (the end-to-end inference example).
+
+A small LM serves a stream of prompt requests through the continuous-
+batching engine: requests queue up, join free slots, decode together, and
+free their slot on completion — mixed prompt lengths, per-lane positions.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --requests 12 --slots 4
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import init_model
+from repro.train.serve import Request, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="lm20m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    print(f"serving {cfg.name} ({cfg.n_params()/1e6:.1f}M params), "
+          f"{args.slots} slots, {args.requests} requests")
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
+                      temperature=args.temperature)
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for rid in range(args.requests):
+        plen = int(rng.integers(2, 12))
+        prompt = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
+        eng.submit(Request(rid=rid, prompt=prompt, max_new=args.max_new))
+    done = eng.run_until_drained()
+    dt = time.time() - t0
+
+    tokens = sum(len(r.out) for r in done)
+    print(f"\ncompleted {len(done)} requests, {tokens} new tokens in {dt:.1f}s "
+          f"({tokens/dt:.1f} tok/s on CPU), {eng.steps} engine steps "
+          f"(batching efficiency {tokens/max(eng.steps,1):.2f} tok/step)")
+    for r in sorted(done, key=lambda r: r.rid)[:5]:
+        print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,262 @@
+"""Analytic roofline model per (arch, shape, mesh).
+
+Why analytic: XLA's HloCostAnalysis counts a ``lax.scan`` body ONCE (verified
+empirically — see EXPERIMENTS.md §Dry-run), so compiled cost_analysis under-
+counts scanned-layer models by ~n_layers. We therefore derive FLOPs/bytes/
+collective-bytes from the configs (every matmul in the model is enumerated
+below) and cross-validate against cost_analysis on an UNROLLED reduced config
+(tests/test_roofline_validation.py) and against the HLO-parsed collectives.
+
+Terms (per training/serving step):
+  compute    = total_FLOPs / (chips * peak_FLOP/s)
+  memory     = per_device_HBM_bytes / HBM_bw
+  collective = per_device_collective_bytes / link_bw
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from ..configs.base import ModelConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+MOE_GROUP = 512  # must match models.moe.moe_dispatch default
+
+
+@dataclass
+class MeshShape:
+    pod: int
+    data: int
+    model: int
+
+    @property
+    def chips(self) -> int:
+        return self.pod * self.data * self.model
+
+    @property
+    def dp(self) -> int:
+        return self.pod * self.data
+
+
+MESHES = {"pod16x16": MeshShape(1, 16, 16), "pod2x16x16": MeshShape(2, 16, 16)}
+
+
+# ---------------------------------------------------------------------------
+# FLOPs (totals across all chips, forward pass; train multiplies below)
+# ---------------------------------------------------------------------------
+def _attn_flops_fwd(cfg: ModelConfig, batch: int, s_q: int, s_kv_eff: float) -> float:
+    """QK^T + PV matmuls, all layers."""
+    per_layer = 2 * 2 * batch * cfg.n_heads * cfg.head_dim * s_q * s_kv_eff
+    return per_layer * cfg.n_layers
+
+
+def _rwkv_mix_flops_fwd(cfg: ModelConfig, tokens: float, chunk: int = 32) -> float:
+    h = cfg.d_model // cfg.rwkv.head_size
+    n = cfg.rwkv.head_size
+    per_tok_head = 4 * chunk * n + 4 * n * n  # intra matmuls + state/inter
+    return per_tok_head * h * cfg.n_layers * tokens
+
+
+def _ssm_flops_fwd(cfg: ModelConfig, tokens: float) -> float:
+    di, st = cfg.ssm.d_inner, cfg.ssm.state_size
+    return 8.0 * di * st * tokens * cfg.n_layers  # elementwise scan + C/B contractions
+
+
+def _moe_dispatch_flops_fwd(cfg: ModelConfig, tokens: float, group: int = MOE_GROUP) -> float:
+    """Dispatch + combine one-hot einsums: each costs 2*T*(E*C)*d with
+    E*C ~= group*top_k*capacity per group — LINEAR in the group size."""
+    moe = cfg.moe
+    slots = group * moe.top_k * moe.capacity_factor  # ~ E*C per group
+    return 4.0 * tokens * slots * cfg.d_model * cfg.n_layers
+
+
+def flops_fwd(cfg: ModelConfig, shape: ShapeConfig, variant: dict | None = None) -> float:
+    """Forward FLOPs of one step, totals across chips.
+
+    variant flags (all default off = the naive baseline implementation):
+      swa_block_skip — sliding-window block skipping (the Pallas flash
+        kernel realizes it; the jnp chunked path computes masked blocks)
+      logits_last    — prefill unembeds only the final position
+    """
+    variant = variant or {}
+    b = shape.global_batch
+    if shape.kind == "decode":
+        toks = float(b)
+        mm = 2.0 * cfg.matmul_params(active=True) * toks
+        if cfg.attention_free:
+            h = cfg.d_model // cfg.rwkv.head_size
+            n = cfg.rwkv.head_size
+            mix = 4.0 * n * n * h * cfg.n_layers * toks
+            return mm + mix
+        s_cache = min(shape.seq_len, cfg.sliding_window) if cfg.sliding_window else shape.seq_len
+        attn = _attn_flops_fwd(cfg, b, 1, s_cache)
+        if cfg.hybrid_parallel_ssm:
+            attn += _ssm_flops_fwd(cfg, toks)
+        if cfg.enc_dec:
+            attn += 2 * 2 * b * cfg.n_heads * cfg.head_dim * 1 * cfg.encoder_seq * cfg.n_layers
+        return mm + attn
+
+    toks = float(b * shape.seq_len)
+    mm = 2.0 * cfg.matmul_params(active=True) * toks
+    extra = 0.0
+    if cfg.attention_free:
+        extra += _rwkv_mix_flops_fwd(cfg, toks)
+    else:
+        s_kv = shape.seq_len / 2.0  # causal average
+        if cfg.sliding_window and variant.get("swa_block_skip"):
+            # the jnp chunked path computes (masked) full blocks; only the
+            # Pallas kernel's pl.when block-skip realizes the SWA saving
+            s_kv = min(s_kv, float(cfg.sliding_window))
+        extra += _attn_flops_fwd(cfg, b, shape.seq_len, s_kv)
+        if cfg.hybrid_parallel_ssm:
+            extra += _ssm_flops_fwd(cfg, toks)
+        if cfg.enc_dec:
+            # encoder self-attn (full 1500^2) + decoder cross-attn (S x 1500)
+            e = cfg.encoder_seq
+            extra += 2 * 2 * b * cfg.n_heads * cfg.head_dim * e * e * cfg.n_encoder_layers
+            extra += 2 * 2 * b * cfg.n_heads * cfg.head_dim * shape.seq_len * e * cfg.n_layers
+            # encoder matmul params are in matmul_params already
+    if cfg.moe is not None:
+        extra += _moe_dispatch_flops_fwd(cfg, toks)
+    if variant.get("logits_last") and shape.kind == "prefill":
+        # unembedding shrinks from T tokens to B tokens
+        extra -= 2.0 * cfg.vocab_size * cfg.d_model * (toks - b)
+    return mm + extra
+
+
+_TRAIN_MULT = {"nothing": 3.0, "dots": 10.0 / 3.0, "full": 4.0}
+
+
+def flops_step(cfg: ModelConfig, shape: ShapeConfig, variant: dict | None = None) -> float:
+    variant = variant or {}
+    f = flops_fwd(cfg, shape, variant)
+    if shape.kind == "train":
+        policy = variant.get("remat", cfg.remat_policy)
+        return f * _TRAIN_MULT.get(policy, 3.0)
+    return f
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """The 6*N*D (or 6*N_active*D) yardstick the assignment asks for."""
+    n = cfg.matmul_params(active=True)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * shape.tokens_per_step
+
+
+# ---------------------------------------------------------------------------
+# Per-device HBM bytes
+# ---------------------------------------------------------------------------
+def _param_bytes_per_device(cfg: ModelConfig, mesh: MeshShape, *, active_only: bool) -> float:
+    n = cfg.n_params(active=active_only)
+    # experts shard over dp when divisible; everything else over model only
+    if cfg.moe is not None and not active_only:
+        moe_p = cfg.n_layers * cfg._moe_params(active=False)
+        rest = n - moe_p
+        ep = mesh.dp if cfg.moe.n_experts % mesh.dp == 0 else 1
+        return moe_p / (ep * mesh.model) + rest / mesh.model
+    return n / mesh.model
+
+
+def hbm_bytes_per_device(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshShape,
+                         variant: dict | None = None) -> float:
+    variant = variant or {}
+    pbytes = 2 if variant.get("param_dtype") == "bfloat16" else 4
+    if shape.kind == "decode":
+        p = _param_bytes_per_device(cfg, mesh, active_only=False) * 2  # bf16 read
+        cache = _cache_bytes_total(cfg, shape) / mesh.chips * 2  # read + write
+        return p + cache
+    toks_loc = shape.tokens_per_step / mesh.dp
+    policy = variant.get("remat", cfg.remat_policy)
+    act_tensors = {"nothing": 16, "dots": 10, "full": 6}.get(policy, 12)
+    act = toks_loc * cfg.d_model * cfg.n_layers * act_tensors * 2 * 2  # r+w, bf16
+    p_loc = _param_bytes_per_device(cfg, mesh, active_only=False)
+    if shape.kind == "prefill":
+        return p_loc * 2 + act / 2 + _cache_bytes_total(cfg, shape) / mesh.chips
+    # train: bf16 fwd+bwd reads + grad w + adam m,v r/w + master param r/w
+    opt_div = mesh.dp if variant.get("zero1") else 1
+    param_traffic = p_loc * (2 * 3 + pbytes) + p_loc * (16 + 8) / opt_div
+    return param_traffic + act
+
+
+def _cache_bytes_total(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    b = shape.global_batch
+    if cfg.attention_free:
+        h = cfg.d_model // cfg.rwkv.head_size
+        n = cfg.rwkv.head_size
+        return cfg.n_layers * b * (h * n * n * 4 + 2 * cfg.d_model * 2)
+    sc = min(shape.seq_len, cfg.sliding_window) if cfg.sliding_window else shape.seq_len
+    kv = cfg.n_layers * b * sc * cfg.n_kv_heads * cfg.head_dim * 2 * 2
+    if cfg.hybrid_parallel_ssm:
+        kv += cfg.n_layers * b * cfg.ssm.d_inner * cfg.ssm.state_size * 4
+    if cfg.enc_dec:
+        kv += cfg.n_layers * b * cfg.encoder_seq * cfg.n_kv_heads * cfg.head_dim * 2 * 2
+    return kv
+
+
+# ---------------------------------------------------------------------------
+# Per-device collective bytes
+# ---------------------------------------------------------------------------
+def collective_bytes_per_device(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshShape,
+                                variant: dict | None = None, *,
+                                grad_dtype_bytes: int | None = None) -> float:
+    variant = variant or {}
+    if grad_dtype_bytes is None:
+        grad_dtype_bytes = 2 if variant.get("param_dtype") == "bfloat16" else 4
+    d = cfg.d_model
+    if shape.kind == "decode":
+        b_loc = max(shape.global_batch // mesh.dp, 1)
+        per_layer = 2 * 2 * b_loc * 1 * d * 2  # 2 TP all-reduces, ring 2x, bf16
+        return per_layer * cfg.n_layers
+    toks_loc = shape.tokens_per_step / mesh.dp
+    tp = 2 * 2 * toks_loc * d * 2 * cfg.n_layers  # fwd; bwd doubles it
+    if shape.kind == "train":
+        tp *= 2
+        n_rep = cfg.n_params(active=False)
+        if cfg.moe is not None and cfg.moe.n_experts % mesh.dp == 0:
+            n_rep -= cfg.n_layers * cfg._moe_params(active=False)  # EP: no DP grad sync
+            # EP all-to-all: tokens*topk*cf*d each way, fwd+bwd
+            a2a = 2 * 2 * toks_loc * cfg.moe.top_k * cfg.moe.capacity_factor * d * 2 * cfg.n_layers
+            tp += a2a
+        dp_grad = 2 * (n_rep / mesh.model) * grad_dtype_bytes
+        return tp + dp_grad
+    return tp
+
+
+# ---------------------------------------------------------------------------
+# Terms
+# ---------------------------------------------------------------------------
+def roofline_terms(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshShape,
+                   variant: dict | None = None,
+                   coll_bytes_parsed: float | None = None) -> dict:
+    """When available, the HLO-parsed per-device collective bytes from the
+    compiled dry-run artifact override the analytic estimate (GSPMD's chosen
+    collective schedule — e.g. weight-gather vs activation all-reduce — is
+    what actually runs; the analytic formula documents the Megatron-style
+    expectation)."""
+    f = flops_step(cfg, shape, variant)
+    hbm = hbm_bytes_per_device(cfg, shape, mesh, variant)
+    coll = coll_bytes_parsed if coll_bytes_parsed is not None else \
+        collective_bytes_per_device(cfg, shape, mesh, variant)
+    t_c = f / (mesh.chips * PEAK_FLOPS)
+    t_m = hbm / HBM_BW
+    t_x = coll / LINK_BW
+    terms = {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    bound = max(t_c, t_m, t_x)
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "flops_total": f,
+        "model_flops": mf,
+        "useful_flops_frac": mf / f if f else 0.0,
+        "hbm_bytes_per_dev": hbm,
+        "coll_bytes_per_dev": coll,
+        "step_time_bound_s": bound,
+        "roofline_frac": (mf / (mesh.chips * PEAK_FLOPS)) / bound if bound else 0.0,
+    }

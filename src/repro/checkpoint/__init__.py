@@ -1,0 +1,10 @@
+from .io import latest_step, restore_checkpoint, save_checkpoint
+from .manager import AsyncCheckpointer, CheckpointManager
+
+__all__ = [
+    "AsyncCheckpointer",
+    "CheckpointManager",
+    "latest_step",
+    "restore_checkpoint",
+    "save_checkpoint",
+]

@@ -1,0 +1,108 @@
+"""Sharded checkpoint I/O: one .npz per top-level param group + a JSON
+manifest. Writes are crash-safe (tmp dir + atomic rename); restore reshards
+onto whatever mesh the reader is running (arrays are stored unsharded here —
+a multi-host deployment would write per-host shard files keyed by the same
+manifest paths)."""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pathlib
+import shutil
+import tempfile
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=()) -> dict:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], prefix + (str(k),)))
+    else:
+        out["/".join(prefix)] = tree
+    return out
+
+
+def _unflatten(flat: dict) -> dict:
+    tree: dict = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        t = tree
+        for p in parts[:-1]:
+            t = t.setdefault(p, {})
+        t[parts[-1]] = v
+    return tree
+
+
+def save_checkpoint(ckpt_dir: str | pathlib.Path, step: int, state: dict, *, keep: int = 3) -> pathlib.Path:
+    """state: arbitrary pytree-of-dicts (params/opt/extra). Returns final dir."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    flat = {k: np.asarray(jax.device_get(v)) for k, v in _flatten(state).items()}
+    tmp = pathlib.Path(tempfile.mkdtemp(dir=ckpt_dir, prefix=f".tmp_step{step}_"))
+    try:
+        np.savez(tmp / "arrays.npz", **flat)
+        manifest = {
+            "step": int(step),
+            "time": time.time(),
+            "keys": sorted(flat),
+            "shapes": {k: list(v.shape) for k, v in flat.items()},
+            "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        }
+        manifest["digest"] = hashlib.sha256(
+            json.dumps(manifest["shapes"], sort_keys=True).encode()
+        ).hexdigest()[:16]
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        final = ckpt_dir / f"step_{step:08d}"
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: pathlib.Path, keep: int) -> None:
+    steps = sorted(p for p in ckpt_dir.glob("step_*") if p.is_dir())
+    for p in steps[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)
+    for p in ckpt_dir.glob(".tmp_*"):
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str | pathlib.Path) -> Optional[int]:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    steps = sorted(ckpt_dir.glob("step_*"))
+    if not steps:
+        return None
+    return int(steps[-1].name.split("_")[1])
+
+
+def restore_checkpoint(ckpt_dir: str | pathlib.Path, step: Optional[int] = None,
+                       shardings=None) -> tuple[dict, int]:
+    """Returns (state, step). ``shardings``: optional matching pytree of
+    NamedShardings to place leaves directly on the mesh (resharding restore)."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    with np.load(d / "arrays.npz") as z:
+        flat = {k: z[k] for k in manifest["keys"]}
+    state = _unflatten(flat)
+    if shardings is not None:
+        flat_sh = _flatten(shardings)
+        state = _unflatten({
+            k: jax.device_put(v, flat_sh[k]) if k in flat_sh else v
+            for k, v in flat.items()
+        })
+    return state, int(manifest["step"])

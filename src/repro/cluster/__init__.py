@@ -1,0 +1,12 @@
+from .autoscale import AutoscaleController
+from .coordinator import CoordinatorService
+from .membership import MembershipTracker
+from .shards import ShardLeaseManager, ShardWorker
+
+__all__ = [
+    "AutoscaleController",
+    "CoordinatorService",
+    "MembershipTracker",
+    "ShardLeaseManager",
+    "ShardWorker",
+]

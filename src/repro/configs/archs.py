@@ -1,0 +1,229 @@
+"""Exact configurations for the 10 assigned architectures (+ example configs).
+
+Each entry reproduces the assignment table verbatim; provenance in ``source``.
+"""
+from __future__ import annotations
+
+from .base import ModelConfig, MoEConfig, RWKVConfig, SSMConfig
+
+INTERNLM2_1_8B = ModelConfig(
+    name="internlm2-1.8b",
+    family="dense",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=8192,
+    vocab_size=92544,
+    rope_theta=1_000_000.0,
+    remat_policy="dots",
+    source="[arXiv:2403.17297; hf] GQA kv=8",
+)
+
+GRANITE_3_8B = ModelConfig(
+    name="granite-3-8b",
+    family="dense",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=12800,
+    vocab_size=49155,
+    remat_policy="dots",
+    source="[hf:ibm-granite/granite-3.0-2b-base; hf] GQA kv=8",
+)
+
+QWEN1_5_0_5B = ModelConfig(
+    name="qwen1.5-0.5b",
+    family="dense",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_head=64,
+    d_ff=2816,
+    vocab_size=151936,
+    qkv_bias=True,
+    remat_policy="dots",
+    source="[hf:Qwen/Qwen1.5-0.5B; hf] QKV bias, MHA",
+)
+
+STARCODER2_15B = ModelConfig(
+    name="starcoder2-15b",
+    family="dense",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=4,
+    d_head=128,
+    d_ff=24576,
+    vocab_size=49152,
+    norm_type="layernorm",
+    mlp_gated=False,
+    mlp_act="gelu",
+    linear_bias=True,
+    rope_theta=100_000.0,
+    remat_policy="dots",
+    source="[arXiv:2402.19173; hf] GQA kv=4, RoPE, plain-GELU MLP, biases",
+)
+
+# whisper-large-v3: the assignment's "32L" is realized as 32 encoder + 32
+# decoder layers (the real checkpoint's layout at d_model=1280). Conv audio
+# frontend is a STUB: input_specs() supplies precomputed frame embeddings.
+WHISPER_LARGE_V3 = ModelConfig(
+    name="whisper-large-v3",
+    family="audio",
+    n_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    d_head=64,
+    d_ff=5120,
+    vocab_size=51866,
+    enc_dec=True,
+    n_encoder_layers=32,
+    encoder_seq=1500,
+    use_rope=False,
+    norm_type="layernorm",
+    mlp_gated=False,
+    mlp_act="gelu",
+    linear_bias=True,
+    frontend="audio",
+    remat_policy="dots",
+    source="[arXiv:2212.04356; unverified] enc-dec, conv frontend stubbed",
+)
+
+HYMBA_1_5B = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    d_head=64,
+    d_ff=5504,
+    vocab_size=32001,
+    sliding_window=1024,  # Hymba uses SWA on most layers; global attn is the exception
+    ssm=SSMConfig(state_size=16, d_inner=3200, dt_rank=8),
+    hybrid_parallel_ssm=True,
+    remat_policy="dots",
+    source="[arXiv:2411.13676; hf] parallel attn+mamba heads, ssm_state=16",
+)
+
+MIXTRAL_8X22B = ModelConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    n_layers=56,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=16384,
+    vocab_size=32768,
+    sliding_window=4096,  # per assignment table ("SWA")
+    moe=MoEConfig(n_experts=8, top_k=2, d_expert=16384),
+    rope_theta=1_000_000.0,
+    remat_policy="dots",
+    source="[arXiv:2401.04088; hf] 8 experts top-2, SWA",
+)
+
+KIMI_K2_1T_A32B = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    d_head=112,
+    d_ff=2048,  # = per-expert hidden width
+    vocab_size=163840,
+    moe=MoEConfig(n_experts=384, top_k=8, d_expert=2048),
+    rope_theta=50_000.0,
+    remat_policy="full",
+    source="[arXiv:2501.kimi2; unverified] trillion-param MoE, 384e top-8 (paper-table)",
+)
+
+RWKV6_3B = ModelConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    n_layers=32,
+    d_model=2560,
+    n_heads=40,  # = d_model / rwkv head_size
+    n_kv_heads=40,
+    d_head=64,
+    d_ff=8960,
+    vocab_size=65536,
+    attention_free=True,
+    use_rope=False,
+    rwkv=RWKVConfig(head_size=64, decay_lora=64, tokenshift_lora=32),
+    remat_policy="dots",
+    source="[arXiv:2404.05892; hf] Finch — data-dependent decay, attn-free",
+)
+
+# internvl2-2b: InternViT frontend is a STUB (precomputed patch embeddings);
+# the backbone below is the InternLM2-1.8b layout with the VLM vocab.
+INTERNVL2_2B = ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=8192,
+    vocab_size=92553,
+    rope_theta=1_000_000.0,
+    frontend="vision",
+    n_frontend_tokens=256,
+    remat_policy="dots",
+    source="[arXiv:2404.16821; hf] InternViT(stub) + InternLM2 backbone",
+)
+
+# Example / driver configs (not part of the assigned table) -----------------
+
+LM100M = ModelConfig(
+    name="lm100m",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=4,
+    d_head=64,
+    d_ff=2048,
+    vocab_size=32768,
+    source="example ~100M-param training driver config",
+)
+
+LM20M = ModelConfig(
+    name="lm20m",
+    family="dense",
+    n_layers=8,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=2,
+    d_head=64,
+    d_ff=1024,
+    vocab_size=8192,
+    tie_embeddings=True,
+    source="small CPU-friendly demo config",
+)
+
+ASSIGNED: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        INTERNLM2_1_8B,
+        GRANITE_3_8B,
+        QWEN1_5_0_5B,
+        STARCODER2_15B,
+        WHISPER_LARGE_V3,
+        HYMBA_1_5B,
+        MIXTRAL_8X22B,
+        KIMI_K2_1T_A32B,
+        RWKV6_3B,
+        INTERNVL2_2B,
+    ]
+}
+
+EXTRAS: dict[str, ModelConfig] = {c.name: c for c in [LM100M, LM20M]}

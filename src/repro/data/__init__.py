@@ -1,0 +1,4 @@
+from .synthetic import SyntheticTokens
+from .loader import ShardedLoader
+
+__all__ = ["ShardedLoader", "SyntheticTokens"]

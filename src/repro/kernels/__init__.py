@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's perf-critical compute layers.
+
+The paper (PaxosLease) has no kernel-level contribution — these serve the
+data plane's hot spots:
+
+  flash_attention/  GQA causal/SWA flash attention (online softmax, VMEM
+                    scratch accumulators, pl.when block-skip for SWA)
+  rwkv6/            chunked WKV6 linear recurrence (MXU matmul form, fp32
+                    VMEM state tile carried across sequential grid steps)
+
+Each package has kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper) and ref.py (pure-jnp oracle); validated on CPU with interpret=True
+(tests/test_kernels_*.py sweep shapes and dtypes).
+"""

@@ -1,0 +1,35 @@
+"""jit'd public wrapper: (B, S, H, Dh) layout -> flash kernel layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,  # (B, Sq, Hq, Dh)
+    k: jax.Array,  # (B, Sk, Hkv, Dh)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window=None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,  # False on real TPUs
+) -> jax.Array:
+    b, sq, hq, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    qt = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, dh)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * hkv, sk, dh)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * hkv, sk, dh)
+    o = flash_attention_bhsd(
+        qt, kt, vt, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return o.reshape(b, hq, sq, dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=None):
+    """q: (BHq, Sq, Dh); k,v: (BHkv, Sk, Dh) -> (BHq, Sq, Dh)."""
+    bhq, sq, dh = q.shape
+    bhkv, sk, _ = k.shape
+    g = bhq // bhkv
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=0)
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32), kf) / math.sqrt(dh)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, vf).astype(q.dtype)

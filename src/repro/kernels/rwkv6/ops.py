@@ -1,0 +1,27 @@
+"""jit'd public wrapper for the WKV6 kernel, (B, S, H, N) layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import wkv6_bhsn
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(
+    r: jax.Array,  # (B, S, H, N)
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,
+    u: jax.Array,  # (H, N)
+    *,
+    chunk: int = 32,
+    interpret: bool = True,
+) -> jax.Array:
+    b, s, h, n = r.shape
+    fold = lambda a: a.transpose(0, 2, 1, 3).reshape(b * h, s, n)
+    ue = jnp.broadcast_to(u[None], (b, h, n)).reshape(b * h, n)
+    o = wkv6_bhsn(fold(r), fold(k), fold(v), fold(logw), ue, chunk=chunk, interpret=interpret)
+    return o.reshape(b, h, s, n).transpose(0, 2, 1, 3)

@@ -1,0 +1,23 @@
+"""Oracle for the WKV6 kernel: the exact sequential recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, logw, u):
+    """r,k,v,logw: (BH, S, N); u: (BH, N). Sequential scan — exact."""
+    rf, kf, vf, wf, uf = (a.astype(jnp.float32) for a in (r, k, v, logw, u))
+
+    def body(s, inp):
+        rt, kt, vt, wt = inp  # (BH, N)
+        kv = kt[:, :, None] * vt[:, None, :]  # (BH, N, N)
+        o = jnp.einsum("bn,bnm->bm", rt, s + uf[:, :, None] * kv)
+        s = jnp.exp(wt)[:, :, None] * s + kv
+        return s, o
+
+    bh, seq, n = r.shape
+    s0 = jnp.zeros((bh, n, n), jnp.float32)
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    _, outs = jax.lax.scan(body, s0, xs)
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype)

@@ -1,0 +1,227 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (architecture x input shape) on
+# the production meshes, extract memory/cost/collective analysis, write JSON
+# artifacts for the roofline report. The two lines above MUST precede every
+# other import (jax locks the device count on first init).
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out-dir artifacts/dryrun]
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from ..analysis.hlo import parse_collectives
+from ..configs import SHAPES, arch_ids, get_config, get_shape, supports_shape
+from ..models import frontends, transformer
+from . import steps as steps_lib
+from .mesh import make_production_mesh
+
+
+def abstract_opt(cfg, moment_dtype="float32"):
+    import jax.numpy as jnp
+
+    dt = jnp.dtype(moment_dtype)
+    ab = transformer.abstract_model(cfg)
+    mom = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, dt), ab)
+    return {"m": mom, "v": jax.tree.map(lambda x: x, mom), "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def _memory_analysis_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # backend may not support it
+        return {"error": str(e)}
+    if ma is None:
+        return {}
+    out = {}
+    for attr in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool, zero1: bool = False,
+               rule_overrides=None, unroll: bool = False, microbatches: int = 1,
+               param_dtype: str = None, remat: str = None, logits_mode: str = "all",
+               moe_ep_hints: bool = False, moment_dtype: str = "float32"):
+    """Lower+compile one (arch, shape, mesh) cell; returns the artifact dict.
+
+    The keyword levers are the §Perf hillclimb knobs — each combination is
+    recorded as a tagged artifact so before/after deltas are reproducible."""
+    cfg = get_config(arch)
+    if unroll:
+        cfg = dataclasses.replace(cfg, scan_unroll=True)
+    if param_dtype:
+        cfg = dataclasses.replace(cfg, param_dtype=param_dtype)
+    if remat:
+        cfg = dataclasses.replace(cfg, remat_policy=remat)
+    if moe_ep_hints:
+        rule_overrides = {**(rule_overrides or {}), "moe_group": None}
+    shape = get_shape(shape_name)
+    ok, reason = supports_shape(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    meta = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "kind": shape.kind,
+        "n_params": cfg.n_params(),
+        "n_params_active": cfg.n_params(active=True),
+        "n_matmul_params_active": cfg.matmul_params(active=True),
+        "tokens_per_step": shape.tokens_per_step,
+    }
+    if not ok:
+        return {**meta, "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    specs = frontends.input_specs(cfg, shape)
+    in_sh, out_sh, rules = steps_lib.step_shardings(
+        cfg, shape, mesh, zero1=zero1, rule_overrides=rule_overrides
+    )
+
+    from ..parallel.sharding import use_mesh
+
+    t0 = time.time()
+    with use_mesh(mesh, {**rules}):
+        if shape.kind == "train":
+            fn = steps_lib.make_train_step(cfg, microbatches=microbatches)
+            args = (transformer.abstract_model(cfg), abstract_opt(cfg, moment_dtype), specs["batch"])
+            donate = (0, 1)
+        elif shape.kind == "prefill":
+            fn = steps_lib.make_prefill_step(cfg, logits_mode=logits_mode)
+            args = (transformer.abstract_model(cfg), specs["batch"])
+            donate = ()
+        else:
+            fn = steps_lib.make_decode_step(cfg)
+            args = (transformer.abstract_model(cfg), specs["cache"], specs["tokens"], specs["pos"])
+            donate = (1,)
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ca = compiled.cost_analysis() or {}
+    mem = _memory_analysis_dict(compiled)
+    trip = {"body": cfg.n_layers}
+    coll = parse_collectives(compiled.as_text(), body_trip_counts=trip)
+    art = {
+        **meta,
+        "status": "ok",
+        "n_chips": int(n_chips),
+        "zero1": zero1,
+        "variant": {
+            "microbatches": microbatches, "param_dtype": cfg.param_dtype,
+            "remat": cfg.remat_policy, "logits_mode": logits_mode,
+            "moe_ep_hints": moe_ep_hints, "moment_dtype": moment_dtype,
+        },
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "cost_analysis": {
+            k: float(v)
+            for k, v in ca.items()
+            if k in ("flops", "bytes accessed", "transcendentals", "optimal_seconds")
+        },
+        "memory_analysis": mem,
+        "collectives": coll.as_dict(),
+    }
+    return art
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--unroll", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--param-dtype", default=None)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--logits-mode", default="all", choices=["all", "last"])
+    ap.add_argument("--moe-ep-hints", action="store_true")
+    ap.add_argument("--moment-dtype", default="float32")
+    ap.add_argument("--experts-pod", action="store_true",
+                    help="shard the expert axis over the pod axis only (for "
+                         "n_experts divisible by pods but not by pod*data)")
+    ap.add_argument("--out-dir", default="artifacts/dryrun")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for a in arch_ids():
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        cells.append((args.arch, args.shape))
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_ok = n_skip = n_fail = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            mesh_name = "pod2x16x16" if mp else "pod16x16"
+            tag = f"{args.tag}_" if args.tag else ""
+            fname = out_dir / f"{tag}{arch}_{shape}_{mesh_name}.json"
+            if fname.exists():
+                print(f"[dryrun] SKIP (exists) {fname.name}", flush=True)
+                continue
+            print(f"[dryrun] {arch} x {shape} on {mesh_name} ...", flush=True)
+            try:
+                art = lower_cell(
+                    arch, shape, multi_pod=mp, zero1=args.zero1, unroll=args.unroll,
+                    microbatches=args.microbatches, param_dtype=args.param_dtype,
+                    remat=args.remat, logits_mode=args.logits_mode,
+                    moe_ep_hints=args.moe_ep_hints, moment_dtype=args.moment_dtype,
+                    rule_overrides={"experts": ("pod",)} if args.experts_pod else None,
+                )
+            except Exception:
+                art = {
+                    "arch": arch, "shape": shape, "mesh": mesh_name,
+                    "status": "failed", "traceback": traceback.format_exc(),
+                }
+            fname.write_text(json.dumps(art, indent=1))
+            st = art["status"]
+            n_ok += st == "ok"
+            n_skip += st == "skipped"
+            n_fail += st == "failed"
+            msg = f"[dryrun]   -> {st}"
+            if st == "ok":
+                msg += f" (lower {art['lower_s']}s compile {art['compile_s']}s, " \
+                       f"coll {art['collectives']['total_bytes']/1e9:.2f} GB)"
+            elif st == "failed":
+                msg += "\n" + art["traceback"].splitlines()[-1]
+            print(msg, flush=True)
+            jax.clear_caches()
+    print(f"[dryrun] done: ok={n_ok} skipped={n_skip} failed={n_fail}", flush=True)
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state. Single pod = (data=16, model=16) -> 256 chips;
+multi-pod = (pod=2, data=16, model=16) -> 512 chips.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices but only {len(devices)} present; "
+            "the dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512"
+        )
+    dev_array = np.array(devices[:n]).reshape(shape)
+    from jax.sharding import Mesh
+
+    return Mesh(dev_array, axes)
+
+
+def make_local_mesh(axes=("data", "model")):
+    """1x1 mesh on the real local device(s) — used by runnable examples."""
+    import jax
+
+    from jax.sharding import Mesh
+
+    n = len(jax.devices())
+    shape = (n,) + (1,) * (len(axes) - 1)
+    return Mesh(np.array(jax.devices()).reshape(shape), axes)

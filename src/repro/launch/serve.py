@@ -1,0 +1,44 @@
+"""Serving launcher: batched continuous-batching engine over a config.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch lm20m --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="lm20m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config, reduced
+    from repro.models import init_model
+    from repro.train.serve import Request, ServeEngine
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len)
+    rng = np.random.default_rng(0)
+    for rid in range(args.requests):
+        plen = int(rng.integers(2, 12))
+        eng.submit(Request(rid=rid,
+                           prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+                           max_new=args.max_new))
+    done = eng.run_until_drained()
+    toks = sum(len(r.out) for r in done)
+    print(f"served {len(done)} requests / {toks} tokens in {eng.steps} engine steps")
+
+
+if __name__ == "__main__":
+    main()

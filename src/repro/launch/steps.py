@@ -1,0 +1,191 @@
+"""Step functions (train / prefill / decode) + their sharding trees.
+
+Shared by the dry-run, the training loop and the serving loop so that what we
+lower for the 512-chip mesh is exactly what runs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import frontends, transformer
+from ..optim import adamw_init, adamw_update, cosine_schedule
+from ..parallel import sharding as shd
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, *, peak_lr=3e-4, warmup=100, total=10000,
+                    microbatches: int = 1):
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            # gradient accumulation: peak activation memory / microbatches
+            mb = jax.tree.map(
+                lambda a: a.reshape((microbatches, a.shape[0] // microbatches) + a.shape[1:]),
+                batch,
+            )
+
+            def body(acc, b):
+                (loss, _m), grads = jax.value_and_grad(
+                    lambda p: transformer.loss_fn(cfg, p, b), has_aux=True
+                )(params)
+                return jax.tree.map(jnp.add, acc, grads), loss
+
+            zero = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), params)
+            gsum, losses = jax.lax.scan(body, zero, mb)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = losses.mean()
+            metrics = {"ce": loss, "aux": jnp.float32(0.0), "tokens": jnp.float32(0.0)}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: transformer.loss_fn(cfg, p, batch), has_aux=True
+            )(params)
+        lr = cosine_schedule(opt_state["step"], peak_lr=peak_lr, warmup_steps=warmup, total_steps=total)
+        params, opt_state, om = adamw_update(params, grads, opt_state, lr=lr)
+        out = {"loss": loss, **metrics, **om, "lr": lr}
+        return params, opt_state, out
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, logits_mode: str = "all"):
+    def prefill_step(params, batch):
+        logits, cache, _aux = transformer.forward(
+            cfg, params, batch, emit_cache=True, logits_mode=logits_mode
+        )
+        return logits[:, -1:, :], cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens, pos):
+        return transformer.decode_step(cfg, params, cache, tokens, pos)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Logical axes for non-param step inputs
+# ---------------------------------------------------------------------------
+def batch_axes(cfg: ModelConfig, with_labels: bool) -> dict:
+    d: dict = {"tokens": ("batch", None)}
+    if with_labels:
+        d["labels"] = ("batch", None)
+    if cfg.frontend == "vision":
+        d["patch_embeds"] = ("batch", None, "embed")
+    if cfg.enc_dec:
+        d["frames"] = ("batch", None, "embed")
+    return d
+
+
+def cache_axes(cfg: ModelConfig, mesh: Mesh) -> dict:
+    """Logical axes for the decode cache; if kv heads don't divide the model
+    axis, shard the head_dim instead (partial-dot attention, psum'd by GSPMD)."""
+    model_size = mesh.shape.get("model", 1)
+    kv_ok = cfg.n_kv_heads % model_size == 0
+    kv = ("layers", "batch", None, "kv_heads" if kv_ok else None, None if kv_ok else "head_tp")
+    ax: dict = {}
+    if cfg.attention_free:
+        return {
+            "wkv": ("layers", "batch", "rwkv_heads", None, None),
+            "tm_prev": ("layers", "batch", "embed"),
+            "cm_prev": ("layers", "batch", "embed"),
+        }
+    ax["k"] = kv
+    ax["v"] = kv
+    ax["slot_pos"] = ("layers", "batch", None)
+    if cfg.hybrid_parallel_ssm:
+        ax["ssm"] = ("layers", "batch", "ssm_inner", None)
+    if cfg.enc_dec:
+        ax["ck"] = kv
+        ax["cv"] = kv
+    return ax
+
+
+CACHE_RULES = {"head_tp": "model", "rwkv_heads": "model"}
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees per step kind
+# ---------------------------------------------------------------------------
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, rules: dict):
+    axes = transformer.model_axes(cfg)
+    ab = transformer.abstract_model(cfg)
+    return shd.tree_shardings(mesh, rules, axes, ab)
+
+
+def opt_shardings(cfg: ModelConfig, mesh: Mesh, rules: dict, *, zero1: bool):
+    axes = transformer.model_axes(cfg)
+    ab = transformer.abstract_model(cfg)
+
+    def go(ax, a):
+        if isinstance(a, dict):
+            return {k: go(ax[k], a[k]) for k in a}
+        lax_ = shd.zero1_axes(ax, a.shape, mesh, rules) if zero1 else ax
+        return _ns(mesh, shd.spec_for(mesh, rules, lax_, a.shape))
+
+    moment = go(axes, ab)
+    return {"m": moment, "v": moment, "step": _ns(mesh, PartitionSpec())}
+
+
+def tree_of_shardings(mesh, rules, axes_tree, spec_tree):
+    def go(ax, sp):
+        if isinstance(sp, dict):
+            return {k: go(ax[k], sp[k]) for k in sp}
+        return _ns(mesh, shd.spec_for(mesh, rules, ax, sp.shape))
+
+    return go(axes_tree, spec_tree)
+
+
+def step_shardings(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    *,
+    zero1: bool = False,
+    rule_overrides: Optional[dict] = None,
+):
+    """Returns (in_shardings, out_shardings) pytrees for the step of ``shape.kind``."""
+    rules = shd.make_rules(mesh, {**CACHE_RULES, **(rule_overrides or {})})
+    p_sh = param_shardings(cfg, mesh, rules)
+    specs = frontends.input_specs(cfg, shape)
+    scalar = _ns(mesh, PartitionSpec())
+
+    if shape.kind == "train":
+        o_sh = opt_shardings(cfg, mesh, rules, zero1=zero1)
+        b_sh = tree_of_shardings(mesh, rules, batch_axes(cfg, True), specs["batch"])
+        metrics_sh = {
+            k: scalar for k in ["loss", "ce", "aux", "tokens", "grad_norm", "lr"]
+        }
+        return (p_sh, o_sh, b_sh), (p_sh, o_sh, metrics_sh), rules
+
+    if shape.kind == "prefill":
+        b_sh = tree_of_shardings(mesh, rules, batch_axes(cfg, False), specs["batch"])
+        c_sh = tree_of_shardings(
+            mesh, rules, cache_axes(cfg, mesh), frontends.input_specs(
+                cfg, ShapeConfig(shape.name, "decode", shape.seq_len, shape.global_batch)
+            )["cache"],
+        )
+        logits_sh = _ns(mesh, shd.spec_for(mesh, rules, ("batch", None, "vocab"), (shape.global_batch, 1, cfg.vocab_size)))
+        return (p_sh, b_sh), (logits_sh, c_sh), rules
+
+    # decode
+    c_sh = tree_of_shardings(mesh, rules, cache_axes(cfg, mesh), specs["cache"])
+    tok_sh = _ns(mesh, shd.spec_for(mesh, rules, ("batch", None), (shape.global_batch, 1)))
+    logits_sh = _ns(mesh, shd.spec_for(mesh, rules, ("batch", None, "vocab"), (shape.global_batch, 1, cfg.vocab_size)))
+    return (p_sh, c_sh, tok_sh, scalar), (logits_sh, c_sh), rules
+
+
+def make_optimizer_state(cfg: ModelConfig, params):
+    return adamw_init(params)

@@ -1,0 +1,26 @@
+from .frontends import input_specs, synth_inputs
+from .transformer import (
+    abstract_cache,
+    abstract_model,
+    decode_step,
+    forward,
+    init_cache,
+    init_model,
+    loss_fn,
+    model_axes,
+    model_schema,
+)
+
+__all__ = [
+    "abstract_cache",
+    "abstract_model",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_model",
+    "input_specs",
+    "loss_fn",
+    "model_axes",
+    "model_schema",
+    "synth_inputs",
+]

@@ -1,0 +1,198 @@
+"""GQA attention: full / chunked (online-softmax, flash-style in jnp) / decode.
+
+The chunked implementation is the pure-jnp oracle for the Pallas flash kernel
+in ``repro.kernels.flash_attention`` and is the default for training/prefill
+(it never materializes the (Sq, Sk) score matrix).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import apply_rope, rope_freqs
+from .schema import P, Schema
+
+NEG_INF = -1e30
+
+
+def attn_schema(cfg: ModelConfig) -> Schema:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s: Schema = {
+        "wq": P((d, hq, dh), ("embed", "heads", "head")),
+        "wk": P((d, hkv, dh), ("embed", "kv_heads", "head")),
+        "wv": P((d, hkv, dh), ("embed", "kv_heads", "head")),
+        "wo": P((hq, dh, d), ("heads", "head", "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = P((hq, dh), ("heads", "head"), init="zeros")
+        s["bk"] = P((hkv, dh), ("kv_heads", "head"), init="zeros")
+        s["bv"] = P((hkv, dh), ("kv_heads", "head"), init="zeros")
+    if cfg.linear_bias:
+        s["bo"] = P((d,), ("embed",), init="zeros")
+    return s
+
+
+def qkv_project(cfg: ModelConfig, params, x: jax.Array, positions: Optional[jax.Array]):
+    """x: (B, S, d) -> q (B,S,Hq,Dh), k/v (B,S,Hkv,Dh); RoPE applied if configured."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    if cfg.use_rope and positions is not None:
+        inv = rope_freqs(cfg)
+        q = apply_rope(q, positions, inv)
+        k = apply_rope(k, positions, inv)
+    return q, k, v
+
+
+def out_project(cfg: ModelConfig, params, o: jax.Array) -> jax.Array:
+    y = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+    if cfg.linear_bias:
+        y = y + params["bo"]
+    return y
+
+
+def _group(q: jax.Array, n_kv: int) -> jax.Array:
+    """(B,S,Hq,Dh) -> (B,S,Hkv,G,Dh)."""
+    b, s, hq, dh = q.shape
+    return q.reshape(b, s, n_kv, hq // n_kv, dh)
+
+
+def attention_full(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: Optional[int] = None,
+    q_offset: jax.Array | int = 0,
+    kv_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Reference (score-matrix materializing) attention.
+
+    q: (B,Sq,Hq,Dh); k,v: (B,Sk,Hkv,Dh). Returns (B,Sq,Hq,Dh).
+    ``q_offset`` is the absolute position of q[0] (decode). ``kv_len`` masks
+    cache slots >= kv_len (decode with a fixed-size cache).
+    """
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    qg = _group(q, hkv)
+    scale = dh**-0.5
+    scores = jnp.einsum("bsngk,btnk->bngst", qg, k).astype(jnp.float32) * scale
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(k.shape[1])
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    if kv_len is not None:
+        valid = k_pos < kv_len
+        scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bngst,btnk->bsngk", p, v)
+    return o.reshape(b, sq, hq, dh)
+
+
+def attention_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: Optional[int] = None,
+    chunk: int = 512,
+    q_offset: jax.Array | int = 0,
+    kv_len: Optional[jax.Array] = None,
+    skip_out_of_window: bool = False,
+) -> jax.Array:
+    """Online-softmax attention scanning over KV chunks (no (Sq,Sk) matrix).
+
+    With ``skip_out_of_window`` (SWA optimization), chunks fully outside the
+    sliding window contribute via a no-op branch — the flops still appear in
+    the HLO (lax.cond both branches are compiled) but the achieved-perf model
+    counts only in-window work; the Pallas kernel realizes the skip for real.
+    """
+    b, sq, hq, dh = q.shape
+    sk = k.shape[1]
+    hkv = k.shape[2]
+    g = hq // hkv
+    if sk % chunk != 0:
+        pad = chunk - sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_len is None:
+            kv_len = sk
+        sk = k.shape[1]
+    n_chunks = sk // chunk
+    qg = _group(q, hkv).astype(jnp.float32)
+    scale = dh**-0.5
+    q_pos = q_offset + jnp.arange(sq)
+
+    kc = k.reshape(b, n_chunks, chunk, hkv, dh)
+    vc = v.reshape(b, n_chunks, chunk, hkv, dh)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kj, vj, j = inputs
+        k_pos = j * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bsngk,btnk->bngst", qg, kj.astype(jnp.float32)) * scale
+        mask = jnp.ones((sq, chunk), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        if kv_len is not None:
+            s = jnp.where((k_pos < kv_len)[None, None, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bngst,btnk->bngsk", p, vj.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, g, sq, dh), jnp.float32)
+    kc_t = jnp.moveaxis(kc, 1, 0)
+    vc_t = jnp.moveaxis(vc, 1, 0)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kc_t, vc_t, jnp.arange(n_chunks)))
+    o = acc / jnp.maximum(l[..., None], 1e-30)
+    o = jnp.moveaxis(o, 3, 1).reshape(b, sq, hq, dh)
+    return o.astype(q.dtype)
+
+
+def attention(
+    cfg: ModelConfig,
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset: jax.Array | int = 0,
+    kv_len: Optional[jax.Array] = None,
+    impl: Optional[str] = None,
+) -> jax.Array:
+    impl = impl or ("full" if q.shape[1] * k.shape[1] <= 256 * 256 else "chunked")
+    if impl == "full":
+        return attention_full(
+            q, k, v, causal=causal, window=cfg.sliding_window, q_offset=q_offset, kv_len=kv_len
+        )
+    return attention_chunked(
+        q,
+        k,
+        v,
+        causal=causal,
+        window=cfg.sliding_window,
+        chunk=min(cfg.attn_chunk, k.shape[1]),
+        q_offset=q_offset,
+        kv_len=kv_len,
+    )

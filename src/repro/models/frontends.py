@@ -1,0 +1,80 @@
+"""Modality frontend STUBS + input_specs (per assignment: [audio]/[vlm] entries
+specify the transformer backbone only; ``input_specs()`` provides precomputed
+frame/patch embeddings as ShapeDtypeStructs for the dry-run and the smoke
+tests synthesize them with a deterministic PRNG)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from .transformer import abstract_cache
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of (arch, shape).
+
+    train   -> loss_fn/train_step inputs: tokens+labels (+frontend embeds)
+    prefill -> forward(..., emit_cache=True) inputs: tokens (+frontend embeds)
+    decode  -> decode_step inputs: cache + one token per sequence + position
+    """
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    tok = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.int32)
+
+    def text_inputs(with_labels: bool) -> dict:
+        d: dict = {}
+        if cfg.frontend == "vision":
+            p = cfg.n_frontend_tokens
+            d["patch_embeds"] = jax.ShapeDtypeStruct((b, p, cfg.d_model), dt)
+            d["tokens"] = tok(b, s - p)
+            if with_labels:
+                d["labels"] = tok(b, s - p)
+        elif cfg.enc_dec:
+            d["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), dt)
+            d["tokens"] = tok(b, s)
+            if with_labels:
+                d["labels"] = tok(b, s)
+        else:
+            d["tokens"] = tok(b, s)
+            if with_labels:
+                d["labels"] = tok(b, s)
+        return d
+
+    if shape.kind == "train":
+        return {"batch": text_inputs(with_labels=True)}
+    if shape.kind == "prefill":
+        return {"batch": text_inputs(with_labels=False)}
+    # decode: one new token against a cache of seq_len
+    return {
+        "cache": abstract_cache(cfg, b, s),
+        "tokens": tok(b, 1),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def synth_inputs(cfg: ModelConfig, shape: ShapeConfig, key: jax.Array) -> dict:
+    """Concrete random inputs matching input_specs (smoke tests / examples)."""
+    specs = input_specs(cfg, shape)
+
+    def make(path, s):
+        k = jax.random.fold_in(key, hash(path) & 0x7FFFFFFF)
+        if s.dtype == jnp.int32 and s.shape == ():
+            return jnp.int32(0)
+        if s.dtype == jnp.int32:
+            return jax.random.randint(k, s.shape, 0, min(cfg.vocab_size, 1000), jnp.int32)
+        return jax.random.normal(k, s.shape, jnp.float32).astype(s.dtype) * 0.02
+
+    def go(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: go(v, prefix + "/" + k) for k, v in tree.items()}
+        return make(prefix, tree)
+
+    out = go(specs)
+    if shape.kind == "decode":
+        # a fresh cache must be empty (slot_pos = -1), not random
+        from .transformer import init_cache
+
+        out["cache"] = init_cache(cfg, shape.global_batch, shape.seq_len)
+        out["pos"] = jnp.int32(0)
+    return out

@@ -1,0 +1,106 @@
+"""Shared primitive layers: norms, MLPs, rotary / sinusoidal positions."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .schema import P, Schema
+
+
+# ----------------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------------
+def norm_schema(cfg: ModelConfig) -> Schema:
+    s: Schema = {"scale": P((cfg.d_model,), ("embed",), init="ones")}
+    if cfg.norm_type == "layernorm":
+        s["bias"] = P((cfg.d_model,), ("embed",), init="zeros")
+    return s
+
+
+def apply_norm(cfg: ModelConfig, params, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Dense MLP (SwiGLU or plain)
+# ----------------------------------------------------------------------------
+def mlp_schema(cfg: ModelConfig) -> Schema:
+    d, f = cfg.d_model, cfg.d_ff
+    s: Schema = {
+        "w1": P((d, f), ("embed", "mlp")),
+        "w2": P((f, d), ("mlp", "embed")),
+    }
+    if cfg.mlp_gated:
+        s["w3"] = P((d, f), ("embed", "mlp"))
+    if cfg.linear_bias:
+        s["b1"] = P((f,), ("mlp",), init="zeros")
+        s["b2"] = P((d,), ("embed",), init="zeros")
+        if cfg.mlp_gated:
+            s["b3"] = P((f,), ("mlp",), init="zeros")
+    return s
+
+
+def _act(name: str, x: jax.Array) -> jax.Array:
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    return jax.nn.silu(x)
+
+
+def apply_mlp(cfg: ModelConfig, params, x: jax.Array) -> jax.Array:
+    h = x @ params["w1"]
+    if cfg.linear_bias:
+        h = h + params["b1"]
+    h = _act(cfg.mlp_act, h)
+    if cfg.mlp_gated:
+        g = x @ params["w3"]
+        if cfg.linear_bias:
+            g = g + params["b3"]
+        h = h * g
+    y = h @ params["w2"]
+    if cfg.linear_bias:
+        y = y + params["b2"]
+    return y
+
+
+# ----------------------------------------------------------------------------
+# Positions
+# ----------------------------------------------------------------------------
+def rope_freqs(cfg: ModelConfig) -> jax.Array:
+    dh = cfg.head_dim
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+    return inv  # (dh/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, inv_freq: jax.Array) -> jax.Array:
+    """x: (..., S, H, Dh); positions: (S,) or (B, S)."""
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (..., S, dh/2)
+    if angles.ndim == 2:  # (S, dh/2) -> broadcast over batch/heads
+        angles = angles[None, :, None, :]
+    else:  # (B, S, dh/2)
+        angles = angles[:, :, None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int, offset: jax.Array | int = 0) -> jax.Array:
+    pos = (jnp.arange(seq_len, dtype=jnp.float32) + offset)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d_model)
+    pe = jnp.zeros((seq_len, d_model), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle[:, : (d_model + 1) // 2]))
+    return pe

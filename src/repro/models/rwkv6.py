@@ -1,0 +1,212 @@
+"""RWKV6 (Finch) block: data-dependent-decay time mixing + channel mixing.
+
+Training uses a *chunked* formulation: within a chunk of length Lc the
+recurrence is evaluated in closed form with pairwise decay factors
+``exp(cum[t-1] - cum[s])`` (always <= 1, numerically safe for any decay);
+across chunks a ``lax.scan`` carries the (B, H, N, N) state. This jnp version
+is the oracle for the Pallas kernel in ``repro.kernels.rwkv6`` (which uses the
+matmul form with bounded decay — see kernel docs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .schema import P, Schema
+
+
+def rwkv_schema(cfg: ModelConfig) -> Schema:
+    assert cfg.rwkv is not None
+    d, f = cfg.d_model, cfg.d_ff
+    lora = cfg.rwkv.decay_lora
+    tm: Schema = {
+        "mu": P((5, d), (None, "embed"), init="zeros"),  # r,k,v,g,w token-shift mixes
+        "wr": P((d, d), ("embed", "rwkv_inner")),
+        "wk": P((d, d), ("embed", "rwkv_inner")),
+        "wv": P((d, d), ("embed", "rwkv_inner")),
+        "wg": P((d, d), ("embed", "rwkv_inner")),
+        "wo": P((d, d), ("rwkv_inner", "embed")),
+        "w0": P((d,), ("embed",), init="decay_base"),
+        "wa": P((d, lora), ("embed", None), scale=0.01),
+        "wb": P((lora, d), (None, "rwkv_inner"), scale=0.01),
+        "u": P((d,), ("embed",), init="zeros"),
+        "ln": P((d,), ("embed",), init="ones"),
+    }
+    cm: Schema = {
+        "mu": P((2, d), (None, "embed"), init="zeros"),  # k, r mixes
+        "wk": P((d, f), ("embed", "mlp")),
+        "wv": P((f, d), ("mlp", "embed")),
+        "wr": P((d, d), ("embed", "rwkv_inner")),
+    }
+    return {"tm": tm, "cm": cm}
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """x: (B,S,d); prev: (B,d) last token of the previous segment."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _lerp(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def wkv_chunked(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,
+    u: jax.Array,
+    state: jax.Array,
+    chunk: int = 32,
+):
+    """Chunked WKV6 recurrence.
+
+    r,k,v,logw: (B, S, H, N) with logw <= 0; u: (H, N);
+    state: (B, H, N, N) mapping keys -> values. Returns (out (B,S,H,N), state').
+
+    Per head:  o_t = r_t @ (S_{t-1} + diag(u) k_t^T v_t)
+               S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    """
+    b, s, h, n = r.shape
+    if s % chunk != 0:
+        pad = chunk - s % chunk
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))  # pad logw=0 (w=1)
+        s_pad = s + pad
+    else:
+        s_pad = s
+    nc = s_pad // chunk
+
+    def to_chunks(a):  # (B, S, H, N) -> (nc, B, H, Lc, N)
+        return jnp.moveaxis(a.reshape(b, nc, chunk, h, n), (1, 3), (0, 2))
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, logw))
+    rc = rc.astype(jnp.float32)
+    kc = kc.astype(jnp.float32)
+    vc = vc.astype(jnp.float32)
+    wc = wc.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)  # strict lower
+
+    def body(S, inputs):
+        rj, kj, vj, wj = inputs  # (B,H,Lc,N)
+        cum = jnp.cumsum(wj, axis=2)  # inclusive, (B,H,Lc,N), decreasing
+        cum_ex = cum - wj  # exclusive
+        # pairwise decay factors exp(cum_ex[t] - cum[s]) for t > s, <= 1 always
+        dmat = cum_ex[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,H,T,S,N)
+        fac = jnp.exp(jnp.minimum(dmat, 0.0))
+        scores = jnp.einsum("bhtn,bhsn,bhtsn->bhts", rj, kj, fac) * tri
+        diag = jnp.einsum("bhtn,bhtn->bht", rj * uf[None, :, None, :], kj)
+        scores = scores + diag[..., None] * jnp.eye(chunk, dtype=jnp.float32)
+        o_intra = jnp.einsum("bhts,bhsn->bhtn", scores, vj)
+        # inter-chunk: decay from chunk start
+        r_dec = rj * jnp.exp(cum_ex)
+        o_inter = jnp.einsum("bhtn,bhnm->bhtm", r_dec, S)
+        # state update: S' = diag(exp(cum_end)) S + sum_s exp(cum_end - cum_s) k_s^T v_s
+        cum_end = cum[:, :, -1:, :]  # (B,H,1,N)
+        k_dec = kj * jnp.exp(cum_end - cum)
+        S_new = jnp.exp(cum_end[:, :, 0, :, None]) * S + jnp.einsum(
+            "bhsn,bhsm->bhnm", k_dec, vj
+        )
+        return S_new, o_intra + o_inter
+
+    state, outs = jax.lax.scan(body, state.astype(jnp.float32), (rc, kc, vc, wc))
+    out = jnp.moveaxis(outs, (0, 2), (1, 3)).reshape(b, s_pad, h, n)[:, :s]
+    return out, state
+
+
+def wkv_step(r, k, v, logw, u, state):
+    """Single-token recurrence (decode). r,k,v,logw: (B,H,N); state: (B,H,N,N)."""
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))
+    kv = kf[..., :, None] * vf[..., None, :]  # (B,H,N,N)
+    o = jnp.einsum("bhn,bhnm->bhm", rf, state + u.astype(jnp.float32)[..., None] * kv)
+    state = w[..., :, None] * state + kv
+    return o, state
+
+
+def _headnorm(x: jax.Array, scale: jax.Array, h: int, n: int, eps: float = 1e-5):
+    """Per-head layernorm on (B,S,H*N)."""
+    b, s, _ = x.shape
+    xh = x.reshape(b, s, h, n).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = jnp.square(xh - mu).mean(-1, keepdims=True)
+    y = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (y.reshape(b, s, h * n) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_time_mix(cfg: ModelConfig, params, x: jax.Array, prev: jax.Array, state: jax.Array, *, chunk: int = 32):
+    """x: (B,S,d); prev: (B,d); state: (B,H,N,N) -> (y, prev', state')."""
+    hsize = cfg.rwkv.head_size
+    h = cfg.d_model // hsize
+    xs = _token_shift(x, prev)
+    mu = params["mu"].astype(x.dtype)
+    xr, xk, xv, xg, xw = (_lerp(x, xs, mu[i]) for i in range(5))
+    r = xr @ params["wr"]
+    k = xk @ params["wk"]
+    v = xv @ params["wv"]
+    g = jax.nn.silu(xg @ params["wg"])
+    omega = params["w0"].astype(jnp.float32) + jnp.tanh(
+        xw.astype(jnp.float32) @ params["wa"].astype(jnp.float32)
+    ) @ params["wb"].astype(jnp.float32)
+    logw = -jnp.exp(omega)  # <= 0 always
+    b, s, d = x.shape
+    shp = (b, s, h, hsize)
+    out, state = wkv_chunked(
+        r.reshape(shp), k.reshape(shp), v.reshape(shp), logw.reshape(shp),
+        params["u"].astype(jnp.float32).reshape(h, hsize), state, chunk=chunk,
+    )
+    out = _headnorm(out.astype(x.dtype).reshape(b, s, d), params["ln"], h, hsize)
+    y = (out * g) @ params["wo"]
+    return y, x[:, -1, :], state
+
+
+def apply_time_mix_step(cfg: ModelConfig, params, x: jax.Array, prev: jax.Array, state: jax.Array):
+    """Decode: x (B,1,d)."""
+    hsize = cfg.rwkv.head_size
+    h = cfg.d_model // hsize
+    b = x.shape[0]
+    xt = x[:, 0, :]
+    mu = params["mu"].astype(x.dtype)
+    xr, xk, xv, xg, xw = (xt + (prev - xt) * mu[i] for i in range(5))
+    r = xr @ params["wr"]
+    k = xk @ params["wk"]
+    v = xv @ params["wv"]
+    g = jax.nn.silu(xg @ params["wg"])
+    omega = params["w0"].astype(jnp.float32) + jnp.tanh(
+        xw.astype(jnp.float32) @ params["wa"].astype(jnp.float32)
+    ) @ params["wb"].astype(jnp.float32)
+    logw = -jnp.exp(omega)
+    shp = (b, h, hsize)
+    o, state = wkv_step(
+        r.reshape(shp), k.reshape(shp), v.reshape(shp), logw.reshape(shp),
+        params["u"].astype(jnp.float32).reshape(h, hsize), state,
+    )
+    o = o.astype(x.dtype).reshape(b, 1, cfg.d_model)
+    o = _headnorm(o, params["ln"], h, hsize)
+    y = (o[:, 0] * g) @ params["wo"]
+    return y[:, None, :], xt, state
+
+
+def apply_channel_mix(cfg: ModelConfig, params, x: jax.Array, prev: jax.Array):
+    """x: (B,S,d); prev: (B,d) -> (y, prev')."""
+    xs = _token_shift(x, prev)
+    mu = params["mu"].astype(x.dtype)
+    xk = _lerp(x, xs, mu[0])
+    xr = _lerp(x, xs, mu[1])
+    k = jnp.square(jax.nn.relu(xk @ params["wk"]))
+    y = jax.nn.sigmoid(xr @ params["wr"]) * (k @ params["wv"])
+    return y, x[:, -1, :]
+
+
+def apply_channel_mix_step(cfg: ModelConfig, params, x: jax.Array, prev: jax.Array):
+    xt = x[:, 0, :]
+    mu = params["mu"].astype(x.dtype)
+    xk = xt + (prev - xt) * mu[0]
+    xr = xt + (prev - xt) * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ params["wk"]))
+    y = jax.nn.sigmoid(xr @ params["wr"]) * (k @ params["wv"])
+    return y[:, None, :], xt

@@ -1,0 +1,121 @@
+"""Schema-driven parameter trees.
+
+A *schema* is a nested dict whose leaves are ``P`` descriptors (shape, logical
+axes, init kind). Both the parameter pytree and the logical-sharding pytree are
+derived from the same schema, so they can never diverge structurally.
+
+Logical axis names used across the model zoo (mapped to mesh axes by
+``repro.parallel.sharding``):
+
+  embed       d_model                    -> replicated
+  vocab       vocabulary                 -> "model"
+  heads       merged q heads             -> "model"
+  kv_heads    merged kv heads            -> "model" when divisible else repl.
+  head        per-head dim               -> replicated
+  mlp         FFN hidden                 -> "model"
+  experts     MoE expert index           -> data axes (EP) when divisible
+  expert_ff   per-expert FFN hidden      -> "model"
+  ssm_inner   SSM expanded width         -> "model"
+  rwkv_inner  RWKV projection output     -> "model"
+  layers      stacked scan axis          -> replicated
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class P:
+    shape: tuple
+    axes: tuple  # logical axis names (or None), len == len(shape)
+    init: str = "normal"  # normal | zeros | ones | a_log | decay_base
+    scale: Optional[float] = None  # stddev override; default fan-in scaled
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Schema = dict  # nested dict[str, "Schema | P"]
+
+
+def _leaf_paths(schema: Schema, prefix=()):  # depth-first, deterministic order
+    for k in sorted(schema):
+        v = schema[k]
+        if isinstance(v, P):
+            yield prefix + (k,), v
+        else:
+            yield from _leaf_paths(v, prefix + (k,))
+
+
+def _set_path(tree: dict, path: tuple, value) -> None:
+    for k in path[:-1]:
+        tree = tree.setdefault(k, {})
+    tree[path[-1]] = value
+
+
+def _fan_in(shape: tuple) -> int:
+    if len(shape) == 1:
+        return shape[0]
+    # last dim is the output dim by convention in this codebase
+    return int(np.prod(shape[:-1])) or 1
+
+
+def _init_leaf(key: jax.Array, p: P, dtype) -> jax.Array:
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "a_log":
+        # mamba-style: A = -(1..state) broadcast over the inner dim
+        s = p.shape[-1]
+        a = jnp.tile(jnp.arange(1, s + 1, dtype=jnp.float32), p.shape[:-1] + (1,))
+        return jnp.log(a).astype(dtype)
+    if p.init == "decay_base":
+        # rwkv base decay omega_0: spread in [-6, 1] across channels
+        n = p.shape[-1]
+        r = jnp.linspace(0.0, 1.0, n, dtype=jnp.float32)
+        base = -6.0 + 7.0 * (r**1.5)
+        return jnp.broadcast_to(base, p.shape).astype(dtype)
+    scale = p.scale if p.scale is not None else 1.0 / math.sqrt(_fan_in(p.shape))
+    return (jax.random.normal(key, p.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(schema: Schema, key: jax.Array, dtype=jnp.float32) -> dict:
+    params: dict = {}
+    for path, p in _leaf_paths(schema):
+        sub = jax.random.fold_in(key, hash("/".join(path)) & 0x7FFFFFFF)
+        _set_path(params, path, _init_leaf(sub, p, dtype))
+    return params
+
+
+def abstract_params(schema: Schema, dtype=jnp.float32) -> dict:
+    """ShapeDtypeStruct tree (for dry-runs — no allocation)."""
+    tree: dict = {}
+    for path, p in _leaf_paths(schema):
+        _set_path(tree, path, jax.ShapeDtypeStruct(p.shape, dtype))
+    return tree
+
+
+def logical_axes(schema: Schema) -> dict:
+    tree: dict = {}
+    for path, p in _leaf_paths(schema):
+        _set_path(tree, path, p.axes)
+    return tree
+
+
+def stacked(schema: Schema, n: int) -> Schema:
+    """Add a leading ``layers`` axis of size n to every leaf (scan-over-layers)."""
+    out: dict = {}
+    for path, p in _leaf_paths(schema):
+        _set_path(out, path, P((n,) + p.shape, ("layers",) + p.axes, p.init, p.scale))
+    return out
+
+
+def count_params(schema: Schema) -> int:
+    return sum(int(np.prod(p.shape)) for _, p in _leaf_paths(schema))

@@ -1,0 +1,100 @@
+"""Mamba-style selective SSM head (used by Hymba's parallel attn+SSM blocks).
+
+Diagonal state-space recurrence with input-dependent dt/B/C:
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t        (per channel, state)
+    y_t = C_t . h_t + D * x_t
+Training evaluates chunks with ``jax.lax.associative_scan`` (first-order linear
+recurrence), scanning chunk-to-chunk to bound the materialized state tensor.
+No conv1d frontend (documented simplification — see DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .schema import P, Schema
+
+
+def ssm_schema(cfg: ModelConfig) -> Schema:
+    assert cfg.ssm is not None
+    d, di, st, r = cfg.d_model, cfg.ssm.d_inner, cfg.ssm.state_size, cfg.ssm.dt_rank
+    return {
+        "in_proj": P((d, 2 * di), ("embed", "ssm_inner")),
+        "x_proj": P((di, r + 2 * st), ("ssm_inner", None)),
+        "dt_proj": P((r, di), (None, "ssm_inner")),
+        "dt_bias": P((di,), ("ssm_inner",), init="zeros"),
+        "a_log": P((di, st), ("ssm_inner", None), init="a_log"),
+        "d_skip": P((di,), ("ssm_inner",), init="ones"),
+        "out_proj": P((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _selective(params, x: jax.Array, cfg: ModelConfig):
+    """x: (B,S,di) -> (da (B,S,di,st), db_x (B,S,di,st), C (B,S,st), dt (B,S,di))."""
+    r, st = cfg.ssm.dt_rank, cfg.ssm.state_size
+    proj = x @ params["x_proj"]  # (B,S,r+2st)
+    dt_r, bmat, cmat = jnp.split(proj, [r, r + st], axis=-1)
+    dt = jax.nn.softplus(dt_r @ params["dt_proj"] + params["dt_bias"])  # (B,S,di)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # (di, st), negative
+    da = jnp.exp(dt.astype(jnp.float32)[..., None] * a)  # (B,S,di,st) in (0,1)
+    db_x = (dt * x).astype(jnp.float32)[..., None] * bmat.astype(jnp.float32)[..., None, :]
+    return da, db_x, cmat, dt
+
+
+def ssm_scan(params, x: jax.Array, state: jax.Array, cfg: ModelConfig, *, chunk: int = 64):
+    """x: (B,S,di); state: (B,di,st) -> (y (B,S,di), state')."""
+    b, s, di = x.shape
+    st = cfg.ssm.state_size
+    da, db, cmat, _ = _selective(params, x, cfg)
+    pad = (-s) % chunk
+    if pad:
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        db = jnp.pad(db, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (s + pad) // chunk
+
+    def chunks(a):  # (B, S, di, st) -> (nc, B, Lc, di, st)
+        return jnp.moveaxis(a.reshape(b, nc, chunk, di, st), 1, 0)
+
+    da_c, db_c = chunks(da), chunks(db)
+
+    def body(h0, inp):
+        a_j, b_j = inp  # (B,Lc,di,st)
+
+        def combine(l, r_):
+            al, bl = l
+            ar, br = r_
+            return al * ar, bl * ar + br
+
+        aa, bb = jax.lax.associative_scan(combine, (a_j, b_j), axis=1)
+        h = aa * h0[:, None] + bb  # (B,Lc,di,st)
+        return h[:, -1], h
+
+    state, hs = jax.lax.scan(body, state.astype(jnp.float32), (da_c, db_c))
+    h_all = jnp.moveaxis(hs, 0, 1).reshape(b, s + pad, di, st)[:, :s]
+    y = jnp.einsum("bsdn,bsn->bsd", h_all, cmat.astype(jnp.float32))
+    y = y + x.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)
+    return y.astype(x.dtype), state
+
+
+def apply_ssm(cfg: ModelConfig, params, xres: jax.Array, state: jax.Array):
+    """Full SSM branch: in_proj -> selective scan -> gate -> out_proj."""
+    di = cfg.ssm.d_inner
+    xz = xres @ params["in_proj"]
+    x, z = jnp.split(xz, [di], axis=-1)
+    y, state = ssm_scan(params, x, state, cfg)
+    y = y * jax.nn.silu(z)
+    return y @ params["out_proj"], state
+
+
+def apply_ssm_step(cfg: ModelConfig, params, xres: jax.Array, state: jax.Array):
+    """Decode: xres (B,1,d); state (B,di,st)."""
+    di = cfg.ssm.d_inner
+    xz = xres @ params["in_proj"]
+    x, z = jnp.split(xz, [di], axis=-1)
+    da, db, cmat, _ = _selective(params, x, cfg)
+    state = da[:, 0] * state.astype(jnp.float32) + db[:, 0]  # (B,di,st)
+    y = jnp.einsum("bdn,bn->bd", state, cmat[:, 0].astype(jnp.float32))
+    y = y + x[:, 0].astype(jnp.float32) * params["d_skip"].astype(jnp.float32)
+    y = (y.astype(xres.dtype) * jax.nn.silu(z[:, 0]))[:, None, :]
+    return y @ params["out_proj"], state

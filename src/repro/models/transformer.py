@@ -1,0 +1,449 @@
+"""Model assembly: schema, forward (train/prefill), decode step, loss.
+
+One code path covers all 10 assigned architectures, driven by ``ModelConfig``:
+dense GQA LMs, MoE (dispatch/dense), RWKV6, Hymba hybrid, Whisper enc-dec and
+the VLM/audio stub-frontend variants. Layers are stacked and scanned
+(``lax.scan``) so compile time is O(1) in depth; decoding threads a per-layer
+cache pytree through the same scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.sharding import hint
+from . import rwkv6, ssm
+from .attention import attention_full, attn_schema, out_project, qkv_project
+from .layers import apply_mlp, apply_norm, mlp_schema, norm_schema, sinusoidal_positions
+from .moe import apply_moe, moe_schema
+from .schema import P, Schema, abstract_params, init_params, logical_axes, stacked
+
+AUX_COEF = 0.01  # MoE load-balance loss coefficient
+
+
+def cast_tree(tree, dtype):
+    """Cast floating-point leaves to the compute dtype (mixed precision:
+    fp32 master params, bf16 compute)."""
+    dt = jnp.dtype(dtype)
+    return jax.tree.map(
+        lambda a: a.astype(dt) if jnp.issubdtype(a.dtype, jnp.floating) else a, tree
+    )
+
+
+# ---------------------------------------------------------------------------
+# Schema
+# ---------------------------------------------------------------------------
+def block_schema(cfg: ModelConfig, *, encoder: bool = False, decoder_cross: bool = False) -> Schema:
+    if cfg.attention_free:
+        s = rwkv6.rwkv_schema(cfg)
+        s["norm1"] = norm_schema(cfg)
+        s["norm2"] = norm_schema(cfg)
+        return s
+    s = {"norm1": norm_schema(cfg), "attn": attn_schema(cfg), "norm2": norm_schema(cfg)}
+    if cfg.moe is not None and not encoder:
+        s["moe"] = moe_schema(cfg)
+    else:
+        s["mlp"] = mlp_schema(cfg)
+    if cfg.hybrid_parallel_ssm and not encoder:
+        s["ssm"] = ssm.ssm_schema(cfg)
+        s["branch_scale"] = P((2,), (None,), init="ones")
+    if decoder_cross:
+        s["norm_c"] = norm_schema(cfg)
+        s["cross"] = attn_schema(cfg)
+    return s
+
+
+def model_schema(cfg: ModelConfig) -> Schema:
+    d, v = cfg.d_model, cfg.vocab_size
+    s: Schema = {
+        "embed": P((v, d), ("vocab", "embed"), scale=0.02),
+        "final_norm": norm_schema(cfg),
+        "layers": stacked(block_schema(cfg, decoder_cross=cfg.enc_dec), cfg.n_layers),
+    }
+    if not cfg.tie_embeddings:
+        s["unembed"] = P((d, v), ("embed", "vocab"))
+    if cfg.enc_dec:
+        s["encoder"] = {
+            "layers": stacked(block_schema(cfg, encoder=True), cfg.n_encoder_layers),
+            "final_norm": norm_schema(cfg),
+        }
+    return s
+
+
+def init_model(cfg: ModelConfig, key: jax.Array):
+    return init_params(model_schema(cfg), key, dtype=jnp.dtype(cfg.param_dtype))
+
+
+def abstract_model(cfg: ModelConfig):
+    return abstract_params(model_schema(cfg), dtype=jnp.dtype(cfg.param_dtype))
+
+
+def model_axes(cfg: ModelConfig):
+    return logical_axes(model_schema(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Shapes/dtypes of the decode cache (leading ``layers`` axis on leaves)."""
+    L = cfg.n_layers
+    spec: dict = {}
+    if cfg.attention_free:
+        h = cfg.d_model // cfg.rwkv.head_size
+        n = cfg.rwkv.head_size
+        spec = {
+            "wkv": ((L, batch, h, n, n), jnp.float32),
+            "tm_prev": ((L, batch, cfg.d_model), jnp.dtype(cfg.dtype)),
+            "cm_prev": ((L, batch, cfg.d_model), jnp.dtype(cfg.dtype)),
+        }
+        return spec
+    sc = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    spec = {
+        "k": ((L, batch, sc, cfg.n_kv_heads, cfg.head_dim), jnp.dtype(cfg.dtype)),
+        "v": ((L, batch, sc, cfg.n_kv_heads, cfg.head_dim), jnp.dtype(cfg.dtype)),
+        "slot_pos": ((L, batch, sc), jnp.int32),  # per-sequence ring positions
+    }
+    if cfg.hybrid_parallel_ssm:
+        spec["ssm"] = ((L, batch, cfg.ssm.d_inner, cfg.ssm.state_size), jnp.float32)
+    if cfg.enc_dec:
+        spec["ck"] = ((L, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.head_dim), jnp.dtype(cfg.dtype))
+        spec["cv"] = ((L, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.head_dim), jnp.dtype(cfg.dtype))
+    return spec
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    out = {}
+    for k, (shape, dt) in cache_spec(cfg, batch, max_len).items():
+        fill = -1 if k == "slot_pos" else 0
+        out[k] = jnp.full(shape, fill, dt)
+    return out
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    return {k: jax.ShapeDtypeStruct(shape, dt) for k, (shape, dt) in cache_spec(cfg, batch, max_len).items()}
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+def _attn_seq(cfg, p, h, positions, *, causal=True):
+    """Sequence-mode attention; returns (out, (k, v)) for cache emission."""
+    q, k, v = qkv_project(cfg, p, h, positions if cfg.use_rope else None)
+    from .attention import attention  # local import to avoid cycle at module load
+
+    o = attention(cfg, q, k, v, causal=causal, impl="chunked" if h.shape[1] > 256 else "full")
+    return out_project(cfg, p, o), (k, v)
+
+
+def _attn_step(cfg, p, h, pos, kc, vc, slot_pos, *, window):
+    """Decode-mode attention against a (ring-buffer) cache.
+
+    ``pos`` is a (B,) int32 vector of per-sequence absolute positions —
+    continuous-batching serving decodes lanes at different depths."""
+    q, k, v = qkv_project(cfg, p, h, pos[:, None] if cfg.use_rope else None)
+    sc = kc.shape[1]
+    slot = (pos % sc).astype(jnp.int32)
+    upd = jax.vmap(lambda c, kk, s: jax.lax.dynamic_update_slice(c, kk, (s, 0, 0)))
+    kc = upd(kc, k, slot)
+    vc = upd(vc, v, slot)
+    slot_pos = jax.vmap(
+        lambda sp, pp, s: jax.lax.dynamic_update_slice(sp, pp[None], (s,))
+    )(slot_pos, pos.astype(jnp.int32), slot)
+    o = _cache_attention(cfg, q, kc, vc, slot_pos, pos, window)
+    return out_project(cfg, p, o), kc, vc, slot_pos
+
+
+def _cache_attention(cfg, q, kc, vc, slot_pos, pos, window):
+    """q: (B,1,Hq,Dh); kc/vc: (B,Sc,Hkv,Dh); slot_pos: (B,Sc) absolute
+    positions per lane; pos: (B,)."""
+    b, _, hq, dh = q.shape
+    hkv = kc.shape[2]
+    qg = q.reshape(b, 1, hkv, hq // hkv, dh)
+    s = jnp.einsum("bsngk,btnk->bngst", qg.astype(jnp.float32), kc.astype(jnp.float32))
+    s = s * (dh**-0.5)
+    valid = (slot_pos >= 0) & (slot_pos <= pos[:, None])
+    if window is not None:
+        valid &= slot_pos > (pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngst,btnk->bsngk", pr, vc.astype(jnp.float32))
+    return o.reshape(b, 1, hq, dh).astype(q.dtype)
+
+
+def _ffn(cfg, p, h):
+    """Second half of a block: MLP or MoE. Returns (out, aux)."""
+    if cfg.moe is not None:
+        y, aux, _dropped = apply_moe(cfg, p["moe"], h)
+        return y, aux
+    return apply_mlp(cfg, p["mlp"], h), jnp.float32(0.0)
+
+
+def block_seq(cfg: ModelConfig, p, x, positions, *, enc_out=None, causal=True,
+              emit_cache=False, cross_kv=None):
+    """One decoder block over a full sequence. Returns (x, cache_emit, aux)."""
+    emit = None
+    if cfg.attention_free:
+        b = x.shape[0]
+        h0 = cfg.d_model // cfg.rwkv.head_size
+        n = cfg.rwkv.head_size
+        st0 = jnp.zeros((b, h0, n, n), jnp.float32)
+        pv0 = jnp.zeros((b, cfg.d_model), x.dtype)
+        y, tm_prev, wkv = rwkv6.apply_time_mix(cfg, p["tm"], apply_norm(cfg, p["norm1"], x), pv0, st0)
+        x = x + y
+        y, cm_prev = rwkv6.apply_channel_mix(cfg, p["cm"], apply_norm(cfg, p["norm2"], x), pv0)
+        x = x + y
+        if emit_cache:
+            emit = {"wkv": wkv, "tm_prev": tm_prev, "cm_prev": cm_prev}
+        return x, emit, jnp.float32(0.0)
+
+    h = apply_norm(cfg, p["norm1"], x)
+    a, (k, v) = _attn_seq(cfg, p["attn"], h, positions, causal=causal)
+    if cfg.hybrid_parallel_ssm:
+        b_ssm = x.shape[0]
+        s0 = jnp.zeros((b_ssm, cfg.ssm.d_inner, cfg.ssm.state_size), jnp.float32)
+        sy, s_state = ssm.apply_ssm(cfg, p["ssm"], h, s0)
+        scale = p["branch_scale"].astype(x.dtype)
+        x = x + 0.5 * (scale[0] * a + scale[1] * sy)
+    else:
+        x = x + a
+        s_state = None
+    if enc_out is not None:  # whisper decoder cross-attention
+        hc = apply_norm(cfg, p["norm_c"], x)
+        qc, _, _ = qkv_project(cfg, p["cross"], hc, None)
+        if cross_kv is not None:  # precomputed outside the layer scan
+            ke, ve = cross_kv
+        else:
+            ke = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wk"])
+            ve = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wv"])
+            if cfg.qkv_bias:
+                ke, ve = ke + p["cross"]["bk"], ve + p["cross"]["bv"]
+        o = attention_full(qc, ke, ve, causal=False)
+        x = x + out_project(cfg, p["cross"], o)
+    y, aux = _ffn(cfg, p, apply_norm(cfg, p["norm2"], x))
+    x = x + y
+    if emit_cache:
+        emit = {"k": k, "v": v}
+        if cfg.hybrid_parallel_ssm:
+            emit["ssm"] = s_state
+        if cfg.enc_dec:
+            emit["ck"] = ke
+            emit["cv"] = ve
+    return x, emit, aux
+
+
+def block_step(cfg: ModelConfig, p, x, pos, cache_l):
+    """One decoder block for a single decode step. Returns (x, cache_l')."""
+    new_cache = dict(cache_l)
+    if cfg.attention_free:
+        y, tm_prev, wkv = rwkv6.apply_time_mix_step(
+            cfg, p["tm"], apply_norm(cfg, p["norm1"], x), cache_l["tm_prev"], cache_l["wkv"]
+        )
+        x = x + y
+        y, cm_prev = rwkv6.apply_channel_mix_step(
+            cfg, p["cm"], apply_norm(cfg, p["norm2"], x), cache_l["cm_prev"]
+        )
+        x = x + y
+        new_cache.update(wkv=wkv, tm_prev=tm_prev, cm_prev=cm_prev)
+        return x, new_cache
+
+    h = apply_norm(cfg, p["norm1"], x)
+    a, kc, vc, slot_pos = _attn_step(
+        cfg, p["attn"], h, pos, cache_l["k"], cache_l["v"], cache_l["slot_pos"],
+        window=cfg.sliding_window,
+    )
+    new_cache.update(k=kc, v=vc, slot_pos=slot_pos)
+    if cfg.hybrid_parallel_ssm:
+        sy, s_state = ssm.apply_ssm_step(cfg, p["ssm"], h, cache_l["ssm"])
+        scale = p["branch_scale"].astype(x.dtype)
+        x = x + 0.5 * (scale[0] * a + scale[1] * sy)
+        new_cache["ssm"] = s_state
+    else:
+        x = x + a
+    if cfg.enc_dec:
+        hc = apply_norm(cfg, p["norm_c"], x)
+        qc, _, _ = qkv_project(cfg, p["cross"], hc, None)
+        o = attention_full(qc, cache_l["ck"], cache_l["cv"], causal=False)
+        x = x + out_project(cfg, p["cross"], o)
+    y, _aux = _ffn(cfg, p, apply_norm(cfg, p["norm2"], x))
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper)
+# ---------------------------------------------------------------------------
+def run_encoder(cfg: ModelConfig, params, frames: jax.Array) -> jax.Array:
+    h = frames + sinusoidal_positions(frames.shape[1], cfg.d_model).astype(frames.dtype)
+    h = hint(h, ("batch", "seq", "embed"))
+    positions = jnp.arange(frames.shape[1])
+
+    def body(carry, layer_p):
+        y, _, _ = block_seq(cfg, cast_tree(layer_p, cfg.dtype), carry, positions, causal=False)
+        return y, None
+
+    h, _ = jax.lax.scan(body, h, params["encoder"]["layers"], unroll=cfg.n_encoder_layers if cfg.scan_unroll else 1)
+    return apply_norm(cfg, params["encoder"]["final_norm"], h)
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss / decode
+# ---------------------------------------------------------------------------
+def _embed_tokens(cfg, params, tokens):
+    e = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    return e
+
+
+def _unembed(cfg, params, h):
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype))
+
+
+def _remat(cfg, fn):
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    if cfg.remat_policy == "full":
+        return jax.checkpoint(fn)
+    return fn
+
+
+def forward(cfg: ModelConfig, params, batch: dict, *, emit_cache: bool = False,
+            remat: bool = False, logits_mode: str = "all"):
+    """Returns (logits, cache_or_None, aux). batch keys per family:
+
+    LM:    tokens (B,S)
+    VLM:   tokens (B,S_text) + patch_embeds (B,P,d)
+    audio: tokens (B,S) + frames (B,S_enc,d)
+
+    ``logits_mode="last"`` unembeds only the final position — prefill only
+    needs the next-token distribution, and at 32k x vocab the full-sequence
+    unembedding is ~1/3 of prefill FLOPs (EXPERIMENTS.md §Perf, mixtral).
+    """
+    enc_out = None
+    cross_kv_all = None
+    if cfg.enc_dec:
+        enc_out = run_encoder(cfg, params, batch["frames"].astype(jnp.dtype(cfg.dtype)))
+        # Precompute every decoder layer's cross K/V in one stacked einsum
+        # BEFORE the layer scan: computing them from (replicated) enc_out
+        # inside each layer made GSPMD re-gather the encoder output per layer
+        # (the collective-bound whisper-prefill finding in EXPERIMENTS.md).
+        cp = cast_tree(params["layers"]["cross"], cfg.dtype)
+        ke = jnp.einsum("bsd,ldhk->lbshk", enc_out, cp["wk"])
+        ve = jnp.einsum("bsd,ldhk->lbshk", enc_out, cp["wv"])
+        if cfg.qkv_bias:
+            ke = ke + cp["bk"][:, None, None]
+            ve = ve + cp["bv"][:, None, None]
+        cross_kv_all = (ke, ve)
+        h = _embed_tokens(cfg, params, batch["tokens"])
+        h = h + sinusoidal_positions(h.shape[1], cfg.d_model).astype(h.dtype)
+    elif cfg.frontend == "vision":
+        th = _embed_tokens(cfg, params, batch["tokens"])
+        h = jnp.concatenate([batch["patch_embeds"].astype(th.dtype), th], axis=1)
+    else:
+        h = _embed_tokens(cfg, params, batch["tokens"])
+    if not cfg.use_rope and not cfg.enc_dec:
+        h = h + sinusoidal_positions(h.shape[1], cfg.d_model).astype(h.dtype)
+    h = hint(h, ("batch", "seq", "embed"))
+    positions = jnp.arange(h.shape[1])
+
+    def body(carry, xs):
+        layer_p, ckv = xs
+        x, aux = carry
+        x, emit, aux_l = block_seq(
+            cfg, cast_tree(layer_p, cfg.dtype), x, positions,
+            enc_out=enc_out, causal=True, emit_cache=emit_cache, cross_kv=ckv,
+        )
+        x = hint(x, ("batch", "seq", "embed"))
+        return (x, aux + aux_l), emit
+
+    body_fn = _remat(cfg, body) if remat else body
+    (h, aux), emits = jax.lax.scan(
+        body_fn, (h, jnp.float32(0.0)), (params["layers"], cross_kv_all),
+        unroll=cfg.n_layers if cfg.scan_unroll else 1,
+    )
+    h = apply_norm(cfg, params["final_norm"], h)
+    if logits_mode == "last":
+        h = h[:, -1:, :]
+    logits = _unembed(cfg, params, h)
+    logits = hint(logits, ("batch", "seq", "vocab"))
+
+    cache = None
+    if emit_cache:
+        cache = _assemble_cache(cfg, emits, seq_len=h.shape[1])
+    return logits, cache, aux
+
+
+def _assemble_cache(cfg: ModelConfig, emits: dict, *, seq_len: int) -> dict:
+    """Turn scan-emitted per-layer tensors into the decode cache layout."""
+    if cfg.attention_free:
+        return {"wkv": emits["wkv"], "tm_prev": emits["tm_prev"], "cm_prev": emits["cm_prev"]}
+    cache: dict = {}
+    sc = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    k, v = emits["k"], emits["v"]  # (L,B,S,Hkv,Dh)
+    b = k.shape[1]
+    if sc < seq_len:  # keep the last `window` keys, slot = pos % sc
+        start = seq_len - sc
+        k, v = k[:, :, start:], v[:, :, start:]
+        pos = jnp.arange(start, seq_len)
+        slot = pos % sc
+        order = jnp.argsort(slot)
+        k = k[:, :, order]
+        v = v[:, :, order]
+        slot_pos = jnp.broadcast_to(pos[order], (cfg.n_layers, b, sc)).astype(jnp.int32)
+    else:
+        slot_pos = jnp.broadcast_to(jnp.arange(sc), (cfg.n_layers, b, sc)).astype(jnp.int32)
+    cache.update(k=k, v=v, slot_pos=slot_pos)
+    if cfg.hybrid_parallel_ssm:
+        cache["ssm"] = emits["ssm"]
+    if cfg.enc_dec:
+        cache["ck"], cache["cv"] = emits["ck"], emits["cv"]
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params, cache: dict, tokens: jax.Array, pos: jax.Array):
+    """One token for every sequence. tokens: (B,1); pos: scalar int32 or
+    (B,) int32 per-sequence absolute positions (continuous batching).
+    Returns (logits (B,1,V), cache')."""
+    if jnp.ndim(pos) == 0:
+        pos = jnp.broadcast_to(pos, (tokens.shape[0],))
+    pos = pos.astype(jnp.int32)
+    h = _embed_tokens(cfg, params, tokens)
+    if not cfg.use_rope:
+        pe = jax.vmap(lambda o: sinusoidal_positions(1, cfg.d_model, offset=o))(pos)
+        h = h + pe.astype(h.dtype)
+    h = hint(h, ("batch", None, "embed"))
+
+    def body(x, layer):
+        layer_p, cache_l = layer
+        x, new_cache = block_step(cfg, cast_tree(layer_p, cfg.dtype), x, pos, cache_l)
+        x = hint(x, ("batch", None, "embed"))
+        return x, new_cache
+
+    h, new_cache = jax.lax.scan(body, h, (params["layers"], cache), unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    h = apply_norm(cfg, params["final_norm"], h)
+    logits = _unembed(cfg, params, h)
+    return logits, new_cache
+
+
+def loss_fn(cfg: ModelConfig, params, batch: dict, *, remat: bool = True):
+    """Next-token cross entropy (fp32), MoE aux added. Returns (loss, metrics)."""
+    logits, _, aux = forward(cfg, params, batch, remat=remat)
+    labels = batch["labels"]
+    if cfg.frontend == "vision":
+        # text starts after P patches; position P-1+j predicts text token j
+        p_len = batch["patch_embeds"].shape[1]
+        s_text = labels.shape[1]
+        logits = jax.lax.dynamic_slice_in_dim(logits, p_len - 1, s_text, axis=1)
+    lf = logits.astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_c = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels_c[..., None], axis=-1)[..., 0]
+    ce = (lse - gold) * mask
+    ntok = jnp.maximum(mask.sum(), 1.0)
+    loss = ce.sum() / ntok
+    total = loss + AUX_COEF * aux
+    return total, {"ce": loss, "aux": aux, "tokens": ntok}

@@ -1,0 +1,158 @@
+"""Logical-axis sharding rules -> concrete NamedShardings.
+
+Params and activations are annotated with *logical* axis names (see
+``repro.models.schema``); this module maps them onto mesh axes with
+per-tensor divisibility fallback (a dim that doesn't divide its mesh axes is
+replicated rather than failing — e.g. 40 RWKV heads on a 16-way "model" axis).
+
+An ambient context (``use_mesh``) lets model code drop sharding hints
+(``hint(x, ("batch", None, "embed"))``) that become
+``lax.with_sharding_constraint`` under a mesh and no-ops otherwise.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from ..configs.base import ModelConfig
+
+# Logical axis -> mesh axis (or tuple of mesh axes, or None = replicate).
+DEFAULT_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),
+    "experts": ("pod", "data"),  # EP: expert axis over the data axes when divisible
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head": None,
+    "mlp": "model",
+    "expert_ff": "model",
+    "ssm_inner": "model",
+    "rwkv_inner": "model",
+    "rwkv_heads": "model",
+    "embed": None,
+    "seq": None,  # becomes data axes under sequence parallelism (hillclimb)
+    "layers": None,
+    None: None,
+}
+
+
+def make_rules(mesh: Mesh, overrides: Optional[dict] = None) -> dict:
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    # Drop mesh axes that don't exist (e.g. "pod" on the single-pod mesh).
+    def _filter(v):
+        if v is None:
+            return None
+        axes = v if isinstance(v, tuple) else (v,)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    return {k: _filter(v) for k, v in rules.items()}
+
+
+def _axis_size(mesh: Mesh, v) -> int:
+    if v is None:
+        return 1
+    axes = v if isinstance(v, tuple) else (v,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def spec_for(mesh: Mesh, rules: dict, logical: tuple, shape: tuple) -> PartitionSpec:
+    """PartitionSpec for one tensor, replicating non-divisible dims."""
+    out, used = [], set()
+    for dim, name in zip(shape, logical):
+        v = rules.get(name)
+        axes = () if v is None else (v if isinstance(v, tuple) else (v,))
+        axes = tuple(a for a in axes if a not in used)
+        size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+        if axes and dim % size == 0:
+            used.update(axes)
+            out.append(axes if len(axes) > 1 else axes[0])
+        else:
+            out.append(None)
+    while out and out[-1] is None:
+        out.pop()
+    return PartitionSpec(*out)
+
+
+def tree_shardings(mesh: Mesh, rules: dict, axes_tree, abstract_tree):
+    """NamedSharding tree matching ``abstract_tree`` (dict-of-dicts of arrays)."""
+
+    def go(ax, ab):
+        if isinstance(ab, dict):
+            return {k: go(ax[k], ab[k]) for k in ab}
+        return NamedSharding(mesh, spec_for(mesh, rules, ax, ab.shape))
+
+    return go(axes_tree, abstract_tree)
+
+
+def zero1_axes(logical: tuple, shape: tuple, mesh: Mesh, rules: dict) -> tuple:
+    """Optimizer-state logical axes: additionally shard the first dim that is
+    currently replicated and divisible by the data axes (ZeRO-1)."""
+    dp = rules.get("batch")
+    if dp is None:
+        return logical
+    dp_size = _axis_size(mesh, dp)
+    current = [rules.get(n) for n in logical]
+    if any(v is not None and set((v if isinstance(v, tuple) else (v,))) & {"pod", "data"} for v in current):
+        return logical  # already uses a data axis (e.g. experts)
+    for i, (dim, name) in enumerate(zip(shape, logical)):
+        if rules.get(name) is None and dim % dp_size == 0 and dim > 1:
+            return logical[:i] + ("batch",) + logical[i + 1 :]
+    return logical
+
+
+# ---------------------------------------------------------------------------
+# Ambient mesh context for activation sharding hints
+# ---------------------------------------------------------------------------
+class _Ctx(threading.local):
+    mesh: Optional[Mesh] = None
+    rules: Optional[dict] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    _CTX.rules = rules if rules is not None else (make_rules(mesh) if mesh else None)
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def current_rules() -> Optional[dict]:
+    return _CTX.rules
+
+
+_MISSING = object()
+
+
+def hint(x: jax.Array, logical: tuple) -> jax.Array:
+    """Sharding constraint under an ambient mesh; identity otherwise.
+
+    If any named logical axis is absent from the active rules the hint is a
+    no-op (lets optional hints — e.g. MoE buffer EP constraints — be enabled
+    per-run by adding the rule, without constraining baseline runs)."""
+    if _CTX.mesh is None:
+        return x
+    if any(n is not None and _CTX.rules.get(n, _MISSING) is _MISSING for n in logical):
+        return x
+    spec = spec_for(_CTX.mesh, _CTX.rules, logical, x.shape)
+    return lax.with_sharding_constraint(x, NamedSharding(_CTX.mesh, spec))

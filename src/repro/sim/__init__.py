@@ -1,0 +1,5 @@
+from .events import Scheduler, TimerHandle
+from .network import NetConfig, Network
+from .env import SimEnv, StableStore
+
+__all__ = ["NetConfig", "Network", "Scheduler", "SimEnv", "StableStore", "TimerHandle"]

@@ -1,0 +1,71 @@
+"""Best-effort message transport with loss, duplication, reordering,
+variable delay and partitions — the failure model PaxosLease claims to
+tolerate (§1: node restarts, splits, loss/reordering, in-transit delays)."""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from .events import Scheduler
+
+
+@dataclass
+class NetConfig:
+    delay_min: float = 0.01
+    delay_max: float = 0.05
+    loss: float = 0.0  # P(drop)
+    duplicate: float = 0.0  # P(deliver twice)
+    jitter_tail: float = 0.0  # P(huge straggler delay)
+    tail_delay: float = 5.0  # straggler delay upper bound
+
+
+class Network:
+    def __init__(self, scheduler: Scheduler, cfg: NetConfig, seed: int = 0) -> None:
+        self.sched = scheduler
+        self.cfg = cfg
+        self.rng = random.Random(seed)
+        self._handlers: dict[str, Callable] = {}
+        self._partitions: set[frozenset] = set()
+        self._down: set[str] = set()
+        self.sent = 0
+        self.delivered = 0
+
+    def register(self, addr: str, handler: Callable) -> None:
+        self._handlers[addr] = handler
+
+    def set_down(self, addr: str, down: bool = True) -> None:
+        (self._down.add if down else self._down.discard)(addr)
+
+    def partition(self, group_a: set[str], group_b: set[str]) -> None:
+        for a in group_a:
+            for b in group_b:
+                self._partitions.add(frozenset((a, b)))
+
+    def heal(self) -> None:
+        self._partitions.clear()
+
+    def _blocked(self, src: str, dst: str) -> bool:
+        return frozenset((src, dst)) in self._partitions
+
+    def send(self, src: str, dst: str, msg) -> None:
+        self.sent += 1
+        if src in self._down or self._blocked(src, dst):
+            return  # crashed nodes don't speak
+        if self.rng.random() < self.cfg.loss:
+            return
+        n_copies = 2 if self.rng.random() < self.cfg.duplicate else 1
+        for _ in range(n_copies):
+            if self.cfg.jitter_tail and self.rng.random() < self.cfg.jitter_tail:
+                delay = self.rng.uniform(self.cfg.delay_max, self.cfg.tail_delay)
+            else:
+                delay = self.rng.uniform(self.cfg.delay_min, self.cfg.delay_max)
+            self.sched.after(delay, lambda d=dst, s=src, m=msg: self._deliver(s, d, m))
+
+    def _deliver(self, src: str, dst: str, msg) -> None:
+        if dst in self._down or self._blocked(src, dst):
+            return  # crashed mid-flight or partitioned while in transit
+        h = self._handlers.get(dst)
+        if h is not None:
+            self.delivered += 1
+            h(msg, src)

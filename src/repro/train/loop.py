@@ -1,0 +1,151 @@
+"""Training loop: jit'd train step (+ optional sharding), microbatch grad
+accumulation, lease-guarded (async) checkpointing, crash/restore resume.
+
+Runs the same step function the 512-chip dry-run lowers; on CPU it runs on a
+1-device mesh. Fault-tolerance hooks: ``on_step`` (straggler/fault
+injection in tests), lease guard for the checkpoint writer, and resume from
+the latest checkpoint at construction."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import AsyncCheckpointer, CheckpointManager, latest_step, restore_checkpoint
+from ..configs.base import ModelConfig
+from ..data import ShardedLoader, SyntheticTokens
+from ..models import init_model, transformer
+from ..optim import adamw_init, adamw_update, cosine_schedule
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    batch_size: int = 8
+    seq_len: int = 128
+    peak_lr: float = 3e-4
+    warmup: int = 20
+    microbatches: int = 1  # gradient accumulation
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    ckpt_async: bool = False
+    keep: int = 3
+    n_shards: int = 8
+    seed: int = 0
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        tc: TrainerConfig,
+        *,
+        lease_guard: Optional[Callable[[], bool]] = None,
+        owned_shards: Optional[Callable] = None,
+        verbose: bool = True,
+    ) -> None:
+        self.cfg = cfg
+        self.tc = tc
+        self.verbose = verbose
+        self.gen = SyntheticTokens(cfg.vocab_size, tc.seq_len, seed=tc.seed)
+        self.loader = ShardedLoader(self.gen, tc.n_shards, tc.batch_size, owned_shards=owned_shards)
+        self.step = 0
+        self.history: list[dict] = []
+
+        key = jax.random.PRNGKey(tc.seed)
+        self.params = init_model(cfg, key)
+        self.opt_state = adamw_init(self.params)
+        # resume if a checkpoint exists
+        if tc.ckpt_dir and latest_step(tc.ckpt_dir) is not None:
+            state, step = restore_checkpoint(tc.ckpt_dir)
+            self.params = jax.tree.map(
+                lambda old, new: jnp.asarray(new, old.dtype), self.params, state["params"]
+            )
+            self.opt_state = jax.tree.map(
+                lambda old, new: jnp.asarray(new, old.dtype), self.opt_state, state["opt"]
+            )
+            self.step = step
+            if verbose:
+                print(f"[trainer] resumed from step {step}")
+
+        self.ckpt = None
+        self.async_ckpt = None
+        if tc.ckpt_dir:
+            if tc.ckpt_async:
+                self.async_ckpt = AsyncCheckpointer(tc.ckpt_dir, keep=tc.keep, lease_guard=lease_guard)
+            else:
+                self.ckpt = CheckpointManager(
+                    tc.ckpt_dir, every_steps=tc.ckpt_every, keep=tc.keep, lease_guard=lease_guard
+                )
+
+        self._train_step = jax.jit(self._make_step(), donate_argnums=(0, 1))
+
+    def _make_step(self):
+        cfg, tc = self.cfg, self.tc
+
+        def one_micro(p, batch):
+            return jax.value_and_grad(lambda q: transformer.loss_fn(cfg, q, batch), has_aux=True)(p)
+
+        def train_step(params, opt_state, batch):
+            if tc.microbatches > 1:
+                mb = jax.tree.map(
+                    lambda a: a.reshape((tc.microbatches, a.shape[0] // tc.microbatches) + a.shape[1:]),
+                    batch,
+                )
+
+                def scan_body(acc, b):
+                    (loss, metrics), grads = one_micro(params, b)
+                    acc = jax.tree.map(jnp.add, acc, grads)
+                    return acc, loss
+
+                zero = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), params)
+                gsum, losses = jax.lax.scan(scan_body, zero, mb)
+                grads = jax.tree.map(lambda g: g / tc.microbatches, gsum)
+                loss = losses.mean()
+            else:
+                (loss, _metrics), grads = one_micro(params, batch)
+            lr = cosine_schedule(
+                opt_state["step"], peak_lr=tc.peak_lr, warmup_steps=tc.warmup, total_steps=tc.steps
+            )
+            params, opt_state, om = adamw_update(params, grads, opt_state, lr=lr)
+            return params, opt_state, {"loss": loss, "lr": lr, **om}
+
+        return train_step
+
+    # ------------------------------------------------------------------ run
+    def run(self, *, on_step: Optional[Callable[[int, dict], None]] = None) -> list[dict]:
+        t_start = time.time()
+        while self.step < self.tc.steps:
+            batch = self.loader.next_batch()
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.params, self.opt_state, metrics = self._train_step(self.params, self.opt_state, batch)
+            self.step += 1
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = self.step
+            self.history.append(m)
+            if on_step:
+                on_step(self.step, m)
+            self._maybe_checkpoint()
+            if self.verbose and self.step % self.tc.log_every == 0:
+                dt = time.time() - t_start
+                print(f"[trainer] step {self.step:5d} loss {m['loss']:.4f} "
+                      f"lr {m['lr']:.2e} ({dt:.1f}s)", flush=True)
+        if self.async_ckpt:
+            self.async_ckpt.close()
+        return self.history
+
+    def _state_snapshot(self) -> dict:
+        return {"params": self.params, "opt": self.opt_state}
+
+    def _maybe_checkpoint(self) -> None:
+        if self.ckpt is not None:
+            self.ckpt.maybe_save(self.step, self._state_snapshot)
+        elif self.async_ckpt is not None and self.step % self.tc.ckpt_every == 0:
+            snap = jax.tree.map(np.asarray, self._state_snapshot())
+            self.async_ckpt.submit(self.step, snap)

@@ -1,0 +1,119 @@
+"""Batched serving engine: prefill + continuous-batching decode.
+
+A fixed pool of batch slots; requests join free slots (their prompt is
+prefilled into that slot's cache region), every engine step decodes one
+token for all active slots, finished slots are freed immediately. The slot
+pool is the serving analogue of the data-shard leases: in the multi-replica
+deployment each replica's admission is guarded by its shard of the request
+space (see examples/serve_lm.py)."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import transformer
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (P,) int32
+    max_new: int = 16
+    out: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4, max_len: int = 256,
+                 temperature: float = 0.0, seed: int = 0) -> None:
+        assert not cfg.enc_dec, "LM serving only"
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.temperature = temperature
+        self.rng = jax.random.PRNGKey(seed)
+        self.cache = transformer.init_cache(cfg, slots, max_len)
+        self.slot_req: list[Optional[Request]] = [None] * slots
+        self.slot_pos = np.zeros(slots, dtype=np.int64)  # next position per slot
+        self.queue: list[Request] = []
+        self.completed: list[Request] = []
+        self.steps = 0
+
+        self._decode = jax.jit(
+            lambda p, c, t, pos: transformer.decode_step(cfg, p, c, t, pos)
+        )
+
+    # --------------------------------------------------------------- intake
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for s in range(self.slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slot_req[s] = req
+                self._prefill_slot(s, req)
+
+    def _prefill_slot(self, s: int, req: Request) -> None:
+        """Feed the prompt token-by-token into this slot's cache lane.
+
+        Positions are per-lane: inactive lanes keep their position frozen, so
+        the (harmless) dummy writes land on the slot their next real token
+        overwrites. Single-lane prefill through the decode path keeps one
+        compiled function for everything (batched prefill is a serving
+        optimization measured in §Perf of EXPERIMENTS.md)."""
+        for i, tok in enumerate(req.prompt):
+            toks = np.zeros((self.slots, 1), np.int32)
+            toks[s, 0] = tok
+            pos = self.slot_pos.copy()
+            pos[s] = i
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos, np.int32)
+            )
+        self.slot_pos[s] = len(req.prompt)
+        req._last_logits = np.asarray(logits[s, 0])
+
+    # ---------------------------------------------------------------- decode
+    def _sample(self, logits: np.ndarray) -> int:
+        if self.temperature <= 0:
+            return int(np.argmax(logits))
+        self.rng, sub = jax.random.split(self.rng)
+        return int(jax.random.categorical(sub, jnp.asarray(logits) / self.temperature))
+
+    def step(self) -> None:
+        """One engine tick: admit, decode one token for every active slot."""
+        self._admit()
+        active = [s for s in range(self.slots) if self.slot_req[s] is not None]
+        if not active:
+            return
+        toks = np.zeros((self.slots, 1), np.int32)
+        for s in active:
+            req = self.slot_req[s]
+            nxt = self._sample(req._last_logits)
+            req.out.append(nxt)
+            toks[s, 0] = nxt
+        pos = self.slot_pos.copy()  # each lane decodes at its own depth
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos, np.int32)
+        )
+        self.steps += 1
+        for s in active:
+            req = self.slot_req[s]
+            req._last_logits = np.asarray(logits[s, 0])
+            self.slot_pos[s] += 1
+            if len(req.out) >= req.max_new or self.slot_pos[s] >= self.max_len - 1:
+                req.done = True
+                self.completed.append(req)
+                self.slot_req[s] = None
+
+    def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        while (self.queue or any(self.slot_req)) and self.steps < max_steps:
+            self.step()
+        return self.completed

@@ -1,0 +1,14 @@
+import os
+
+# Tests run on the single real CPU device. (The dry-run sets its own
+# 512-device XLA_FLAGS in a separate process — never here.)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    import jax
+
+    return jax.random.PRNGKey(0)

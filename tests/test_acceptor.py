@@ -1,0 +1,113 @@
+"""Acceptor state machine (§3 steps 2 & 4, §7, restart)."""
+from repro.core.acceptor import Acceptor
+from repro.core.ballot import Ballot
+from repro.core.messages import (
+    Answer,
+    Lease,
+    PrepareRequest,
+    PrepareResponse,
+    Proposal,
+    ProposeRequest,
+    ProposeResponse,
+    Release,
+)
+from repro.sim.events import Scheduler
+
+
+class Harness:
+    def __init__(self):
+        self.sched = Scheduler()
+        self.sent = []
+        self.acc = Acceptor(
+            0,
+            set_timer=lambda d, fn: self.sched.after(d, fn),
+            send=lambda dst, msg: self.sent.append((dst, msg)),
+        )
+
+    def last(self):
+        return self.sent[-1][1]
+
+
+def b(run, pid=1):
+    return Ballot(run, 0, pid)
+
+
+def prop(run, pid=1, t=10.0):
+    return Proposal(b(run, pid), Lease(pid, t))
+
+
+def test_prepare_promise_monotone():
+    h = Harness()
+    h.acc.on_prepare_request(PrepareRequest("R", b(5)), "p1")
+    assert h.last().answer == Answer.ACCEPT and h.last().accepted is None
+    # lower ballot rejected
+    h.acc.on_prepare_request(PrepareRequest("R", b(3, pid=2)), "p2")
+    r = h.last()
+    assert r.answer == Answer.REJECT and r.promised == b(5)
+    # equal ballot re-accepted (paper: "equal or higher")
+    h.acc.on_prepare_request(PrepareRequest("R", b(5)), "p1")
+    assert h.last().answer == Answer.ACCEPT
+
+
+def test_propose_accept_and_expiry():
+    h = Harness()
+    h.acc.on_prepare_request(PrepareRequest("R", b(1)), "p1")
+    h.acc.on_propose_request(ProposeRequest("R", b(1), prop(1, t=10.0)), "p1")
+    assert h.last().answer == Answer.ACCEPT
+    # visible to a later prepare before expiry
+    h.acc.on_prepare_request(PrepareRequest("R", b(2, pid=2)), "p2")
+    assert h.last().accepted == prop(1)
+    # expired after T: state empty again
+    h.sched.run_until(10.1)
+    h.acc.on_prepare_request(PrepareRequest("R", b(3, pid=2)), "p2")
+    assert h.last().accepted is None
+    # but highest promised survived the expiry
+    h.acc.on_prepare_request(PrepareRequest("R", b(1)), "p1")
+    assert h.last().answer == Answer.REJECT
+
+
+def test_propose_below_promise_rejected():
+    h = Harness()
+    h.acc.on_prepare_request(PrepareRequest("R", b(9)), "p1")
+    h.acc.on_propose_request(ProposeRequest("R", b(2, pid=2), prop(2, pid=2)), "p2")
+    assert h.last().answer == Answer.REJECT
+
+
+def test_new_proposal_discards_old_and_its_timer():
+    h = Harness()
+    h.acc.on_propose_request(ProposeRequest("R", b(1), prop(1, t=5.0)), "p1")
+    h.sched.run_until(3.0)
+    h.acc.on_prepare_request(PrepareRequest("R", b(2, pid=2)), "p2")
+    h.acc.on_propose_request(ProposeRequest("R", b(2, pid=2), prop(2, pid=2, t=10.0)), "p2")
+    # old timer (t=5) must not clear the new proposal
+    h.sched.run_until(6.0)
+    h.acc.on_prepare_request(PrepareRequest("R", b(3, pid=3)), "p3")
+    assert h.last().accepted == prop(2, pid=2, t=10.0)
+
+
+def test_release_only_on_ballot_match():
+    h = Harness()
+    h.acc.on_propose_request(ProposeRequest("R", b(1), prop(1)), "p1")
+    h.acc.on_release(Release("R", b(9)), "p1")  # wrong ballot: no-op
+    h.acc.on_prepare_request(PrepareRequest("R", b(2, pid=2)), "p2")
+    assert h.last().accepted == prop(1)
+    h.acc.on_release(Release("R", b(1)), "p1")  # match: discard
+    h.acc.on_prepare_request(PrepareRequest("R", b(3, pid=2)), "p2")
+    assert h.last().accepted is None
+
+
+def test_restart_blanks_everything():
+    h = Harness()
+    h.acc.on_prepare_request(PrepareRequest("R", b(7)), "p1")
+    h.acc.on_propose_request(ProposeRequest("R", b(7), prop(7)), "p1")
+    h.acc.restart()
+    h.acc.on_prepare_request(PrepareRequest("R", b(1, pid=2)), "p2")
+    r = h.last()
+    assert r.answer == Answer.ACCEPT and r.accepted is None  # diskless
+
+
+def test_multi_resource_isolation():
+    h = Harness()
+    h.acc.on_propose_request(ProposeRequest("shard:1", b(1), prop(1)), "p1")
+    h.acc.on_prepare_request(PrepareRequest("shard:2", b(1, pid=2)), "p2")
+    assert h.last().accepted is None  # different resource, independent state

@@ -1,0 +1,55 @@
+"""Elastic autoscaling: membership drives shard targets; leases keep it safe."""
+from repro.cluster.autoscale import AutoscaleController
+from repro.cluster.coordinator import build_coordinated_cluster
+from repro.cluster.membership import HeartbeatSender, MembershipTracker
+from repro.cluster.shards import ShardLeaseManager
+from repro.configs import CellConfig
+from repro.sim.network import NetConfig
+
+NET = NetConfig(delay_min=0.005, delay_max=0.03)
+CFG = CellConfig(n_acceptors=3, max_lease_time=30.0, lease_timespan=4.0,
+                 backoff_min=0.1, backoff_max=0.4)
+
+
+def _settle(cell, cond, t_max):
+    while cell.env.now < t_max and not cond():
+        cell.env.run_until(cell.env.now + 1.0)
+
+
+def test_autoscale_rebalances_on_join_and_silence():
+    cell, coord = build_coordinated_cluster(CFG, n_workers=3, seed=5, net=NET)
+    master_node = cell.nodes[0]
+    coord.campaign(master_node)
+    mgr = ShardLeaseManager(cell, n_shards=6, shard_timespan=3.0, scan_period=0.4)
+    tracker = MembershipTracker(cell.env, master_node.addr, suspect_after=4.0)
+    cell.env.network._handlers[master_node.addr + ":hb"] = lambda m, s: tracker.on_heartbeat(m)
+
+    workers, senders = [], []
+    for i in range(2):  # start with two workers
+        node = cell.proposers[3 + i]
+        workers.append(mgr.add_worker(node, target=0))
+        senders.append(HeartbeatSender(cell.env, node.addr, node.node_id,
+                                       [master_node.addr + ":hb"], period=1.0))
+    AutoscaleController(cell, mgr, tracker, master_node=master_node, period=1.0)
+
+    _settle(cell, lambda: mgr.coverage() == 1.0, 30.0)
+    assert mgr.coverage() == 1.0
+    assert all(w.target == 3 for w in workers)  # 6 shards / 2 workers
+
+    # a third worker joins: targets drop to ceil(6/3)=2 and it picks up shards
+    node3 = cell.proposers[5]
+    w3 = mgr.add_worker(node3, target=0)
+    senders.append(HeartbeatSender(cell.env, node3.addr, node3.node_id,
+                                   [master_node.addr + ":hb"], period=1.0))
+    _settle(cell, lambda: len(w3.owned) >= 1 and mgr.coverage() == 1.0, cell.env.now + 40.0)
+    assert w3.owned and mgr.coverage() == 1.0
+    assert all(w.target == 2 for w in [*workers, w3])
+
+    # worker 0 goes silent: suspected -> target 0; survivors absorb its shards
+    senders[0].stop()
+    mgr.stall(workers[0].node.node_id)
+    _settle(cell, lambda: mgr.coverage() == 1.0 and not workers[0].owned,
+            cell.env.now + 60.0)
+    assert workers[0].target == 0
+    assert mgr.coverage() == 1.0 and not workers[0].owned
+    cell.monitor.assert_clean()

@@ -1,0 +1,53 @@
+"""Ballot numbers (§2): global uniqueness + per-proposer monotonicity."""
+from hypothesis import given, strategies as st
+
+from repro.core.ballot import Ballot, BallotGenerator
+
+
+def test_ordering_run_most_significant():
+    assert Ballot(2, 0, 0) > Ballot(1, 99, 99)
+    assert Ballot(1, 2, 0) > Ballot(1, 1, 99)
+    assert Ballot(1, 1, 2) > Ballot(1, 1, 1)
+
+
+def test_generator_monotone():
+    g = BallotGenerator(proposer_id=3, restart_counter=0)
+    seq = [g.next() for _ in range(100)]
+    assert all(a < b for a, b in zip(seq, seq[1:]))
+
+
+def test_generator_jump_past_observed():
+    g = BallotGenerator(proposer_id=1, restart_counter=0)
+    b = g.next()
+    higher = Ballot(50, 7, 2)
+    nxt = g.next(at_least=higher)
+    assert nxt > higher and nxt > b
+
+
+def test_restart_preserves_uniqueness():
+    g1 = BallotGenerator(proposer_id=1, restart_counter=0)
+    pre = [g1.next() for _ in range(10)]
+    g2 = BallotGenerator(proposer_id=1, restart_counter=1)  # restarted
+    post = [g2.next() for _ in range(10)]
+    assert len(set(pre + post)) == 20
+    # restart counter is more significant than run within same proposer? No —
+    # run is most significant, so ballots are NOT monotone across restarts,
+    # only unique. Uniqueness is what §2 requires; monotonicity is per run.
+
+
+@given(
+    st.tuples(st.integers(0, 5), st.integers(0, 5), st.integers(0, 5)),
+    st.tuples(st.integers(0, 5), st.integers(0, 5), st.integers(0, 5)),
+)
+def test_total_order_matches_tuple_order(a, b):
+    ba, bb = Ballot(*a), Ballot(*b)
+    assert (ba < bb) == (a < b)
+    assert (ba == bb) == (a == b)
+
+
+def test_distinct_proposers_never_collide():
+    g1 = BallotGenerator(proposer_id=1, restart_counter=0)
+    g2 = BallotGenerator(proposer_id=2, restart_counter=0)
+    s1 = {g1.next() for _ in range(50)}
+    s2 = {g2.next() for _ in range(50)}
+    assert not (s1 & s2)

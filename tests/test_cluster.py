@@ -1,0 +1,93 @@
+"""Control-plane integration: coordinator election/failover, shard-lease
+straggler mitigation, elastic scale up/down, membership."""
+from repro.cluster.coordinator import MASTER_RESOURCE, CoordinatorService, build_coordinated_cluster
+from repro.cluster.membership import Heartbeat, HeartbeatSender, MembershipTracker
+from repro.cluster.shards import ShardLeaseManager
+from repro.configs import CellConfig
+from repro.sim.network import NetConfig
+
+NET = NetConfig(delay_min=0.005, delay_max=0.05)
+CFG = CellConfig(n_acceptors=3, max_lease_time=30.0, lease_timespan=6.0,
+                 backoff_min=0.1, backoff_max=0.5)
+
+
+def test_master_election_and_failover():
+    cell, coord = build_coordinated_cluster(CFG, n_workers=0, seed=1, net=NET)
+    gained = []
+    for n in cell.proposers:
+        coord.campaign(n, on_gain=lambda i=n.node_id: gained.append(i))
+    cell.env.run_until(5.0)
+    first = coord.master()
+    assert first is not None and gained[0] == first
+    # kill the master; someone else takes over within ~T + backoff + 2RTT
+    cell.nodes[first].crash()
+    t_crash = cell.env.now
+    cell.env.run_until(t_crash + CFG.lease_timespan + 3.0)
+    second = coord.master()
+    assert second is not None and second != first
+    cell.monitor.assert_clean()
+    assert coord.failover_times(), "failover gap should be recorded"
+
+
+def test_abdication_hands_over_quickly():
+    cell, coord = build_coordinated_cluster(CFG, n_workers=0, seed=2, net=NET)
+    for n in cell.proposers:
+        coord.campaign(n)
+    cell.env.run_until(5.0)
+    first = coord.master()
+    coord.abdicate(cell.nodes[first])
+    cell.env.run_until(cell.env.now + 3.0)  # release: no need to wait out T
+    nxt = coord.master()
+    assert nxt is not None and nxt != first
+
+
+def test_shard_straggler_reassignment():
+    cell, coord = build_coordinated_cluster(CFG, n_workers=3, seed=3, net=NET)
+    mgr = ShardLeaseManager(cell, n_shards=6, shard_timespan=4.0, scan_period=0.5)
+    workers = [mgr.add_worker(cell.proposers[3 + i], target=2) for i in range(3)]
+    cell.env.run_until(20.0)
+    assert mgr.coverage() == 1.0, f"all shards owned, got {mgr.owner_map()}"
+    victim = workers[0]
+    owned_before = set(victim.owned)
+    assert owned_before
+    mgr.stall(victim.node.node_id)  # straggler: stops renewing, says nothing
+    for w in workers[1:]:
+        w.target = 3  # survivors can absorb the load
+    cell.env.run_until(45.0)
+    assert not victim.owned or mgr.coverage() == 1.0
+    # every shard the straggler held is now owned by someone else
+    omap = mgr.owner_map()
+    for k in owned_before:
+        assert omap.get(k) is not None and omap[k] != victim.node.node_id
+    cell.monitor.assert_clean()
+
+
+def test_elastic_scale_down_via_release():
+    cell, coord = build_coordinated_cluster(CFG, n_workers=2, seed=4, net=NET)
+    mgr = ShardLeaseManager(cell, n_shards=4, shard_timespan=5.0, scan_period=0.5)
+    w0 = mgr.add_worker(cell.proposers[3], target=4)
+    cell.env.run_until(15.0)
+    assert len(w0.owned) == 4
+    w1 = mgr.add_worker(cell.proposers[4], target=4)
+    mgr.drain(w0.node.node_id)  # graceful handoff (§7 release, no T wait)
+    cell.env.run_until(30.0)
+    assert len(w0.owned) == 0 and len(w1.owned) == 4
+    cell.monitor.assert_clean()
+
+
+def test_membership_tracker_suspects_silent_worker():
+    from repro.sim.env import SimEnv
+
+    env = SimEnv(seed=0, net=NET)
+    tracker = MembershipTracker(env, "ctl", suspect_after=3.0)
+    env.add_node("ctl", lambda m, s: tracker.on_heartbeat(m))
+    env.add_node("w1", lambda m, s: None)
+    env.add_node("w2", lambda m, s: None)
+    hb1 = HeartbeatSender(env, "w1", 1, ["ctl"], period=1.0)
+    hb2 = HeartbeatSender(env, "w2", 2, ["ctl"], period=1.0)
+    env.run_until(5.0)
+    assert tracker.live_workers() == [1, 2]
+    hb2.stop()
+    env.run_until(10.0)
+    assert tracker.live_workers() == [1]
+    assert tracker.suspected() == [2]

@@ -1,0 +1,56 @@
+"""Config registry + shape support + cell config invariants."""
+import pytest
+
+from repro.configs import (
+    CellConfig,
+    SHAPES,
+    arch_ids,
+    get_config,
+    get_shape,
+    reduced,
+    supports_shape,
+)
+
+
+def test_all_ten_assigned_archs_present():
+    assert len(arch_ids()) == 10
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError):
+        get_config("not-a-model")
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].tokens_per_step == 4096 * 256
+    assert SHAPES["decode_32k"].tokens_per_step == 128  # one token per seq
+    assert SHAPES["long_500k"].seq_len == 524288
+
+
+def test_long_context_skip_logic():
+    runnable = [a for a in arch_ids() if supports_shape(get_config(a), get_shape("long_500k"))[0]]
+    assert sorted(runnable) == ["hymba-1.5b", "mixtral-8x22b", "rwkv6-3b"]
+    ok, reason = supports_shape(get_config("granite-3-8b"), get_shape("long_500k"))
+    assert not ok and "full-attention" in reason
+
+
+def test_total_cell_count_is_40():
+    cells = [(a, s) for a in arch_ids() for s in SHAPES]
+    assert len(cells) == 40
+
+
+def test_reduced_configs_stay_in_family():
+    for a in arch_ids():
+        cfg, red = get_config(a), reduced(get_config(a))
+        assert red.family == cfg.family
+        assert (red.moe is None) == (cfg.moe is None)
+        assert red.attention_free == cfg.attention_free
+        assert red.enc_dec == cfg.enc_dec
+        assert red.n_params() < 10_000_000, f"{a}: reduced config too big"
+
+
+def test_cell_config_enforces_t_less_than_m():
+    with pytest.raises(ValueError):
+        CellConfig(lease_timespan=60.0, max_lease_time=60.0)
+    assert CellConfig().majority == 3  # 5 acceptors
+    assert CellConfig(n_acceptors=4).majority == 3  # strict majority

@@ -1,0 +1,41 @@
+"""Clock-RATE drift: the paper assumes well-behaved interval timers (it
+needs no synchronized clocks, but timers must measure T accurately).
+
+We make that assumption explicit: with drifted clock rates and no guard a
+violation is constructible; the beyond-paper drift guard
+(T_own = T*(1-eps)/(1+eps)) restores the invariant. See DESIGN.md §2."""
+from repro.configs import CellConfig
+from repro.core import build_cell
+from repro.sim.network import NetConfig
+
+NET = NetConfig(delay_min=0.01, delay_max=0.02)
+
+
+def _scenario(guard: bool):
+    eps = 0.25
+    cfg = CellConfig(
+        n_acceptors=3, max_lease_time=60.0, lease_timespan=10.0,
+        clock_drift_bound=eps, drift_guard=guard,
+    )
+    # proposer node 3 runs SLOW (its 10s lease lasts 13.3s of real time);
+    # acceptor nodes 0-2 run FAST (their 10s timers last 8s of real time).
+    rates = {0: 1.25, 1: 1.25, 2: 1.25, 3: 0.75, 4: 1.0}
+    cell = build_cell(cfg, n_proposers=5, seed=2, net=NET,
+                      clock_rates=rates, strict_monitor=False)
+    slow, other = cell.proposers[3], cell.proposers[4]
+    slow.proposer.acquire(renew=False)
+    cell.env.run_until(1.0)
+    assert cell.monitor.owner_of("R") == 3
+    other.proposer.acquire(renew=False)
+    cell.env.run_until(30.0)
+    return cell
+
+
+def test_drift_without_guard_can_violate():
+    cell = _scenario(guard=False)
+    assert cell.monitor.violations, "fast acceptors + slow owner must overlap"
+
+
+def test_drift_guard_restores_invariant():
+    cell = _scenario(guard=True)
+    assert not cell.monitor.violations

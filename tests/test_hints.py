@@ -1,0 +1,49 @@
+"""§7 release hints: advisory wake-ups make handoff faster, never less safe."""
+from repro.configs import CellConfig
+from repro.core import build_cell
+from repro.sim.network import NetConfig
+
+NET = NetConfig(delay_min=0.01, delay_max=0.02)
+# large backoff so the hint's fast path is clearly distinguishable
+CFG = CellConfig(n_acceptors=5, max_lease_time=60.0, lease_timespan=10.0,
+                 backoff_min=3.0, backoff_max=4.0)
+
+
+def _handoff_time(hints_enabled: bool) -> float:
+    cell = build_cell(CFG, n_proposers=2, seed=1, net=NET)
+    if not hints_enabled:
+        for n in cell.proposers:
+            n.proposer.hint_addrs = []
+    p0, p1 = (n.proposer for n in cell.proposers[:2])
+    p0.acquire(renew=False)
+    cell.env.run_until(1.0)
+    assert p0.is_owner()
+    p1.acquire()  # blocked: p0 holds it; p1 backs off 3-4s between rounds
+    cell.env.run_until(2.0)
+    t0 = cell.env.now
+    p0.release()
+    cell.env.run_until(t0 + 8.0)
+    gained = [t for t in cell.monitor.acquire_times if t > t0]
+    cell.monitor.assert_clean()
+    assert gained, "p1 must eventually take the released lease"
+    return min(gained) - t0
+
+
+def test_release_hint_wakes_waiter_early():
+    with_hints = _handoff_time(True)
+    without = _handoff_time(False)
+    assert with_hints < 0.5, f"hinted handoff should be ~2 RTT, got {with_hints:.2f}s"
+    assert without > 1.0, f"unhinted handoff waits out the backoff, got {without:.2f}s"
+
+
+def test_hints_never_grant_ownership():
+    """A hint alone must not make anyone an owner — the rounds still decide."""
+    from repro.core.messages import LearnHint
+
+    cell = build_cell(CFG, n_proposers=2, seed=2, net=NET)
+    p1 = cell.proposers[1].proposer
+    # spurious hint for a resource p1 never asked for: no effect at all
+    p1.on_hint(LearnHint("R", 0, "released"), "node0")
+    cell.env.run_until(1.0)
+    assert not p1.is_owner()
+    assert cell.monitor.owner_of("R") is None

@@ -1,0 +1,132 @@
+"""Property tests of the §4 lease invariant under adversarial conditions.
+
+hypothesis drives: network loss/duplication/delay/stragglers, contention
+level, crash/restart schedules (with the M-wait rule), lease timespans and
+multi-resource workloads. The monitor (strict) raises on any overlap of
+ownership intervals — running to completion IS the proof check.
+"""
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.configs import CellConfig
+from repro.core import build_cell
+from repro.sim.network import NetConfig
+
+FAST = dict(
+    suppress_health_check=[HealthCheck.too_slow],
+    deadline=None,
+    max_examples=30,
+)
+
+
+@st.composite
+def net_configs(draw):
+    dmin = draw(st.floats(0.001, 0.05))
+    return NetConfig(
+        delay_min=dmin,
+        delay_max=dmin + draw(st.floats(0.0, 0.3)),
+        loss=draw(st.floats(0.0, 0.4)),
+        duplicate=draw(st.floats(0.0, 0.3)),
+        jitter_tail=draw(st.floats(0.0, 0.05)),
+        tail_delay=draw(st.floats(1.0, 20.0)),
+    )
+
+
+@settings(**FAST)
+@given(
+    net=net_configs(),
+    seed=st.integers(0, 10_000),
+    n_prop=st.integers(2, 5),
+    timespan=st.floats(2.0, 20.0),
+)
+def test_invariant_under_contention_and_bad_network(net, seed, n_prop, timespan):
+    cfg = CellConfig(n_acceptors=5, max_lease_time=30.0,
+                     lease_timespan=min(timespan, 29.0))
+    cell = build_cell(cfg, n_proposers=n_prop, seed=seed, net=net)
+    for p in cell.proposers:
+        p.proposer.acquire()
+    cell.env.run_until(150.0)
+    cell.monitor.assert_clean()  # strict monitor would already have raised
+
+
+@settings(**FAST)
+@given(
+    seed=st.integers(0, 10_000),
+    crashes=st.lists(
+        st.tuples(st.floats(1.0, 80.0), st.integers(0, 4), st.floats(0.1, 30.0)),
+        min_size=1, max_size=6,
+    ),
+)
+def test_invariant_under_crash_restart_with_m_wait(seed, crashes):
+    """Acceptor nodes crash at arbitrary times and restart after arbitrary
+    downtime; the M-wait rule is enforced by LeaseNode. Invariant must hold."""
+    cfg = CellConfig(n_acceptors=5, max_lease_time=25.0, lease_timespan=8.0)
+    cell = build_cell(cfg, n_proposers=3, seed=seed,
+                      net=NetConfig(delay_min=0.005, delay_max=0.1, loss=0.1))
+    for p in cell.proposers:
+        p.proposer.acquire()
+    events = sorted(crashes)
+    t_cursor = 0.0
+    for t, node_i, downtime in events:
+        cell.env.run_until(t)
+        node = cell.nodes[node_i]
+        if not node.crashed:
+            node.crash()
+            cell.env.sched.after(downtime, node.restart)
+        t_cursor = t
+    cell.env.run_until(t_cursor + 120.0)
+    cell.monitor.assert_clean()
+
+
+@settings(**FAST)
+@given(seed=st.integers(0, 10_000), n_res=st.integers(2, 8))
+def test_invariant_multi_resource(seed, n_res):
+    """§8: independent instances per resource; cross-resource interference
+    must not exist."""
+    cfg = CellConfig(n_acceptors=3, max_lease_time=20.0, lease_timespan=5.0)
+    cell = build_cell(cfg, n_proposers=3, seed=seed,
+                      net=NetConfig(delay_min=0.01, delay_max=0.1, loss=0.15))
+    for j, p in enumerate(cell.proposers):
+        for r in range(n_res):
+            if (r + j) % 2 == 0:
+                p.proposer.acquire(f"res:{r}")
+    cell.env.run_until(60.0)
+    cell.monitor.assert_clean()
+    owners = {r: cell.monitor.owner_of(f"res:{r}") for r in range(n_res)}
+    assert any(o is not None for o in owners.values())
+
+
+@settings(**FAST)
+@given(seed=st.integers(0, 10_000))
+def test_partition_heals_without_violation(seed):
+    """Network split (§1 failure 2): minority side cannot acquire; after
+    healing exactly one owner exists."""
+    cfg = CellConfig(n_acceptors=5, max_lease_time=20.0, lease_timespan=6.0)
+    cell = build_cell(cfg, n_proposers=5, seed=seed,
+                      net=NetConfig(delay_min=0.01, delay_max=0.05))
+    for p in cell.proposers:
+        p.proposer.acquire()
+    cell.env.run_until(10.0)
+    majority = {cell.nodes[i].addr for i in range(3)}
+    minority = {cell.nodes[i].addr for i in range(3, 5)}
+    cell.env.network.partition(minority, majority)
+    cell.env.run_until(40.0)
+    owner = cell.monitor.owner_of("R")
+    if owner is not None:
+        assert owner in range(0, 3), "minority-side proposer cannot hold the lease"
+    cell.env.network.heal()
+    cell.env.run_until(80.0)
+    cell.monitor.assert_clean()
+    assert cell.monitor.owner_of("R") is not None
+
+
+def test_liveness_eventually_acquires_under_duel():
+    """§5: randomized backoff breaks dynamic deadlock (statistical check)."""
+    cfg = CellConfig(n_acceptors=3, max_lease_time=20.0, lease_timespan=5.0,
+                     backoff_min=0.2, backoff_max=1.5)
+    cell = build_cell(cfg, n_proposers=2, seed=123,
+                      net=NetConfig(delay_min=0.01, delay_max=0.03))
+    for p in cell.proposers:
+        p.proposer.acquire()
+    cell.env.run_until(60.0)
+    assert cell.monitor.total_owned_time("R") > 30.0  # held most of the time

@@ -1,0 +1,53 @@
+"""Pallas flash-attention kernel vs pure-jnp oracle: shape/dtype sweep
+(assignment: per-kernel allclose against ref.py, interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+CASES = [
+    # (b, sq, sk, hq, hkv, dh, causal, window, dtype)
+    (2, 256, 256, 4, 2, 64, True, None, jnp.float32),
+    (1, 128, 128, 8, 8, 128, True, None, jnp.float32),
+    (1, 128, 128, 8, 8, 128, True, None, jnp.bfloat16),
+    (2, 256, 256, 4, 1, 64, True, 96, jnp.float32),  # SWA + MQA
+    (1, 128, 256, 2, 2, 64, False, None, jnp.float32),  # cross-attention
+    (1, 64, 64, 6, 3, 112, True, None, jnp.float32),  # kimi head_dim
+    (1, 256, 256, 2, 2, 64, True, 32, jnp.bfloat16),  # tight window, bf16
+]
+
+
+def _run(b, sq, sk, hq, hkv, dh, causal, window, dt, block=64):
+    key = jax.random.PRNGKey(hash((b, sq, hq, dh)) & 0xFFFF)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, sq, hq, dh), jnp.float32).astype(dt)
+    k = jax.random.normal(ks[1], (b, sk, hkv, dh), jnp.float32).astype(dt)
+    v = jax.random.normal(ks[2], (b, sk, hkv, dh), jnp.float32).astype(dt)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=block, block_k=block)
+    fold = lambda a, h: a.transpose(0, 2, 1, 3).reshape(b * h, a.shape[1], dh)
+    ref = attention_ref(fold(q, hq), fold(k, hkv), fold(v, hkv),
+                        causal=causal, window=window)
+    ref = ref.reshape(b, hq, sq, dh).transpose(0, 2, 1, 3)
+    return out, ref
+
+
+@pytest.mark.parametrize("case", CASES, ids=lambda c: f"b{c[0]}s{c[1]}h{c[3]}kv{c[4]}d{c[5]}w{c[7]}{c[8].__name__}")
+def test_flash_matches_ref(case):
+    *dims, dt = case
+    out, ref = _run(*dims, dt)
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32))))
+    tol = 2.5e-2 if dt == jnp.bfloat16 else 5e-5
+    assert err < tol, f"{case}: err {err:.3e}"
+
+
+def test_block_size_invariance():
+    """Different BlockSpec tilings must give identical results."""
+    outs = []
+    for block in (32, 64, 128):
+        out, _ = _run(1, 256, 256, 4, 2, 64, True, None, jnp.float32, block=block)
+        outs.append(out)
+    for o in outs[1:]:
+        assert float(jnp.max(jnp.abs(o - outs[0]))) < 1e-6

@@ -1,0 +1,80 @@
+"""Optimizer against a numpy reference; schedule; synthetic data pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import ShardedLoader, SyntheticTokens
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, cosine_schedule
+
+
+def _np_adamw(p, g, m, v, t, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.1):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mh = m / (1 - b1**t)
+    vh = v / (1 - b2**t)
+    return p - lr * (mh / (np.sqrt(vh) + eps) + wd * p), m, v
+
+
+def test_adamw_matches_numpy_reference():
+    rng = np.random.default_rng(0)
+    p0 = rng.normal(size=(4, 5)).astype(np.float32)
+    params = {"w": jnp.asarray(p0)}
+    state = adamw_init(params)
+    pn, mn, vn = p0.copy(), np.zeros_like(p0), np.zeros_like(p0)
+    for t in range(1, 6):
+        g = rng.normal(size=(4, 5)).astype(np.float32) * 0.1
+        params, state, _ = adamw_update(
+            params, {"w": jnp.asarray(g)}, state, lr=1e-2, max_grad_norm=None
+        )
+        pn, mn, vn = _np_adamw(pn, g, mn, vn, t, 1e-2)
+        np.testing.assert_allclose(np.asarray(params["w"]), pn, rtol=2e-5, atol=2e-6)
+
+
+def test_grad_clipping():
+    g = {"w": jnp.full((10,), 100.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(np.sqrt(10) * 100, rel=1e-5)
+    assert float(jnp.linalg.norm(clipped["w"])) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_cosine_schedule_shape():
+    lrs = [float(cosine_schedule(jnp.int32(s), peak_lr=1e-3, warmup_steps=10, total_steps=100))
+           for s in range(0, 101, 10)]
+    assert lrs[0] == 0.0
+    assert max(lrs) == pytest.approx(1e-3, rel=1e-6)
+    assert lrs[-1] == pytest.approx(1e-4, rel=1e-3)  # min_ratio * peak
+
+
+def test_synthetic_deterministic_and_stateless():
+    gen = SyntheticTokens(1000, 32, seed=7)
+    b1 = gen.batch(shard=3, step=5, batch_size=4)
+    b2 = gen.batch(shard=3, step=5, batch_size=4)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = gen.batch(shard=3, step=6, batch_size=4)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # labels are the next-token shift
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_loader_respects_lease_ownership():
+    gen = SyntheticTokens(1000, 16, seed=0)
+    owned = {0, 2}
+    loader = ShardedLoader(gen, n_shards=4, batch_size=4, owned_shards=lambda: owned)
+    b = loader.next_batch()
+    assert b["tokens"].shape == (4, 16)
+    assert loader.step_per_shard[0] == 1 and loader.step_per_shard[1] == 0
+    owned.clear()
+    with pytest.raises(RuntimeError):
+        loader.next_batch()  # lease-starved worker must not fabricate data
+
+
+def test_loader_handoff_resumes_stream():
+    gen = SyntheticTokens(1000, 16, seed=0)
+    l1 = ShardedLoader(gen, 2, 2, owned_shards=lambda: {0})
+    b1 = l1.next_batch()
+    # worker 2 takes over shard 0 at the committed step
+    l2 = ShardedLoader(gen, 2, 2, owned_shards=lambda: {0})
+    l2.step_per_shard[0] = 0
+    b2 = l2.next_batch()
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])  # exactly-once replay

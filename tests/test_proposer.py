@@ -1,0 +1,165 @@
+"""Proposer flow (§3 steps 1/3/5, §6, §7) + the proof-critical ordering."""
+import pytest
+
+from repro.configs import CellConfig
+from repro.core import build_cell
+from repro.core.ballot import Ballot
+from repro.core.messages import (
+    Answer,
+    Lease,
+    PrepareRequest,
+    PrepareResponse,
+    Proposal,
+    ProposeRequest,
+    ProposeResponse,
+)
+from repro.core.proposer import Proposer
+
+CFG = CellConfig(n_acceptors=3, max_lease_time=60.0, lease_timespan=10.0)
+
+
+class Recorder:
+    """Instrumented proposer harness recording the order of externally
+    visible actions (timer starts vs. sends)."""
+
+    def __init__(self, cfg=CFG):
+        self.log = []
+        self.timers = []
+
+        class H:
+            def __init__(h):
+                h.cancelled = False
+
+            def cancel(h):
+                h.cancelled = True
+
+        def set_timer(d, fn):
+            self.log.append(("timer", d))
+            h = H()
+            self.timers.append((h, d, fn))
+            return h
+
+        def send(dst, msg):
+            self.log.append(("send", dst, type(msg).__name__))
+
+        self.p = Proposer(
+            1, ["a0", "a1", "a2"], cfg,
+            set_timer=set_timer, send=send, random_backoff=lambda lo, hi: lo,
+        )
+
+
+def test_two_round_trips_and_timer_before_propose():
+    r = Recorder()
+    r.p.acquire("R")
+    # round 1: prepare to all acceptors
+    prepares = [e for e in r.log if e[0] == "send" and e[2] == "PrepareRequest"]
+    assert len(prepares) == 3
+    ballot = r.p._state("R").round.ballot
+    # two empty prepare responses = majority of 3
+    r.log.clear()
+    r.p.on_prepare_response(PrepareResponse("R", ballot, Answer.ACCEPT, None), "a0")
+    assert not [e for e in r.log if e[0] == "send"], "must wait for majority"
+    r.p.on_prepare_response(PrepareResponse("R", ballot, Answer.ACCEPT, None), "a1")
+    # CRITICAL (§4 / Fig 2): own lease timer starts BEFORE propose broadcast
+    kinds = [e[0] for e in r.log]
+    first_send = kinds.index("send")
+    assert "timer" in kinds[:first_send], f"timer must precede sends: {r.log}"
+    proposes = [e for e in r.log if e[0] == "send" and e[2] == "ProposeRequest"]
+    assert len(proposes) == 3
+    # majority of propose accepts -> owner
+    assert not r.p.is_owner("R")
+    r.p.on_propose_response(ProposeResponse("R", ballot, Answer.ACCEPT), "a0")
+    r.p.on_propose_response(ProposeResponse("R", ballot, Answer.ACCEPT), "a2")
+    assert r.p.is_owner("R")
+
+
+def test_duplicate_responses_not_double_counted():
+    r = Recorder()
+    r.p.acquire("R")
+    ballot = r.p._state("R").round.ballot
+    for _ in range(5):  # same acceptor, duplicated network
+        r.p.on_prepare_response(PrepareResponse("R", ballot, Answer.ACCEPT, None), "a0")
+    assert r.p._state("R").round.phase == "preparing", "one acceptor is not a majority"
+
+
+def test_nonempty_prepare_blocks_non_owner():
+    r = Recorder()
+    r.p.acquire("R")
+    ballot = r.p._state("R").round.ballot
+    other = Proposal(Ballot(1, 0, 9), Lease(9, 10.0))
+    r.p.on_prepare_response(PrepareResponse("R", ballot, Answer.ACCEPT, other), "a0")
+    r.p.on_prepare_response(PrepareResponse("R", ballot, Answer.ACCEPT, other), "a1")
+    r.p.on_prepare_response(PrepareResponse("R", ballot, Answer.ACCEPT, other), "a2")
+    assert r.p._state("R").round.phase == "preparing"  # never proposed
+
+
+def test_extend_counts_own_unexpired_proposal():
+    r = Recorder()
+    r.p.acquire("R")
+    st = r.p._state("R")
+    b1 = st.round.ballot
+    for a in ("a0", "a1"):
+        r.p.on_prepare_response(PrepareResponse("R", b1, Answer.ACCEPT, None), a)
+    for a in ("a0", "a1"):
+        r.p.on_propose_response(ProposeResponse("R", b1, Answer.ACCEPT), a)
+    assert r.p.is_owner("R")
+    # renewal round: acceptors now hold OUR proposal
+    r.p._renew("R")
+    b2 = st.round.ballot
+    assert b2 > b1
+    mine = Proposal(b1, Lease(1, 10.0))
+    r.p.on_prepare_response(PrepareResponse("R", b2, Answer.ACCEPT, mine), "a0")
+    r.p.on_prepare_response(PrepareResponse("R", b2, Answer.ACCEPT, mine), "a1")
+    assert st.round.phase == "proposing"  # counted as open (§6)
+
+
+def test_release_switches_state_before_sending():
+    r = Recorder()
+    r.p.acquire("R")
+    st = r.p._state("R")
+    b1 = st.round.ballot
+    for a in ("a0", "a1"):
+        r.p.on_prepare_response(PrepareResponse("R", b1, Answer.ACCEPT, None), a)
+    for a in ("a0", "a1"):
+        r.p.on_propose_response(ProposeResponse("R", b1, Answer.ACCEPT), a)
+    assert r.p.is_owner("R")
+    r.log.clear()
+    r.p.release("R")
+    assert not r.p.is_owner("R")
+    rel = [e for e in r.log if e[0] == "send" and e[2] == "Release"]
+    assert len(rel) == 3
+
+
+def test_reject_majority_aborts_and_jumps_ballot():
+    r = Recorder()
+    r.p.acquire("R")
+    st = r.p._state("R")
+    b1 = st.round.ballot
+    high = Ballot(40, 0, 9)
+    r.p.on_prepare_response(PrepareResponse("R", b1, Answer.REJECT, None, promised=high), "a0")
+    r.p.on_prepare_response(PrepareResponse("R", b1, Answer.REJECT, None, promised=high), "a1")
+    assert r.p.stats["aborted"] == 1
+    # fire the backoff retry timer manually
+    retry = [t for t in r.timers if not t[0].cancelled][-1]
+    retry[2]()
+    assert st.round.ballot > high
+
+
+def test_t_less_than_m_enforced():
+    r = Recorder()
+    with pytest.raises(AssertionError):
+        r.p.acquire("R", timespan=999.0)
+
+
+def test_in_sim_two_rtt_acquisition():
+    """Fig 2: in a clean network the lease is held after ~2 RTTs."""
+    cfg = CellConfig(n_acceptors=5, max_lease_time=60.0, lease_timespan=10.0)
+    from repro.sim.network import NetConfig
+
+    cell = build_cell(cfg, n_proposers=1, seed=0,
+                      net=NetConfig(delay_min=0.05, delay_max=0.05))
+    cell.proposers[0].proposer.acquire()
+    cell.env.run_until(0.19)
+    assert cell.monitor.owner_of("R") is None  # < 2 RTT: not yet possible
+    cell.env.run_until(0.21)  # 2 RTT = 0.2s
+    assert cell.monitor.owner_of("R") == 0

@@ -1,0 +1,85 @@
+"""Cross-validate the analytic FLOPs model against XLA cost_analysis.
+
+cost_analysis counts a scan body once (why the roofline is analytic — see
+analysis/roofline.py); on an UNROLLED reduced config the two must agree to
+within tolerance. Also checks the scan-undercount factor itself.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.roofline import flops_fwd, flops_step, model_flops, roofline_terms, MESHES
+from repro.configs import ShapeConfig, get_config, reduced
+from repro.models import init_model, loss_fn, synth_inputs, transformer
+
+
+def _compiled_flops(cfg, shape, train: bool):
+    batch = synth_inputs(cfg, shape, jax.random.PRNGKey(0))["batch"]
+    params = transformer.abstract_model(cfg)
+    batch_abs = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), batch)
+    if train:
+        fn = lambda p, b: jax.grad(lambda q: loss_fn(cfg, q, b, remat=False)[0])(p)
+    else:
+        fn = lambda p, b: transformer.forward(cfg, p, b)[0]
+    compiled = jax.jit(fn).lower(params, batch_abs).compile()
+    return compiled.cost_analysis()["flops"]
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "internlm2-1.8b"])
+def test_analytic_fwd_flops_vs_unrolled_cost_analysis(arch):
+    cfg = dataclasses.replace(
+        reduced(get_config(arch)), scan_unroll=True, remat_policy="nothing",
+        n_layers=4, vocab_size=512,
+    )
+    shape = ShapeConfig("t", "prefill", 64, 4)
+    got = _compiled_flops(cfg, shape, train=False)
+    want = flops_fwd(cfg, shape)
+    assert got == pytest.approx(want, rel=0.25), f"analytic {want:.3e} vs HLO {got:.3e}"
+
+
+def test_scan_undercount_factor_is_n_layers():
+    cfg = dataclasses.replace(
+        reduced(get_config("qwen1.5-0.5b")), remat_policy="nothing",
+        n_layers=8, vocab_size=512,
+    )
+    shape = ShapeConfig("t", "prefill", 64, 4)
+    scanned = _compiled_flops(cfg, shape, train=False)
+    unrolled = _compiled_flops(dataclasses.replace(cfg, scan_unroll=True), shape, train=False)
+    # per-layer flops dominate at vocab 512, so ratio ~ n_layers
+    assert unrolled / scanned > cfg.n_layers / 2
+
+
+def test_train_flops_roughly_3x_forward():
+    cfg = dataclasses.replace(
+        reduced(get_config("qwen1.5-0.5b")), scan_unroll=True,
+        remat_policy="nothing", n_layers=4, vocab_size=512,
+    )
+    shape = ShapeConfig("t", "train", 64, 4)
+    fwd = _compiled_flops(cfg, ShapeConfig("t", "prefill", 64, 4), train=False)
+    train = _compiled_flops(cfg, shape, train=True)
+    assert 2.0 < train / fwd < 4.0
+
+
+def test_model_flops_is_6nd():
+    cfg = get_config("granite-3-8b")
+    shape = ShapeConfig("t", "train", 4096, 256)
+    assert model_flops(cfg, shape) == pytest.approx(
+        6 * cfg.matmul_params() * 4096 * 256, rel=1e-9
+    )
+
+
+@pytest.mark.parametrize("mesh", list(MESHES))
+def test_roofline_terms_positive_and_classified(mesh):
+    for arch, shape_name, kind in [
+        ("granite-3-8b", "train_4k", "train"),
+        ("kimi-k2-1t-a32b", "decode_32k", "decode"),
+    ]:
+        cfg = get_config(arch)
+        from repro.configs import get_shape
+
+        t = roofline_terms(cfg, get_shape(shape_name), MESHES[mesh])
+        assert t["compute_s"] > 0 and t["memory_s"] > 0 and t["collective_s"] > 0
+        assert t["dominant"] in ("compute", "memory", "collective")
+        assert 0 < t["useful_flops_frac"] <= 1.2

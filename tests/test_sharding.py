@@ -1,0 +1,86 @@
+"""Sharding rules: divisibility fallback, ZeRO-1 axes, spec trees, hints."""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config, reduced
+from repro.models import transformer
+from repro.parallel import sharding as shd
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # 1-device "production-shaped" mesh: axis sizes 1, rules still resolve
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+def test_spec_divisible(mesh):
+    rules = shd.make_rules(mesh)
+    spec = shd.spec_for(mesh, rules, ("embed", "mlp"), (64, 128))
+    assert spec == P(None, "model")
+
+
+def test_spec_fallback_replicates_nondivisible():
+    # fake 16-way model axis via mesh axis sizes in rules logic: use spec_for
+    # directly with a mesh of shape (1, 1) but a synthetic check of the
+    # divisibility branch via axis size 1 is trivial; exercise the logic with
+    # a virtual mesh of 4 devices if present, else shape math only.
+    devs = jax.devices()
+    if len(devs) >= 4:
+        mesh4 = Mesh(np.array(devs[:4]).reshape(1, 4), ("data", "model"))
+    else:
+        pytest.skip("single device: fallback branch covered by dryrun artifacts")
+    rules = shd.make_rules(mesh4)
+    spec = shd.spec_for(mesh4, rules, ("embed", "heads"), (64, 6))  # 6 % 4 != 0
+    assert spec == P()
+
+
+def test_no_mesh_axis_reuse(mesh):
+    rules = shd.make_rules(mesh, {"embed": "model"})
+    spec = shd.spec_for(mesh, rules, ("embed", "mlp"), (64, 128))
+    # "model" must appear only once in the spec
+    flat = [a for a in spec if a is not None]
+    assert len(flat) == len(set(flat))
+
+
+def test_zero1_adds_data_axis(mesh):
+    rules = shd.make_rules(mesh)
+    ax = shd.zero1_axes(("embed", "mlp"), (64, 128), mesh, rules)
+    assert ax[0] == "batch"  # first replicated divisible dim gets data axes
+    # already data-sharded (experts) stays untouched
+    ax2 = shd.zero1_axes(("experts", "embed", "expert_ff"), (8, 64, 128), mesh, rules)
+    assert ax2 == ("experts", "embed", "expert_ff")
+
+
+def test_tree_shardings_match_param_tree(mesh):
+    cfg = reduced(get_config("internlm2-1.8b"))
+    axes = transformer.model_axes(cfg)
+    ab = transformer.abstract_model(cfg)
+    tree = shd.tree_shardings(mesh, shd.make_rules(mesh), axes, ab)
+    flat_p = jax.tree.leaves(ab)
+    flat_s = jax.tree.leaves(tree, is_leaf=lambda x: hasattr(x, "spec"))
+    assert len(flat_p) == len(flat_s)
+
+
+def test_hint_noop_without_mesh():
+    import jax.numpy as jnp
+
+    x = jnp.ones((4, 4))
+    assert shd.hint(x, ("batch", None)) is x
+
+
+def test_hint_applies_under_mesh(mesh):
+    import jax.numpy as jnp
+
+    with shd.use_mesh(mesh):
+        y = jax.jit(lambda x: shd.hint(x, ("batch", "mlp")))(jnp.ones((4, 128)))
+    assert y.shape == (4, 128)
+
+
+def test_make_rules_filters_missing_axes(mesh):
+    rules = shd.make_rules(mesh)  # no "pod" axis on this mesh
+    assert rules["batch"] == "data"
+    assert rules["experts"] == "data"

@@ -1,0 +1,108 @@
+"""End-to-end behaviour: a lease-coordinated training cluster survives
+master failure, straggling workers and checkpoint handoff — the paper's
+control plane driving the JAX data plane."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.cluster.coordinator import CKPT_RESOURCE, build_coordinated_cluster
+from repro.cluster.shards import ShardLeaseManager
+from repro.configs import CellConfig, get_config, reduced
+from repro.sim.network import NetConfig
+from repro.train import Trainer, TrainerConfig
+
+NET = NetConfig(delay_min=0.005, delay_max=0.05, loss=0.05)
+CFG = CellConfig(n_acceptors=3, max_lease_time=30.0, lease_timespan=5.0,
+                 backoff_min=0.1, backoff_max=0.5)
+
+
+def test_lease_coordinated_training_with_failover(tmp_path):
+    """The full story: control plane elects a checkpoint writer; training
+    steps only checkpoint under the lease; when the writer dies another node
+    takes over and training resumes from its checkpoint."""
+    cell, coord = build_coordinated_cluster(CFG, n_workers=0, seed=0, net=NET)
+    n0, n1 = cell.proposers[0], cell.proposers[1]
+    for n in (n0, n1):
+        n.proposer.acquire(CKPT_RESOURCE, timespan=5.0, renew=True)
+    cell.env.run_until(3.0)
+    holder = cell.monitor.owner_of(CKPT_RESOURCE)
+    assert holder in (0, 1)
+    holder_node = cell.nodes[holder]
+    other_node = n1 if holder == 0 else n0
+
+    tiny = dataclasses.replace(reduced(get_config("qwen1.5-0.5b")), vocab_size=128)
+    tc = TrainerConfig(steps=4, batch_size=2, seq_len=16, ckpt_dir=str(tmp_path),
+                       ckpt_every=2, log_every=100)
+    # trainer 1 runs on the lease holder
+    tr1 = Trainer(tiny, tc, lease_guard=lambda: holder_node.proposer.is_owner(CKPT_RESOURCE),
+                  verbose=False)
+    tr1.run()
+    assert tr1.ckpt.saved_steps == [2, 4]
+
+    # holder crashes; the other control node takes the writer lease within
+    # T + backoff + a settle window (renewal flaps under 5% loss allowed)
+    holder_node.crash()
+    deadline = cell.env.now + CFG.lease_timespan + 10.0
+    while cell.env.now < deadline and not other_node.proposer.is_owner(CKPT_RESOURCE):
+        cell.env.run_until(cell.env.now + 0.5)
+    assert other_node.proposer.is_owner(CKPT_RESOURCE)
+    cell.monitor.assert_clean()
+
+    # trainer 2 resumes from the checkpoint and continues writing
+    tc2 = dataclasses.replace(tc, steps=6)
+    tr2 = Trainer(tiny, tc2, lease_guard=lambda: other_node.proposer.is_owner(CKPT_RESOURCE),
+                  verbose=False)
+    assert tr2.step == 4  # resumed where the dead writer left off
+    tr2.run()
+    assert 6 in tr2.ckpt.saved_steps
+
+
+def test_shard_leases_feed_the_loader():
+    """Worker's data loader reads exactly the shards its leases cover, and a
+    straggler's shards keep flowing through the survivor."""
+    cell, coord = build_coordinated_cluster(CFG, n_workers=2, seed=1, net=NET)
+    mgr = ShardLeaseManager(cell, n_shards=4, shard_timespan=4.0, scan_period=0.3)
+    w0 = mgr.add_worker(cell.proposers[3], target=2)
+    w1 = mgr.add_worker(cell.proposers[4], target=2)
+    cell.env.run_until(15.0)
+    assert len(w0.owned) == 2 and len(w1.owned) == 2
+
+    from repro.data import ShardedLoader, SyntheticTokens
+
+    gen = SyntheticTokens(512, 16, seed=0)
+    loader1 = ShardedLoader(gen, 4, 2, owned_shards=lambda: w1.owned)
+    batch = loader1.next_batch()
+    assert batch["tokens"].shape == (2, 16)
+
+    mgr.stall(w0.node.node_id)
+    w1.target = 4
+    deadline = cell.env.now + 60.0
+    while cell.env.now < deadline and len(w1.owned) < 4:
+        cell.env.run_until(cell.env.now + 1.0)
+    assert len(w1.owned) == 4  # absorbed the straggler's shards
+    b2 = loader1.next_batch()
+    assert b2["tokens"].shape == (2, 16)
+    cell.monitor.assert_clean()
+
+
+def test_dryrun_artifacts_complete_if_present():
+    """If the 512-chip dry-run has been run, its artifact set must cover all
+    40 cells x 2 meshes with no failures."""
+    import json
+    import pathlib
+
+    art_dir = pathlib.Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+    files = sorted(art_dir.glob("*.json")) if art_dir.exists() else []
+    files = [f for f in files if "_pod" in f.name and not f.name.startswith("opt")]
+    if len(files) < 80:
+        pytest.skip("dry-run artifacts not generated in this environment")
+    statuses = {}
+    for f in files:
+        a = json.loads(f.read_text())
+        statuses[(a["arch"], a["shape"], a["mesh"])] = a["status"]
+    assert len(statuses) >= 80
+    assert "failed" not in statuses.values()
+    n_ok = sum(1 for s in statuses.values() if s == "ok")
+    n_skip = sum(1 for s in statuses.values() if s == "skipped")
+    assert n_ok >= 66 and n_skip >= 14  # 7 long_500k skips per mesh
