@@ -1,0 +1,21 @@
+# One-command verify recipes (see ROADMAP.md "Tier-1 verify").
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: test test-fast bench-smoke bench dev-deps
+
+test:  ## tier-1: the full suite, fail-fast
+	python -m pytest -x -q
+
+test-fast:  ## skip the slow XLA-compile cross-validation tests
+	python -m pytest -x -q --ignore=tests/test_roofline_validation.py
+
+bench-smoke:  ## quick end-to-end signal: the vectorized lease-plane bench
+	python -c "from benchmarks.bench_lease_array import run; \
+	  [print(f'{n},{u:.2f},\"{d}\"') for n, u, d in run()]"
+
+bench:  ## every paper table (slow)
+	python -m benchmarks.run
+
+dev-deps:
+	pip install -r requirements-dev.txt

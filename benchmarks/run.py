@@ -11,6 +11,7 @@ def main() -> None:
         bench_contention,
         bench_extend_release,
         bench_failover,
+        bench_lease_array,
         bench_liveness,
         bench_memory,
         bench_throughput,
@@ -24,6 +25,7 @@ def main() -> None:
         ("s6_s7_extend_release", bench_extend_release),
         ("s8_memory", bench_memory),
         ("s8_throughput", bench_throughput),
+        ("s8_lease_array", bench_lease_array),
         ("s9_failover", bench_failover),
         ("roofline", roofline),
     ]

@@ -1,0 +1,44 @@
+"""Normalize ``Compiled.cost_analysis()`` across JAX versions.
+
+Older JAX returns a plain ``{metric: value}`` dict; newer JAX returns a
+list with one dict per device/partition (``[{...}]``). Everything downstream
+(roofline validation, dry-run artifacts) wants a single flat dict, so this
+is the one place that knows about both shapes.
+"""
+from __future__ import annotations
+
+
+def normalize_cost_analysis(ca) -> dict:
+    """Collapse a raw ``cost_analysis()`` result into one ``{str: float}``.
+
+    Accepts a dict, a list/tuple of dicts (summed entry-wise — per-device
+    costs add up; single-element lists are the common case), or None/empty.
+    """
+    if ca is None:
+        return {}
+    if isinstance(ca, dict):
+        return dict(ca)
+    if isinstance(ca, (list, tuple)):
+        out: dict = {}
+        for part in ca:
+            if not isinstance(part, dict):
+                continue
+            for k, v in part.items():
+                try:
+                    v = float(v)
+                except (TypeError, ValueError):
+                    out.setdefault(k, v)
+                    continue
+                if k == "optimal_seconds":
+                    # partitions run concurrently: the plane's optimal time
+                    # is the slowest partition, not the sum
+                    out[k] = max(out.get(k, 0.0), v)
+                else:
+                    out[k] = out.get(k, 0.0) + v
+        return out
+    raise TypeError(f"unrecognized cost_analysis() shape: {type(ca)!r}")
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict, whatever the JAX version."""
+    return normalize_cost_analysis(compiled.cost_analysis())

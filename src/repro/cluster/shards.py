@@ -150,3 +150,59 @@ class ShardLeaseManager:
             if o is not None:
                 out[k] = o
         return out
+
+
+# --------------------------------------------------------------------------
+# Fast path: at thousands of shards the per-object event sim is message-bound
+# (§8 note + the Paxos-in-the-cloud per-message-overhead result), so large
+# planes run on the dense lease_array engine instead — one batched array step
+# advances every shard cell per tick.
+
+ARRAY_DIRECTORY_MIN_SHARDS = 1024
+
+
+def build_shard_manager(
+    n_shards: int,
+    *,
+    cell: Optional[Cell] = None,
+    cfg: Optional[CellConfig] = None,
+    backend: str = "auto",
+    shard_timespan: Optional[float] = None,
+    scan_period: float = 1.0,
+    **array_kwargs,
+):
+    """Pick the shard-lease backend.
+
+    ``backend="event"`` -> :class:`ShardLeaseManager` over an existing
+    :class:`Cell` (faithful per-message simulation; needs ``cell``).
+    ``backend="array"`` -> :class:`~repro.lease_array.directory.LeaseArrayDirectory`
+    (vectorized plane; thousands of shards per batched step).
+    ``backend="auto"`` -> array when ``n_shards >= ARRAY_DIRECTORY_MIN_SHARDS``
+    or when no cell was supplied.
+    """
+    if backend == "auto":
+        backend = (
+            "array"
+            if cell is None or n_shards >= ARRAY_DIRECTORY_MIN_SHARDS
+            else "event"
+        )
+    if backend == "array":
+        from ..lease_array.directory import LeaseArrayDirectory
+
+        c = cfg or (cell.cfg if cell is not None else None)
+        if c is not None:
+            array_kwargs.setdefault("n_acceptors", c.n_acceptors)
+            # one directory tick ~ one scan period of the event manager, so
+            # the configured timespan carries over as lease_ticks
+            t = shard_timespan if shard_timespan is not None else c.lease_timespan
+            array_kwargs.setdefault(
+                "lease_ticks", max(int(round(t / scan_period)), 1)
+            )
+        return LeaseArrayDirectory(n_shards, **array_kwargs)
+    if backend != "event":
+        raise ValueError(f"unknown shard-lease backend {backend!r}")
+    if cell is None:
+        raise ValueError("event backend needs a built Cell")
+    return ShardLeaseManager(
+        cell, n_shards, shard_timespan=shard_timespan, scan_period=scan_period
+    )

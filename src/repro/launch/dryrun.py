@@ -19,6 +19,7 @@ import traceback
 
 import jax
 
+from ..analysis.costs import cost_analysis_dict
 from ..analysis.hlo import parse_collectives
 from ..configs import SHAPES, arch_ids, get_config, get_shape, supports_shape
 from ..models import frontends, transformer
@@ -121,7 +122,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool, zero1: bool = Fal
         compiled = lowered.compile()
         t_compile = time.time() - t0
 
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     mem = _memory_analysis_dict(compiled)
     trip = {"body": cfg.n_layers}
     coll = parse_collectives(compiled.as_text(), body_trip_counts=trip)

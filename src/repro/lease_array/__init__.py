@@ -1,0 +1,31 @@
+"""Vectorized lease plane (§8: PaxosLease for many resources).
+
+N independent PaxosLease cells x A acceptors x P proposers as dense int32
+arrays, advanced in lockstep one synchronous tick at a time:
+
+  state.py    — array layout, quarter-tick time base, (tick, proposer) ballots
+  ref.py      — pure-jnp oracle for one tick
+  kernel.py   — fused Pallas kernel (expiry+release+prepare+quorum+propose)
+  ops.py      — jit'd dispatch (jnp | pallas interpret | pallas TPU) + padding
+  engine.py   — stateful driver: per-tick step and lax.scan trace runner
+  trace.py    — fault/timing traces + the event-sim differential referee
+  directory.py— shard-ownership directory on top (cluster/shards.py fast path)
+"""
+from .engine import LeaseArrayEngine
+from .ops import lease_plane_step
+from .state import NO_PROPOSER, LeaseArrayState, ballot_of, init_state, lease_quarters
+from .trace import Trace, random_trace, replay_array, replay_event_sim
+
+__all__ = [
+    "LeaseArrayEngine",
+    "LeaseArrayState",
+    "NO_PROPOSER",
+    "Trace",
+    "ballot_of",
+    "init_state",
+    "lease_plane_step",
+    "lease_quarters",
+    "random_trace",
+    "replay_array",
+    "replay_event_sim",
+]

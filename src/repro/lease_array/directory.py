@@ -1,0 +1,149 @@
+"""LeaseArrayDirectory: shard-ownership on the vectorized lease plane.
+
+The event-driven ``cluster.shards.ShardLeaseManager`` tops out at a few
+hundred resources (every lease is Python objects trading one message at a
+time); this directory drives *thousands* of shard cells through one batched
+array step per tick. Same operational surface: workers with a target shard
+count, stall (straggler: leases silently expire), drain (graceful §7
+release), elastic retargeting, coverage/owner queries.
+
+Policy per tick (host-side numpy; the protocol itself runs in the array):
+  - active owners whose lease is inside the renew margin attempt an extend,
+  - draining or over-target workers release their extra shards,
+  - unowned cells are attempted by workers with a deficit, spread
+    round-robin with a per-worker stride to reduce collisions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .engine import LeaseArrayEngine
+from .state import NO_PROPOSER
+
+
+@dataclass
+class ArrayWorker:
+    slot: int  # proposer index inside the array plane
+    target: int
+    stalled: bool = False
+    draining: bool = False
+
+
+class LeaseArrayDirectory:
+    def __init__(
+        self,
+        n_shards: int,
+        *,
+        n_acceptors: int = 5,
+        lease_ticks: int = 6,
+        renew_margin: int | None = None,
+        max_workers: int = 32,
+        backend: str = "jnp",
+    ) -> None:
+        self.n_shards = n_shards
+        self.max_workers = max_workers
+        self.renew_margin = (
+            renew_margin if renew_margin is not None else max(lease_ticks // 2, 1)
+        )
+        self.engine = LeaseArrayEngine(
+            n_shards,
+            n_acceptors=n_acceptors,
+            n_proposers=max_workers,
+            lease_ticks=lease_ticks,
+            backend=backend,
+        )
+        self.workers: dict[int, ArrayWorker] = {}
+        self._owners = np.full(n_shards, NO_PROPOSER, np.int32)
+
+    # ------------------------------------------------------------------ API
+    def add_worker(self, worker_id: int, target: int) -> ArrayWorker:
+        if worker_id in self.workers:
+            raise ValueError(f"worker {worker_id} already registered")
+        if len(self.workers) >= self.max_workers:
+            raise ValueError(f"plane sized for {self.max_workers} workers")
+        slot = len(self.workers)
+        w = ArrayWorker(slot=slot, target=target)
+        self.workers[worker_id] = w
+        return w
+
+    def set_target(self, worker_id: int, target: int) -> None:
+        self.workers[worker_id].target = target
+
+    def stall(self, worker_id: int) -> None:
+        """Straggler: stops renewing; its leases expire after the timespan."""
+        self.workers[worker_id].stalled = True
+
+    def unstall(self, worker_id: int) -> None:
+        self.workers[worker_id].stalled = False
+
+    def drain(self, worker_id: int) -> None:
+        """Graceful scale-down: release everything over the next tick (§7)."""
+        w = self.workers[worker_id]
+        w.draining = True
+        w.target = 0
+
+    # ------------------------------------------------------------ the tick
+    def tick(self, n: int = 1) -> np.ndarray:
+        for _ in range(n):
+            self._owners = self._tick_once()
+        return self._owners
+
+    def _tick_once(self) -> np.ndarray:
+        attempt = np.full(self.n_shards, NO_PROPOSER, np.int32)
+        release = np.full(self.n_shards, NO_PROPOSER, np.int32)
+        owners = self._owners
+        ticks_left = self.engine.ticks_left()
+        by_slot = {w.slot: w for w in self.workers.values()}
+        counts = np.bincount(
+            owners[owners >= 0], minlength=self.engine.n_proposers
+        )
+
+        deficits: dict[int, int] = {}
+        for w in self.workers.values():
+            if w.stalled:
+                continue  # a true straggler says nothing — leases just lapse
+            owned = int(counts[w.slot])
+            if w.draining or owned > w.target:
+                mine = np.flatnonzero(owners == w.slot)
+                n_shed = owned if w.draining else owned - w.target
+                release[mine[len(mine) - n_shed:]] = w.slot  # shed highest k
+            if owned < w.target:
+                deficits[w.slot] = w.target - owned
+
+        # owners inside the renew margin extend (stalled/draining don't)
+        for cell in np.flatnonzero(
+            (owners >= 0) & (ticks_left <= self.renew_margin)
+        ):
+            w = by_slot.get(int(owners[cell]))
+            if w is not None and not w.stalled and not w.draining:
+                if release[cell] != w.slot:  # not shedding this one
+                    attempt[cell] = w.slot
+
+        # spread unowned cells over deficit workers round-robin (vectorized:
+        # the per-cell Python loop would rival the batched step itself)
+        if deficits:
+            slots = np.array(sorted(deficits), np.int32)
+            wants = np.array([deficits[int(s)] for s in slots])
+            rank = np.concatenate([np.arange(w) for w in wants])
+            seq = np.repeat(slots, wants)[np.argsort(rank, kind="stable")]
+            free = np.flatnonzero((owners < 0) & (attempt < 0))
+            k = min(len(seq), len(free))
+            attempt[free[:k]] = seq[:k]
+        return self.engine.step(attempt, release).astype(np.int32)
+
+    # -------------------------------------------------------------- queries
+    def coverage(self) -> float:
+        return float((self._owners >= 0).mean()) if self.n_shards else 0.0
+
+    def owner_map(self) -> dict[int, int]:
+        slot_to_id = {w.slot: wid for wid, w in self.workers.items()}
+        return {
+            int(k): slot_to_id[int(s)]
+            for k, s in enumerate(self._owners)
+            if s >= 0 and int(s) in slot_to_id
+        }
+
+    def owned_count(self, worker_id: int) -> int:
+        return int((self._owners == self.workers[worker_id].slot).sum())

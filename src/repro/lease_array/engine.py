@@ -1,0 +1,136 @@
+"""LeaseArrayEngine: a stateful driver over the vectorized lease plane.
+
+Two modes:
+  - ``step(...)``    — advance one tick (host-driven; the directory uses it)
+  - ``run_trace``    — ``jax.lax.scan`` over a whole [T, ...] trace in one
+                       jitted call (the bulk/benchmark path); independent
+                       planes batch further with ``jax.vmap`` (see
+                       ``scan_fn``'s pytree-in/pytree-out signature and
+                       tests/test_lease_array_engine.py::test_vmap_planes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ops import lease_plane_step
+from .ref import owner_row
+from .state import NO_PROPOSER, QUARTERS, LeaseArrayState, init_state, lease_quarters
+
+
+@functools.lru_cache(maxsize=None)
+def _trace_scanner(majority: int, lease_q4: int, backend: str):
+    """Jitted (state, t0, attempts, releases, acc_up) -> (state, owners, counts)."""
+
+    def scan_fn(state, t0, attempts, releases, acc_up):
+        def body(carry, xs):
+            st, t = carry
+            att, rel, up = xs
+            st, count = lease_plane_step(
+                st, t, att, rel, up,
+                majority=majority, lease_q4=lease_q4, backend=backend,
+            )
+            return (st, t + 1), (owner_row(st), count)
+
+        (state, _), (owners, counts) = jax.lax.scan(
+            body, (state, t0), (attempts, releases, acc_up)
+        )
+        return state, owners, counts
+
+    return jax.jit(scan_fn)
+
+
+class LeaseArrayEngine:
+    def __init__(
+        self,
+        n_cells: int,
+        *,
+        n_acceptors: int = 5,
+        n_proposers: int = 8,
+        lease_ticks: int = 3,
+        backend: str = "jnp",
+    ) -> None:
+        if n_acceptors < 1 or n_proposers < 1:
+            raise ValueError("need at least one acceptor and one proposer")
+        self.n_cells = n_cells
+        self.n_acceptors = n_acceptors
+        self.n_proposers = n_proposers
+        self.majority = n_acceptors // 2 + 1
+        self.lease_ticks = lease_ticks
+        self.lease_q4 = lease_quarters(lease_ticks)
+        self.backend = backend
+        self.state = init_state(n_cells, n_acceptors, n_proposers)
+        self.t = 0
+        self.last_owner_count = jnp.zeros(n_cells, jnp.int32)
+
+    # ------------------------------------------------------------ one tick
+    def step(self, attempt=None, release=None, acc_up=None) -> np.ndarray:
+        """Advance one tick; returns the per-cell owner row (id or -1)."""
+        attempt = self._row(attempt)
+        release = self._row(release)
+        acc_up = (
+            jnp.ones(self.n_acceptors, jnp.int32) if acc_up is None
+            else jnp.asarray(acc_up)
+        )
+        self.state, self.last_owner_count = lease_plane_step(
+            self.state, self.t, attempt, release, acc_up,
+            majority=self.majority, lease_q4=self.lease_q4, backend=self.backend,
+        )
+        self.t += 1
+        return np.asarray(owner_row(self.state))
+
+    # ------------------------------------------------------------ bulk path
+    def run_trace(self, attempts, releases=None, acc_up=None):
+        """Scan a [T, N] trace in one jitted call.
+
+        Returns (owners [T, N], owner_counts [T, N]) as numpy; the engine's
+        state/tick advance past the trace.
+        """
+        attempts = jnp.asarray(attempts, jnp.int32)
+        T = attempts.shape[0]
+        releases = (
+            jnp.full((T, self.n_cells), NO_PROPOSER, jnp.int32)
+            if releases is None else jnp.asarray(releases, jnp.int32)
+        )
+        acc_up = (
+            jnp.ones((T, self.n_acceptors), jnp.int32)
+            if acc_up is None else jnp.asarray(acc_up).astype(jnp.int32)
+        )
+        scanner = _trace_scanner(self.majority, self.lease_q4, self.backend)
+        self.state, owners, counts = scanner(
+            self.state, jnp.int32(self.t), attempts, releases, acc_up
+        )
+        self.t += int(T)
+        if T > 0:
+            self.last_owner_count = counts[-1]
+        return np.asarray(owners), np.asarray(counts)
+
+    # ------------------------------------------------------------- queries
+    def owners(self) -> np.ndarray:
+        return np.asarray(owner_row(self.state))
+
+    def ticks_left(self) -> np.ndarray:
+        """Per cell: whole ticks of ownership remaining (0 if unowned)."""
+        expiry = np.asarray(
+            jnp.max(
+                jnp.where(self.state.owner_mask > 0, self.state.owner_expiry, 0),
+                axis=0,
+            )
+        )
+        return np.maximum(expiry - QUARTERS * self.t, 0) // QUARTERS
+
+    def _row(self, row) -> jnp.ndarray:
+        if row is None:
+            return jnp.full(self.n_cells, NO_PROPOSER, jnp.int32)
+        arr = np.asarray(row, np.int32)
+        if arr.size and int(arr.max()) >= self.n_proposers:
+            # an out-of-range id would lease cells to a proposer the plane
+            # has no row for — a ghost owner nobody believes in
+            raise ValueError(
+                f"proposer id {int(arr.max())} out of range "
+                f"(plane has {self.n_proposers} proposers)"
+            )
+        return jnp.asarray(arr)

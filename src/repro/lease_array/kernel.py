@@ -1,0 +1,177 @@
+"""Pallas TPU kernel for the lease-plane tick: fused expiry + release +
+prepare/quorum-count + propose/state-update in a single VMEM pass.
+
+Grid: (n_cell_blocks,) — each program owns a ``block_n``-wide column slice of
+every state array. The acceptor (A) and proposer (P) axes ride on sublanes,
+so quorum counting (`sum over A`) and owner lookups (`any over P`) are
+sublane reductions; the cell axis N is the 128-lane axis. All state is
+int32, all updates are `jnp.where` selects — pure VPU work, no MXU.
+
+The tick scalar lives in SMEM (it is traced — `lax.scan` drives it); the
+protocol constants (majority, lease length, P) are compile-time closure
+constants, mirroring how kernels/flash_attention bakes its block geometry.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU backend name moved across versions (same guard as flash_attention)
+    from jax.experimental.pallas import tpu as pltpu
+
+    _SMEM = pltpu.SMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _SMEM = None
+
+from .state import NO_PROPOSER, QUARTERS, LeaseArrayState
+
+
+def _lease_tick_kernel(
+    t_ref,            # (1, 1) int32 in SMEM — current tick
+    promised_ref,     # (A, bn)
+    acc_ballot_ref,   # (A, bn)
+    acc_prop_ref,     # (A, bn)
+    acc_expiry_ref,   # (A, bn)
+    own_mask_ref,     # (P, bn)
+    own_expiry_ref,   # (P, bn)
+    own_ballot_ref,   # (P, bn)
+    attempt_ref,      # (1, bn)
+    release_ref,      # (1, bn)
+    up_ref,           # (A, bn) int32 0/1
+    # outputs
+    o_promised_ref, o_acc_ballot_ref, o_acc_prop_ref, o_acc_expiry_ref,
+    o_own_mask_ref, o_own_expiry_ref, o_own_ballot_ref, o_count_ref,
+    *, majority: int, lease_q4: int, n_proposers: int,
+):
+    P = n_proposers
+    t = t_ref[0, 0]
+    t4 = QUARTERS * t
+    shape_p = own_mask_ref.shape
+    p_ids = jax.lax.broadcasted_iota(jnp.int32, shape_p, 0)   # [P, bn]
+    up = up_ref[...] > 0                                      # [A, bn]
+
+    # -- 1. expiry
+    acc_live = (acc_ballot_ref[...] > 0) & (acc_expiry_ref[...] > t4)
+    acc_ballot = jnp.where(acc_live, acc_ballot_ref[...], 0)
+    acc_prop = jnp.where(acc_live, acc_prop_ref[...], NO_PROPOSER)
+    acc_expiry = jnp.where(acc_live, acc_expiry_ref[...], 0)
+    own_live = (own_mask_ref[...] > 0) & (own_expiry_ref[...] > t4)
+    own_mask = own_live.astype(jnp.int32)
+    own_expiry = jnp.where(own_live, own_expiry_ref[...], 0)
+    own_ballot = jnp.where(own_live, own_ballot_ref[...], 0)
+
+    # -- 2. release
+    rel = release_ref[...]                                    # [1, bn]
+    rel_owner = (p_ids == rel) & (own_mask > 0)               # [P, bn]
+    rel_ballot = jnp.sum(jnp.where(rel_owner, own_ballot, 0), axis=0, keepdims=True)
+    own_mask = jnp.where(rel_owner, 0, own_mask)
+    discard = up & (rel_ballot > 0) & (acc_ballot == rel_ballot)
+    acc_ballot = jnp.where(discard, 0, acc_ballot)
+    acc_prop = jnp.where(discard, NO_PROPOSER, acc_prop)
+    acc_expiry = jnp.where(discard, 0, acc_expiry)
+
+    # -- 3. prepare + quorum count
+    att = attempt_ref[...]                                    # [1, bn]
+    has_att = att >= 0
+    ballot = jnp.where(has_att, (t + 1) * P + att, 0)
+    att_owns = jnp.sum(
+        jnp.where((p_ids == att) & (own_mask > 0), 1, 0), axis=0, keepdims=True
+    ) > 0
+    grant = up & has_att & (ballot >= promised_ref[...])
+    is_open = grant & ((acc_ballot == 0) | ((acc_prop == att) & att_owns))
+    opens = jnp.sum(is_open.astype(jnp.int32), axis=0, keepdims=True)
+    won = opens >= majority
+    promised = jnp.where(grant, ballot, promised_ref[...])
+
+    # -- 4. propose + proposer update
+    accept = grant & won
+    acc_ballot = jnp.where(accept, ballot, acc_ballot)
+    acc_prop = jnp.where(accept, att, acc_prop)
+    acc_expiry = jnp.where(accept, t4 + lease_q4, acc_expiry)
+    new_owner = (p_ids == att) & won
+    own_mask = jnp.where(new_owner, 1, own_mask)
+    own_expiry = jnp.where(new_owner, t4 + lease_q4, own_expiry)
+    own_ballot = jnp.where(new_owner, ballot, own_ballot)
+
+    o_promised_ref[...] = promised
+    o_acc_ballot_ref[...] = acc_ballot
+    o_acc_prop_ref[...] = acc_prop
+    o_acc_expiry_ref[...] = acc_expiry
+    o_own_mask_ref[...] = own_mask
+    o_own_expiry_ref[...] = own_expiry
+    o_own_ballot_ref[...] = own_ballot
+    o_count_ref[...] = jnp.sum(own_mask, axis=0, keepdims=True)
+
+
+def lease_tick_pallas(
+    state: LeaseArrayState,
+    t,         # scalar int32
+    attempt,   # [N] int32
+    release,   # [N] int32
+    acc_up,    # [A] bool/int32
+    *,
+    majority: int,
+    lease_q4: int,
+    block_n: int = 512,
+    interpret: bool = True,  # False on real TPUs
+) -> tuple[LeaseArrayState, jax.Array]:
+    """One fused tick over all N cells; N must be a multiple of ``block_n``
+    (ops.py pads). Returns (new_state, owner_count[N])."""
+    A, N = state.highest_promised.shape
+    P = state.owner_mask.shape[0]
+    block_n = min(block_n, N)
+    assert N % block_n == 0, "pad the cell axis to a block multiple (ops.py)"
+    grid = (N // block_n,)
+
+    kernel = functools.partial(
+        _lease_tick_kernel, majority=majority, lease_q4=lease_q4, n_proposers=P,
+    )
+    arow = lambda r: jnp.asarray(r, jnp.int32).reshape(1, N)
+    up2d = jnp.broadcast_to(
+        jnp.asarray(acc_up).astype(jnp.int32)[:, None], (A, N)
+    )
+    t2d = jnp.asarray(t, jnp.int32).reshape(1, 1)
+
+    spec_a = pl.BlockSpec((A, block_n), lambda i: (0, i))
+    spec_p = pl.BlockSpec((P, block_n), lambda i: (0, i))
+    spec_r = pl.BlockSpec((1, block_n), lambda i: (0, i))
+    spec_t = (
+        pl.BlockSpec(memory_space=_SMEM)
+        if _SMEM is not None
+        else pl.BlockSpec((1, 1), lambda i: (0, 0))
+    )
+    sds = jax.ShapeDtypeStruct
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            spec_t,
+            spec_a, spec_a, spec_a, spec_a,
+            spec_p, spec_p, spec_p,
+            spec_r, spec_r, spec_a,
+        ],
+        out_specs=[
+            spec_a, spec_a, spec_a, spec_a,
+            spec_p, spec_p, spec_p,
+            spec_r,
+        ],
+        out_shape=[
+            sds((A, N), jnp.int32), sds((A, N), jnp.int32),
+            sds((A, N), jnp.int32), sds((A, N), jnp.int32),
+            sds((P, N), jnp.int32), sds((P, N), jnp.int32),
+            sds((P, N), jnp.int32), sds((1, N), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        t2d,
+        state.highest_promised, state.accepted_ballot,
+        state.accepted_proposer, state.lease_expiry,
+        state.owner_mask, state.owner_expiry, state.owner_ballot,
+        arow(attempt), arow(release), up2d,
+    )
+    new_state = LeaseArrayState(*outs[:7])
+    return new_state, outs[7].reshape(N)

@@ -1,0 +1,73 @@
+"""jit'd public entry points for the lease plane: backend dispatch
+(pure-jnp oracle vs fused Pallas kernel) plus cell-axis padding so callers
+can use any N. Mirrors the kernels/flash_attention kernel/ops/ref layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import lease_tick_pallas
+from .ref import lease_step_ref
+from .state import NO_PROPOSER, LeaseArrayState
+
+BACKENDS = ("jnp", "pallas", "pallas_tpu")
+
+
+def _pad_cells(state: LeaseArrayState, attempt, release, multiple: int):
+    n = state.n_cells
+    pad = (-n) % multiple
+    if pad == 0:
+        return state, attempt, release, n
+    state = LeaseArrayState(*(
+        jnp.pad(arr, ((0, 0), (0, pad))) for arr in state
+    ))
+    # padded cells never attempt, never release, never own anything
+    attempt = jnp.pad(attempt, (0, pad), constant_values=NO_PROPOSER)
+    release = jnp.pad(release, (0, pad), constant_values=NO_PROPOSER)
+    return state, attempt, release, n
+
+
+@functools.partial(
+    jax.jit, static_argnames=("majority", "lease_q4", "backend", "block_n")
+)
+def lease_plane_step(
+    state: LeaseArrayState,
+    t,
+    attempt,
+    release,
+    acc_up,
+    *,
+    majority: int,
+    lease_q4: int,
+    backend: str = "jnp",
+    block_n: int = 512,
+) -> tuple[LeaseArrayState, jax.Array]:
+    """Advance all cells one synchronous tick.
+
+    backend: "jnp" (reference), "pallas" (kernel, interpret mode — runs
+    anywhere), "pallas_tpu" (compiled kernel, real TPUs).
+    Returns (new_state, owner_count[N]) — owner_count is the per-cell number
+    of proposers who believe they own it (>1 would be a §4 violation).
+    """
+    t = jnp.asarray(t, jnp.int32)
+    attempt = jnp.asarray(attempt, jnp.int32)
+    release = jnp.asarray(release, jnp.int32)
+    if backend == "jnp":
+        return lease_step_ref(
+            state, t, attempt, release, acc_up,
+            majority=majority, lease_q4=lease_q4,
+        )
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown lease-plane backend {backend!r}")
+    padded, attempt, release, n = _pad_cells(state, attempt, release, block_n)
+    new_state, count = lease_tick_pallas(
+        padded, t, attempt, release, acc_up,
+        majority=majority, lease_q4=lease_q4,
+        block_n=block_n, interpret=(backend == "pallas"),
+    )
+    if new_state.n_cells != n:
+        new_state = LeaseArrayState(*(a[:, :n] for a in new_state))
+        count = count[:n]
+    return new_state, count

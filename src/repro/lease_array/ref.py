@@ -1,0 +1,114 @@
+"""Pure-jnp oracle for one synchronous tick of the vectorized lease plane.
+
+Semantics of a tick (all N cells in lockstep, mirroring the event engine on
+a zero-delay network — `trace.replay_event_sim` is the bit-for-bit referee):
+
+  1. expiry     — accepted proposals and ownership beliefs whose quarter-tick
+                  deadline has passed are cleared (acceptor timers run even
+                  while the acceptor is unreachable, exactly like the event
+                  sim where `set_down` drops messages but not local timers).
+  2. release    — §7: a releasing proposer first stops believing it owns,
+                  then *reachable* acceptors discard iff the accepted ballot
+                  matches the ballot the lease was won under.
+  3. prepare    — §3 step 2: each attempting proposer (at most one per cell
+                  per tick; ballots ordered by (tick, proposer)) gets a
+                  promise from every reachable acceptor with
+                  ``ballot >= highest_promised`` (equal accepted — the ≤
+                  boundary). A response counts as *open* iff the acceptor
+                  holds no lease, or holds this proposer's own lease while
+                  the proposer still believes it owns (§6 extend).
+  4. propose    — §3 step 4: with a majority of opens, every granting
+                  acceptor accepts (discarding any previous proposal) and
+                  restarts its lease timer; the proposer starts its own
+                  timer and becomes owner. No majority -> nothing changes
+                  beyond the raised promises.
+
+All of it is branch-free elementwise/sublane-reduction work — the Pallas
+kernel (`kernel.py`) fuses the same dataflow into one VMEM pass.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .state import NO_PROPOSER, QUARTERS, LeaseArrayState
+
+
+def lease_step_ref(
+    state: LeaseArrayState,
+    t,                # scalar int32 tick
+    attempt,          # [N] int32 proposer id attempting each cell (-1 = none)
+    release,          # [N] int32 proposer id releasing each cell (-1 = none)
+    acc_up,           # [A] bool/int32 acceptor reachability this tick
+    *,
+    majority: int,
+    lease_q4: int,    # lease timespan in quarter-ticks
+) -> tuple[LeaseArrayState, jnp.ndarray]:
+    """Advance every cell one tick; returns (new_state, owner_count[N])."""
+    P = state.n_proposers
+    t4 = QUARTERS * t
+    p_ids = jnp.arange(P, dtype=jnp.int32)[:, None]         # [P, 1]
+    up = jnp.asarray(acc_up).astype(jnp.bool_)[:, None]     # [A, 1]
+
+    # -- 1. expiry ---------------------------------------------------------
+    acc_live = (state.accepted_ballot > 0) & (state.lease_expiry > t4)
+    accepted_ballot = jnp.where(acc_live, state.accepted_ballot, 0)
+    accepted_proposer = jnp.where(acc_live, state.accepted_proposer, NO_PROPOSER)
+    lease_expiry = jnp.where(acc_live, state.lease_expiry, 0)
+    own_live = (state.owner_mask > 0) & (state.owner_expiry > t4)
+    owner_mask = own_live.astype(jnp.int32)
+    owner_expiry = jnp.where(own_live, state.owner_expiry, 0)
+    owner_ballot = jnp.where(own_live, state.owner_ballot, 0)
+
+    # -- 2. release (§7) ---------------------------------------------------
+    rel = jnp.asarray(release, jnp.int32)[None, :]           # [1, N]
+    rel_owner = (p_ids == rel) & (owner_mask > 0)            # [P, N]
+    rel_ballot = jnp.sum(jnp.where(rel_owner, owner_ballot, 0), axis=0, keepdims=True)
+    owner_mask = jnp.where(rel_owner, 0, owner_mask)
+    discard = up & (rel_ballot > 0) & (accepted_ballot == rel_ballot)  # [A, N]
+    accepted_ballot = jnp.where(discard, 0, accepted_ballot)
+    accepted_proposer = jnp.where(discard, NO_PROPOSER, accepted_proposer)
+    lease_expiry = jnp.where(discard, 0, lease_expiry)
+
+    # -- 3. prepare (§3.2) -------------------------------------------------
+    att = jnp.asarray(attempt, jnp.int32)[None, :]           # [1, N]
+    has_att = att >= 0
+    ballot = jnp.where(has_att, (t + 1) * P + att, 0)        # [1, N]
+    att_owns = jnp.any((p_ids == att) & (owner_mask > 0), axis=0, keepdims=True)
+    grant = up & has_att & (ballot >= state.highest_promised)
+    is_open = grant & (
+        (accepted_ballot == 0) | ((accepted_proposer == att) & att_owns)
+    )
+    opens = jnp.sum(is_open.astype(jnp.int32), axis=0, keepdims=True)  # [1, N]
+    won = opens >= majority
+    highest_promised = jnp.where(grant, ballot, state.highest_promised)
+
+    # -- 4. propose (§3.4) + proposer update -------------------------------
+    accept = grant & won
+    accepted_ballot = jnp.where(accept, ballot, accepted_ballot)
+    accepted_proposer = jnp.where(accept, att, accepted_proposer)
+    lease_expiry = jnp.where(accept, t4 + lease_q4, lease_expiry)
+    new_owner = (p_ids == att) & won                          # [P, N]
+    owner_mask = jnp.where(new_owner, 1, owner_mask)
+    owner_expiry = jnp.where(new_owner, t4 + lease_q4, owner_expiry)
+    owner_ballot = jnp.where(new_owner, ballot, owner_ballot)
+
+    new_state = LeaseArrayState(
+        highest_promised=highest_promised,
+        accepted_ballot=accepted_ballot,
+        accepted_proposer=accepted_proposer,
+        lease_expiry=lease_expiry,
+        owner_mask=owner_mask,
+        owner_expiry=owner_expiry,
+        owner_ballot=owner_ballot,
+    )
+    owner_count = jnp.sum(owner_mask, axis=0)                 # [N]
+    return new_state, owner_count
+
+
+def owner_row(state: LeaseArrayState) -> jnp.ndarray:
+    """Per-cell owner id (or NO_PROPOSER). With the at-most-one-owner
+    invariant intact there is at most one set bit per column."""
+    p_ids = jnp.arange(state.n_proposers, dtype=jnp.int32)[:, None]
+    return jnp.max(
+        jnp.where(state.owner_mask > 0, p_ids, NO_PROPOSER), axis=0
+    )

@@ -1,0 +1,75 @@
+"""Dense state of a vectorized lease plane: N independent PaxosLease cells
+x A acceptors x P proposers as int32 arrays (§8: "leases for many resources").
+
+Layout note: the ISSUE-level view is ``highest_promised[N, A]`` etc.; we
+store the transpose ``[A, N]`` (and ``[P, N]`` for the proposer plane) so the
+cell axis N lands on TPU lanes (128-wide) and the tiny acceptor/proposer axes
+on sublanes — reductions over acceptors become cheap sublane reductions.
+
+Time is integer *quarter-ticks*: protocol rounds run at integer ticks
+(``t4 = 4*t``) while lease expiries land at ``t4 + 4*L + 1`` — strictly
+between ticks, so "expired at tick boundary" is never ambiguous, and the
+event-driven ``core/`` engine reproduces the exact same schedule with
+``T = L + 0.25`` sim-seconds (see ``lease_array.trace``).
+
+Ballot numbers are globally unique and totally ordered by (tick, proposer):
+``ballot(t, p) = (t+1)*P + p`` — the array-plane analogue of the paper's
+(run counter | proposer id) composition. 0 means "no ballot".
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NO_PROPOSER = -1  # "no owner / no attempt" sentinel in proposer-id arrays
+QUARTERS = 4  # quarter-ticks per tick
+
+
+class LeaseArrayState(NamedTuple):
+    """One lease plane. All arrays int32; see module docstring for layout."""
+
+    highest_promised: jax.Array  # [A, N] highest promised ballot (0 = none)
+    accepted_ballot: jax.Array   # [A, N] ballot of the accepted proposal (0 = none)
+    accepted_proposer: jax.Array  # [A, N] proposer id of the accepted lease (-1 = none)
+    lease_expiry: jax.Array      # [A, N] quarter-tick at which the accepted lease expires
+    owner_mask: jax.Array        # [P, N] 1 where proposer p believes it owns cell n
+    owner_expiry: jax.Array      # [P, N] quarter-tick at which that belief expires
+    owner_ballot: jax.Array      # [P, N] ballot the ownership was won under
+
+    @property
+    def n_acceptors(self) -> int:
+        return self.highest_promised.shape[0]
+
+    @property
+    def n_proposers(self) -> int:
+        return self.owner_mask.shape[0]
+
+    @property
+    def n_cells(self) -> int:
+        return self.highest_promised.shape[1]
+
+
+def init_state(n_cells: int, n_acceptors: int, n_proposers: int) -> LeaseArrayState:
+    za = jnp.zeros((n_acceptors, n_cells), jnp.int32)
+    zp = jnp.zeros((n_proposers, n_cells), jnp.int32)
+    return LeaseArrayState(
+        highest_promised=za,
+        accepted_ballot=za,
+        accepted_proposer=jnp.full_like(za, NO_PROPOSER),
+        lease_expiry=za,
+        owner_mask=zp,
+        owner_expiry=zp,
+        owner_ballot=zp,
+    )
+
+
+def lease_quarters(lease_ticks: int) -> int:
+    """Lease timespan in quarter-ticks: L ticks + 1 quarter (see docstring)."""
+    return QUARTERS * int(lease_ticks) + 1
+
+
+def ballot_of(t, proposer, n_proposers: int):
+    """Globally unique ballot for an attempt by ``proposer`` at tick ``t``."""
+    return (t + 1) * n_proposers + proposer

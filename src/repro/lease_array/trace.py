@@ -1,0 +1,158 @@
+"""Fault/timing traces replayable through BOTH lease engines.
+
+A trace is the *entire* timing of the world — which proposer attempts which
+cell at which tick, who releases, which acceptors are unreachable. Replaying
+one trace through the event-driven ``core/`` engine and through the
+vectorized ``lease_array`` plane must produce identical per-tick ownership
+(tests/test_lease_array_differential.py asserts it, plus §4 at-most-one-owner
+at every tick).
+
+Exact-match construction (why this works, not just approximately):
+
+  - zero-delay network -> a whole prepare/propose round resolves at one
+    simulation instant, FIFO event order = call order;
+  - one attempting proposer per (cell, tick) -> no same-instant races;
+  - lease timespan ``T = lease_ticks + 0.25`` sim-seconds -> every expiry
+    lands strictly *between* integer ticks, so tick-boundary sampling is
+    never ambiguous (the array plane's quarter-tick arithmetic encodes the
+    same schedule as ``4*L + 1`` quarters);
+  - event-sim ballots are pinned to ``run = tick + 1`` per attempt, so both
+    engines order ballots identically by (tick, proposer id);
+  - acceptor downtime is *network* unreachability: messages drop, local
+    expiry timers keep running — in both engines.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..configs.paxoslease_cell import CellConfig
+from ..core.cell import build_cell
+from ..sim.network import NetConfig
+from .state import NO_PROPOSER
+
+TICK_EPS = 0.1  # sample offset into a tick; < 0.25 so no expiry slips in
+
+
+def cell_resource(n: int) -> str:
+    return f"cell:{n}"
+
+
+@dataclass
+class Trace:
+    n_cells: int
+    n_acceptors: int
+    n_proposers: int
+    lease_ticks: int
+    attempts: np.ndarray  # [T, N] int32: proposer attempting (or -1)
+    releases: np.ndarray  # [T, N] int32: proposer releasing (or -1)
+    acc_up: np.ndarray    # [T, A] bool: acceptor reachability
+
+    @property
+    def n_ticks(self) -> int:
+        return self.attempts.shape[0]
+
+
+def random_trace(
+    seed: int,
+    *,
+    n_ticks: int = 200,
+    n_cells: int = 16,
+    n_acceptors: int = 5,
+    n_proposers: int = 4,
+    lease_ticks: int = 3,
+    p_attempt: float = 0.35,
+    p_release: float = 0.05,
+    p_down_flip: float = 0.02,
+) -> Trace:
+    """Randomized trace: per (tick, cell) at most one attempting proposer
+    (the no-same-instant-race construction above); releases name a random
+    proposer (a no-op unless it actually owns — both engines agree on
+    no-ops too); acceptor up/down flips as a Markov chain so outages are
+    sticky, exercising quorum loss and recovery."""
+    rng = np.random.default_rng(seed)
+    attempts = np.where(
+        rng.random((n_ticks, n_cells)) < p_attempt,
+        rng.integers(0, n_proposers, (n_ticks, n_cells)),
+        NO_PROPOSER,
+    ).astype(np.int32)
+    releases = np.where(
+        rng.random((n_ticks, n_cells)) < p_release,
+        rng.integers(0, n_proposers, (n_ticks, n_cells)),
+        NO_PROPOSER,
+    ).astype(np.int32)
+    acc_up = np.empty((n_ticks, n_acceptors), bool)
+    up = np.ones(n_acceptors, bool)
+    for t in range(n_ticks):
+        up ^= rng.random(n_acceptors) < p_down_flip
+        acc_up[t] = up
+    return Trace(
+        n_cells, n_acceptors, n_proposers, lease_ticks,
+        attempts, releases, acc_up,
+    )
+
+
+def replay_array(trace: Trace, *, backend: str = "jnp"):
+    """Owners [T, N] + per-tick owner counts via the vectorized plane."""
+    from .engine import LeaseArrayEngine
+
+    eng = LeaseArrayEngine(
+        trace.n_cells,
+        n_acceptors=trace.n_acceptors,
+        n_proposers=trace.n_proposers,
+        lease_ticks=trace.lease_ticks,
+        backend=backend,
+    )
+    return eng.run_trace(trace.attempts, trace.releases, trace.acc_up)
+
+
+def replay_event_sim(trace: Trace, *, strict_monitor: bool = True) -> np.ndarray:
+    """Owners [T, N] by replaying the trace through the event-driven core/
+    engine (dedicated acceptor ensemble + detached proposer fleet, zero-delay
+    deterministic network). The trace is the only source of timing: renewal
+    is disabled and autonomous retries are quiesced after every tick."""
+    cfg = CellConfig(
+        n_acceptors=trace.n_acceptors,
+        max_lease_time=trace.lease_ticks + 10.0,
+        lease_timespan=trace.lease_ticks + 0.25,
+    )
+    cell = build_cell(
+        cfg,
+        n_proposers=trace.n_proposers,
+        seed=0,
+        net=NetConfig(delay_min=0.0, delay_max=0.0),
+        strict_monitor=strict_monitor,
+        combined_roles=False,
+    )
+    acc_addrs = [n.addr for n in cell.nodes if n.acceptor is not None]
+    props = {n.node_id: n.proposer for n in cell.nodes if n.proposer is not None}
+    owners = np.full((trace.n_ticks, trace.n_cells), NO_PROPOSER, np.int32)
+    up_now = np.ones(trace.n_acceptors, bool)
+
+    for t in range(trace.n_ticks):
+        cell.env.run_until(float(t))  # in-between expiries fire here
+        for a, addr in enumerate(acc_addrs):
+            if trace.acc_up[t, a] != up_now[a]:
+                cell.env.network.set_down(addr, not trace.acc_up[t, a])
+                up_now[a] = trace.acc_up[t, a]
+        # releases strictly before attempts (same order as the array step)
+        for n in np.flatnonzero(trace.releases[t] >= 0):
+            props[int(trace.releases[t, n])].release(cell_resource(n))
+        for n in np.flatnonzero(trace.attempts[t] >= 0):
+            p = props[int(trace.attempts[t, n])]
+            st = p._state(cell_resource(n))
+            st.want, st.renew, st.timespan = True, False, cfg.lease_timespan
+            p.ballots.run = t  # next() -> run = t+1: (tick, pid) ballot order
+            p._start_round(cell_resource(n))
+        cell.env.run_until(t + TICK_EPS)  # drain the zero-delay rounds
+        for n in range(trace.n_cells):
+            o = cell.monitor.owner_of(cell_resource(n))
+            owners[t, n] = NO_PROPOSER if o is None else o
+        # quiesce: the trace owns all timing — no backoff retries, no renews
+        for p in props.values():
+            for st in p._res.values():
+                st.want = False
+                p._cancel(st, "retry_timer")
+                p._cancel(st, "renew_timer")
+    return owners

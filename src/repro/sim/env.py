@@ -28,7 +28,10 @@ class StableStore:
         return dict(self._data.get(node, {}))
 
     def store(self, node: str, key: str, value) -> None:
-        self._data.setdefault(node, {})[key] = value
+        d = self._data.setdefault(node, {})
+        if key in d and d[key] == value:
+            return  # idempotent re-store: no disk sync happens
+        d[key] = value
         self.sync_count += 1
 
 

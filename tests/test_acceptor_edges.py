@@ -1,0 +1,87 @@
+"""Acceptor boundary cases per §3/§7 that the main suite skips over:
+the < vs ≤ ballot comparison, stale releases, and stale expiry timeouts."""
+from repro.core.acceptor import Acceptor
+from repro.core.ballot import Ballot
+from repro.core.messages import (
+    Answer,
+    Lease,
+    PrepareRequest,
+    Proposal,
+    ProposeRequest,
+    Release,
+)
+from repro.sim.events import Scheduler
+
+
+class Harness:
+    def __init__(self):
+        self.sched = Scheduler()
+        self.sent = []
+        self.acc = Acceptor(
+            0,
+            set_timer=lambda d, fn: self.sched.after(d, fn),
+            send=lambda dst, msg: self.sent.append((dst, msg)),
+        )
+
+    def last(self):
+        return self.sent[-1][1]
+
+
+def b(run, pid=1):
+    return Ballot(run, 0, pid)
+
+
+def prop(run, pid=1, t=10.0):
+    return Proposal(b(run, pid), Lease(pid, t))
+
+
+def test_equal_ballot_prepare_and_propose_accepted():
+    """§3 steps 2 & 4 reject strictly-lower ballots only: a retransmitted
+    request with the ballot equal to highest_promised must be accepted."""
+    h = Harness()
+    h.acc.on_prepare_request(PrepareRequest("R", b(4)), "p1")
+    assert h.last().answer == Answer.ACCEPT
+    # equal-ballot prepare (e.g. duplicated over UDP): accepted again
+    h.acc.on_prepare_request(PrepareRequest("R", b(4)), "p1")
+    assert h.last().answer == Answer.ACCEPT
+    # propose with ballot == highest_promised: the normal success path
+    h.acc.on_propose_request(ProposeRequest("R", b(4), prop(4)), "p1")
+    assert h.last().answer == Answer.ACCEPT
+    # duplicated propose with the same ballot: accepted again (idempotent)
+    h.acc.on_propose_request(ProposeRequest("R", b(4), prop(4)), "p1")
+    assert h.last().answer == Answer.ACCEPT
+
+
+def test_release_with_stale_ballot_after_newer_accept_is_noop():
+    """§7: a release from a *previous* lease holder must not discard the
+    current holder's proposal — only an exact ballot match discards."""
+    h = Harness()
+    h.acc.on_propose_request(ProposeRequest("R", b(1), prop(1)), "p1")
+    # ownership moved on: p2 accepted under a newer ballot
+    h.acc.on_prepare_request(PrepareRequest("R", b(2, pid=2)), "p2")
+    h.acc.on_propose_request(ProposeRequest("R", b(2, pid=2), prop(2, pid=2)), "p2")
+    # p1's late release (its old ballot) arrives: must be a no-op
+    h.acc.on_release(Release("R", b(1)), "p1")
+    h.acc.on_prepare_request(PrepareRequest("R", b(3, pid=3)), "p3")
+    assert h.last().accepted == prop(2, pid=2)
+    # and the expiry timer of p2's lease must still be armed
+    assert h.sched.pending >= 1
+
+
+def test_on_timeout_ignores_proposal_accepted_under_newer_ballot():
+    """An expiry timeout armed for an old proposal must not clear a
+    proposal that was re-accepted under a newer ballot in the meantime."""
+    h = Harness()
+    h.acc.on_propose_request(ProposeRequest("R", b(1), prop(1, t=5.0)), "p1")
+    h.acc.on_prepare_request(PrepareRequest("R", b(9, pid=2)), "p2")
+    h.acc.on_propose_request(ProposeRequest("R", b(9, pid=2), prop(9, pid=2, t=50.0)), "p2")
+    # fire the stale timeout path directly: ballot mismatch -> no-op
+    h.acc._on_timeout("R", b(1))
+    st = h.acc._state("R")
+    assert st.accepted == prop(9, pid=2, t=50.0)
+    # the matching timeout DOES clear it (and only then)
+    h.acc._on_timeout("R", b(9, pid=2))
+    assert st.accepted is None
+    # highest_promised survives the expiry (never reset except by restart)
+    h.acc.on_prepare_request(PrepareRequest("R", b(3, pid=3)), "p3")
+    assert h.last().answer == Answer.REJECT

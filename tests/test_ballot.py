@@ -1,4 +1,7 @@
 """Ballot numbers (§2): global uniqueness + per-proposer monotonicity."""
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import given, strategies as st
 
 from repro.core.ballot import Ballot, BallotGenerator

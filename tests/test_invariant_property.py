@@ -6,6 +6,8 @@ multi-resource workloads. The monitor (strict) raises on any overlap of
 ownership intervals — running to completion IS the proof check.
 """
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.configs import CellConfig

@@ -5,6 +5,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import MoEConfig, get_config, reduced

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.analysis.costs import cost_analysis_dict
 from repro.analysis.roofline import flops_fwd, flops_step, model_flops, roofline_terms, MESHES
 from repro.configs import ShapeConfig, get_config, reduced
 from repro.models import init_model, loss_fn, synth_inputs, transformer
@@ -24,7 +25,7 @@ def _compiled_flops(cfg, shape, train: bool):
     else:
         fn = lambda p, b: transformer.forward(cfg, p, b)[0]
     compiled = jax.jit(fn).lower(params, batch_abs).compile()
-    return compiled.cost_analysis()["flops"]
+    return cost_analysis_dict(compiled)["flops"]
 
 
 @pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "internlm2-1.8b"])
