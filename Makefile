@@ -2,17 +2,24 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-fast bench-smoke bench dev-deps
+.PHONY: test test-all test-fast bench-smoke bench-delay bench dev-deps
 
-test:  ## tier-1: the full suite, fail-fast
+test:  ## fast default: skip the long @slow differential replays
+	python -m pytest -x -q -m "not slow"
+
+test-all:  ## tier-1: the full suite (including @slow), fail-fast
 	python -m pytest -x -q
 
-test-fast:  ## skip the slow XLA-compile cross-validation tests
-	python -m pytest -x -q --ignore=tests/test_roofline_validation.py
+test-fast:  ## also skip the slow XLA-compile cross-validation tests
+	python -m pytest -x -q -m "not slow" --ignore=tests/test_roofline_validation.py
 
 bench-smoke:  ## quick end-to-end signal: the vectorized lease-plane bench
 	python -c "from benchmarks.bench_lease_array import run; \
 	  [print(f'{n},{u:.2f},\"{d}\"') for n, u, d in run()]"
+
+bench-delay:  ## netplane smoke: delay-depth sweep of the in-flight plane
+	python -c "from benchmarks.bench_lease_array import run_delayed; \
+	  [print(f'{n},{u:.2f},\"{d}\"') for n, u, d in run_delayed()]"
 
 bench:  ## every paper table (slow)
 	python -m benchmarks.run

@@ -17,6 +17,8 @@ from .common import WallTimer, fmt
 EVENT_CELLS, EVENT_TICKS = 96, 30
 ARRAY_CELLS, ARRAY_TICKS = 4096, 128
 KERNEL_CELLS = 4096
+DELAY_CELLS, DELAY_TICKS = 1024, 96
+DELAY_DEPTHS = (0, 1, 2, 4)
 
 
 def _trace(n_cells, n_ticks, seed=0):
@@ -69,4 +71,40 @@ def run():
         f"one fused pallas step over {KERNEL_CELLS} cells "
         f"(owned {int((owner >= 0).sum())}/{KERNEL_CELLS})",
     ))
+    return rows
+
+
+def _delayed_trace(max_delay: int, n_ticks: int, seed: int = 5):
+    return random_trace(
+        seed, n_ticks=n_ticks, n_cells=DELAY_CELLS,
+        n_acceptors=5, n_proposers=8, lease_ticks=8,
+        p_attempt=0.8, p_release=0.05, p_down_flip=0.0,
+        max_delay_ticks=max_delay, p_drop=0.05 if max_delay else 0.0,
+        round_ticks=max(3, max_delay + 1),
+    )
+
+
+def run_delayed(depths=DELAY_DEPTHS):
+    """Delay-depth sweep of the in-flight message plane: cell-ticks/sec of
+    the netplane scan at increasing per-leg delay bounds (depth 0 = the
+    zero-delay special case run through the same delayed step), plus the
+    resulting ownership density — lease dynamics vs latency regime, the
+    Keyspace/cloud-report axis (arXiv 1209.3913, 1404.6719)."""
+    rows = []
+    for depth in depths:
+        tr = _delayed_trace(depth, DELAY_TICKS)
+        # warm with the SAME trace length: the scan jit is shape-specialized,
+        # so a short warm-up trace would leave the compile inside the timer
+        replay_array(_delayed_trace(depth, DELAY_TICKS, seed=6), netplane=True)
+        with WallTimer() as wt:
+            owners, counts = replay_array(tr, netplane=True)
+        assert counts.max() <= 1, "at-most-one-owner violated in the netplane"
+        rate = DELAY_CELLS * DELAY_TICKS / wt.dt
+        rows.append((
+            f"lease_netplane_delay{depth}",
+            wt.dt / (DELAY_CELLS * DELAY_TICKS) * 1e6,
+            f"{DELAY_CELLS} cells x {DELAY_TICKS} ticks, delay<={depth} "
+            f"drop={0.05 if depth else 0.0}: {fmt(rate)} cell-ticks/s, "
+            f"owned={float((owners >= 0).mean()):.2f}",
+        ))
     return rows

@@ -224,6 +224,15 @@ class Proposer:
             self._set_owner(resource, st, False)
             if st.want:
                 self._schedule_retry(resource)
+        elif (
+            st.round is not None
+            and st.round.round_id == round_id
+            and st.round.phase == PROPOSING
+        ):
+            # our own lease window elapsed before a majority accepted: any
+            # late accepts must not make us owner — the timer started in
+            # step 3 bounds the ownership claim (§3 step 5)
+            st.round.phase = DONE
 
     def _on_round_timeout(self, resource: str, round_id: int) -> None:
         st = self._state(resource)

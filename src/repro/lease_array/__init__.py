@@ -1,18 +1,27 @@
 """Vectorized lease plane (§8: PaxosLease for many resources).
 
 N independent PaxosLease cells x A acceptors x P proposers as dense int32
-arrays, advanced in lockstep one synchronous tick at a time:
+arrays, advanced in lockstep one tick at a time — under two network
+models: the synchronous zero-delay tick (a whole prepare/propose round
+resolves in one tick) and the delayed *in-flight message plane*
+(`netplane.py`): dense per-phase request/response arrays with per-tick
+per-acceptor delay and drop schedules, so rounds span multiple ticks and
+responses arrive late, get lost, or land after the proposer abandoned the
+round — the §1 failure model, at array scale.
 
   state.py    — array layout, quarter-tick time base, (tick, proposer) ballots
-  ref.py      — pure-jnp oracle for one tick
-  kernel.py   — fused Pallas kernel (expiry+release+prepare+quorum+propose)
+  netplane.py — in-flight message + proposer round planes, shared tick math
+  ref.py      — pure-jnp oracles for one tick (sync + delayed)
+  kernel.py   — fused Pallas kernels (one VMEM pass per tick, both models)
   ops.py      — jit'd dispatch (jnp | pallas interpret | pallas TPU) + padding
-  engine.py   — stateful driver: per-tick step and lax.scan trace runner
-  trace.py    — fault/timing traces + the event-sim differential referee
+  engine.py   — stateful driver: per-tick step and lax.scan trace runners
+  trace.py    — fault/timing/delay/drop traces + the event-sim differential
+                referee (message timing pinned onto sim.network.Network)
   directory.py— shard-ownership directory on top (cluster/shards.py fast path)
 """
 from .engine import LeaseArrayEngine
-from .ops import lease_plane_step
+from .netplane import NetPlaneState, init_netplane
+from .ops import lease_plane_step, lease_plane_step_delayed
 from .state import NO_PROPOSER, LeaseArrayState, ballot_of, init_state, lease_quarters
 from .trace import Trace, random_trace, replay_array, replay_event_sim
 
@@ -20,10 +29,13 @@ __all__ = [
     "LeaseArrayEngine",
     "LeaseArrayState",
     "NO_PROPOSER",
+    "NetPlaneState",
     "Trace",
     "ballot_of",
+    "init_netplane",
     "init_state",
     "lease_plane_step",
+    "lease_plane_step_delayed",
     "lease_quarters",
     "random_trace",
     "replay_array",

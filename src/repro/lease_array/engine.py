@@ -7,6 +7,12 @@ Two modes:
                        planes batch further with ``jax.vmap`` (see
                        ``scan_fn``'s pytree-in/pytree-out signature and
                        tests/test_lease_array_engine.py::test_vmap_planes).
+
+Two network models: the synchronous zero-delay tick (every round resolves
+in one tick) and the delayed in-flight message plane (``netplane.py``).
+Passing ``delay=``/``drop=`` to ``step``/``run_trace`` switches the engine
+onto the delayed model; it stays there (messages may be in flight) with
+zero-delay defaults from then on.
 """
 from __future__ import annotations
 
@@ -16,7 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .ops import lease_plane_step
+from .netplane import NetPlaneState, init_netplane
+from .ops import lease_plane_step, lease_plane_step_delayed
 from .ref import owner_row
 from .state import NO_PROPOSER, QUARTERS, LeaseArrayState, init_state, lease_quarters
 
@@ -43,6 +50,31 @@ def _trace_scanner(majority: int, lease_q4: int, backend: str):
     return jax.jit(scan_fn)
 
 
+@functools.lru_cache(maxsize=None)
+def _delayed_trace_scanner(
+    majority: int, lease_q4: int, round_q4: int, backend: str
+):
+    """Jitted delayed-model scan: carries (lease state, netplane state)."""
+
+    def scan_fn(state, net, t0, attempts, releases, acc_up, delays, drops):
+        def body(carry, xs):
+            st, nt, t = carry
+            att, rel, up, dl, dr = xs
+            st, nt, count = lease_plane_step_delayed(
+                st, nt, t, att, rel, up, dl, dr,
+                majority=majority, lease_q4=lease_q4, round_q4=round_q4,
+                backend=backend,
+            )
+            return (st, nt, t + 1), (owner_row(st), count)
+
+        (state, net, _), (owners, counts) = jax.lax.scan(
+            body, (state, net, t0), (attempts, releases, acc_up, delays, drops)
+        )
+        return state, net, owners, counts
+
+    return jax.jit(scan_fn)
+
+
 class LeaseArrayEngine:
     def __init__(
         self,
@@ -51,6 +83,7 @@ class LeaseArrayEngine:
         n_acceptors: int = 5,
         n_proposers: int = 8,
         lease_ticks: int = 3,
+        round_ticks: int = 1,
         backend: str = "jnp",
     ) -> None:
         if n_acceptors < 1 or n_proposers < 1:
@@ -61,31 +94,65 @@ class LeaseArrayEngine:
         self.majority = n_acceptors // 2 + 1
         self.lease_ticks = lease_ticks
         self.lease_q4 = lease_quarters(lease_ticks)
+        self.round_ticks = round_ticks
+        self.round_q4 = QUARTERS * int(round_ticks)
         self.backend = backend
         self.state = init_state(n_cells, n_acceptors, n_proposers)
+        self.net: NetPlaneState = init_netplane(n_cells, n_acceptors)
         self.t = 0
         self.last_owner_count = jnp.zeros(n_cells, jnp.int32)
+        # flips True on the first delayed step; once messages may be in
+        # flight, every later tick must run the delayed model too
+        self._netplane_active = False
 
     # ------------------------------------------------------------ one tick
-    def step(self, attempt=None, release=None, acc_up=None) -> np.ndarray:
-        """Advance one tick; returns the per-cell owner row (id or -1)."""
+    def step(
+        self, attempt=None, release=None, acc_up=None, delay=None, drop=None
+    ) -> np.ndarray:
+        """Advance one tick; returns the per-cell owner row (id or -1).
+
+        ``delay``/``drop`` are per-acceptor [A] schedules for messages sent
+        this tick (delay in whole ticks); passing either switches the
+        engine onto the delayed in-flight model permanently.
+
+        Slot-isolation precondition (netplane.py): a new attempt on a cell
+        overwrites that cell's in-flight request slots, so attempts on the
+        SAME cell must be spaced more than ``4 * max_delay`` ticks apart
+        while older messages may still be in flight (``random_trace``
+        enforces this; hand-driven schedules must too).
+        """
         attempt = self._row(attempt)
         release = self._row(release)
         acc_up = (
             jnp.ones(self.n_acceptors, jnp.int32) if acc_up is None
             else jnp.asarray(acc_up)
         )
-        self.state, self.last_owner_count = lease_plane_step(
-            self.state, self.t, attempt, release, acc_up,
-            majority=self.majority, lease_q4=self.lease_q4, backend=self.backend,
-        )
+        if delay is not None or drop is not None:
+            self._netplane_active = True
+        if not self._netplane_active:
+            self.state, self.last_owner_count = lease_plane_step(
+                self.state, self.t, attempt, release, acc_up,
+                majority=self.majority, lease_q4=self.lease_q4,
+                backend=self.backend,
+            )
+        else:
+            delay = self._schedule(delay, (self.n_acceptors,))
+            drop = self._schedule(drop, (self.n_acceptors,))
+            self.state, self.net, self.last_owner_count = lease_plane_step_delayed(
+                self.state, self.net, self.t, attempt, release, acc_up,
+                delay, drop,
+                majority=self.majority, lease_q4=self.lease_q4,
+                round_q4=self.round_q4, backend=self.backend,
+            )
         self.t += 1
         return np.asarray(owner_row(self.state))
 
     # ------------------------------------------------------------ bulk path
-    def run_trace(self, attempts, releases=None, acc_up=None):
+    def run_trace(self, attempts, releases=None, acc_up=None, delay=None, drop=None):
         """Scan a [T, N] trace in one jitted call.
 
+        ``delay``/``drop`` are optional [T, A] schedules (per-tick,
+        per-acceptor); providing either runs the delayed in-flight model.
         Returns (owners [T, N], owner_counts [T, N]) as numpy; the engine's
         state/tick advance past the trace.
         """
@@ -99,10 +166,23 @@ class LeaseArrayEngine:
             jnp.ones((T, self.n_acceptors), jnp.int32)
             if acc_up is None else jnp.asarray(acc_up).astype(jnp.int32)
         )
-        scanner = _trace_scanner(self.majority, self.lease_q4, self.backend)
-        self.state, owners, counts = scanner(
-            self.state, jnp.int32(self.t), attempts, releases, acc_up
-        )
+        if delay is not None or drop is not None:
+            self._netplane_active = True
+        if not self._netplane_active:
+            scanner = _trace_scanner(self.majority, self.lease_q4, self.backend)
+            self.state, owners, counts = scanner(
+                self.state, jnp.int32(self.t), attempts, releases, acc_up
+            )
+        else:
+            delay = self._schedule(delay, (T, self.n_acceptors))
+            drop = self._schedule(drop, (T, self.n_acceptors))
+            scanner = _delayed_trace_scanner(
+                self.majority, self.lease_q4, self.round_q4, self.backend
+            )
+            self.state, self.net, owners, counts = scanner(
+                self.state, self.net, jnp.int32(self.t),
+                attempts, releases, acc_up, delay, drop,
+            )
         self.t += int(T)
         if T > 0:
             self.last_owner_count = counts[-1]
@@ -122,6 +202,13 @@ class LeaseArrayEngine:
         )
         return np.maximum(expiry - QUARTERS * self.t, 0) // QUARTERS
 
+    @staticmethod
+    def _schedule(v, shape) -> jnp.ndarray:
+        """Zero-default int32 coercion for delay/drop schedules."""
+        if v is None:
+            return jnp.zeros(shape, jnp.int32)
+        return jnp.asarray(v).astype(jnp.int32)
+
     def _row(self, row) -> jnp.ndarray:
         if row is None:
             return jnp.full(self.n_cells, NO_PROPOSER, jnp.int32)
@@ -132,5 +219,10 @@ class LeaseArrayEngine:
             raise ValueError(
                 f"proposer id {int(arr.max())} out of range "
                 f"(plane has {self.n_proposers} proposers)"
+            )
+        if arr.size and int(arr.min()) < NO_PROPOSER:
+            raise ValueError(
+                f"proposer id {int(arr.min())} out of range "
+                f"({NO_PROPOSER} means no proposer)"
             )
         return jnp.asarray(arr)

@@ -1,5 +1,11 @@
-"""Pallas TPU kernel for the lease-plane tick: fused expiry + release +
+"""Pallas TPU kernels for the lease-plane tick: fused expiry + release +
 prepare/quorum-count + propose/state-update in a single VMEM pass.
+
+Two kernels share the layout: the synchronous zero-delay tick
+(`lease_tick_pallas`, PR 1) and the delayed in-flight-message tick
+(`lease_tick_delayed_pallas`), whose body is `netplane.delayed_tick_math`
+— the same function the jnp oracle runs, so kernel and oracle are
+bit-identical by construction.
 
 Grid: (n_cell_blocks,) — each program owns a ``block_n``-wide column slice of
 every state array. The acceptor (A) and proposer (P) axes ride on sublanes,
@@ -8,8 +14,9 @@ sublane reductions; the cell axis N is the 128-lane axis. All state is
 int32, all updates are `jnp.where` selects — pure VPU work, no MXU.
 
 The tick scalar lives in SMEM (it is traced — `lax.scan` drives it); the
-protocol constants (majority, lease length, P) are compile-time closure
-constants, mirroring how kernels/flash_attention bakes its block geometry.
+protocol constants (majority, lease length, round horizon, P) are
+compile-time closure constants, mirroring how kernels/flash_attention bakes
+its block geometry.
 """
 from __future__ import annotations
 
@@ -27,7 +34,11 @@ except Exception:  # pragma: no cover
     pltpu = None
     _SMEM = None
 
+from .netplane import NetPlaneState, delayed_tick_math
 from .state import NO_PROPOSER, QUARTERS, LeaseArrayState
+
+N_LEASE = len(LeaseArrayState._fields)
+N_NET = len(NetPlaneState._fields)
 
 
 def _lease_tick_kernel(
@@ -175,3 +186,89 @@ def lease_tick_pallas(
     )
     new_state = LeaseArrayState(*outs[:7])
     return new_state, outs[7].reshape(N)
+
+
+def _delayed_tick_kernel(t_ref, *refs, majority, lease_q4, round_q4):
+    """Fused delayed tick: loads every block, runs the shared netplane math,
+    stores every block. 27 inputs (7 lease + 15 net + 5 per-tick rows),
+    23 outputs (7 lease + 15 net + count)."""
+    n_in = N_LEASE + N_NET + 5
+    ins, outs = refs[:n_in], refs[n_in:]
+    lease = tuple(r[...] for r in ins[:N_LEASE])
+    net = tuple(r[...] for r in ins[N_LEASE:N_LEASE + N_NET])
+    attempt, release, up, delay, drop = (r[...] for r in ins[N_LEASE + N_NET:])
+    new_lease, new_net, count = delayed_tick_math(
+        lease, net, t_ref[0, 0], attempt, release, up, delay, drop,
+        majority=majority, lease_q4=lease_q4, round_q4=round_q4,
+    )
+    for r, v in zip(outs, (*new_lease, *new_net, count)):
+        r[...] = v
+
+
+def lease_tick_delayed_pallas(
+    state: LeaseArrayState,
+    net: NetPlaneState,
+    t,         # scalar int32
+    attempt,   # [N] int32
+    release,   # [N] int32
+    acc_up,    # [A] bool/int32
+    delay,     # [A] int32 (ticks)
+    drop,      # [A] bool/int32
+    *,
+    majority: int,
+    lease_q4: int,
+    round_q4: int,
+    block_n: int = 512,
+    interpret: bool = True,  # False on real TPUs
+) -> tuple[LeaseArrayState, NetPlaneState, jax.Array]:
+    """One fused delayed tick over all N cells; N must be a multiple of
+    ``block_n`` (ops.py pads). Returns (new_state, new_net, owner_count[N])."""
+    A, N = state.highest_promised.shape
+    P = state.owner_mask.shape[0]
+    block_n = min(block_n, N)
+    assert N % block_n == 0, "pad the cell axis to a block multiple (ops.py)"
+    grid = (N // block_n,)
+
+    kernel = functools.partial(
+        _delayed_tick_kernel,
+        majority=majority, lease_q4=lease_q4, round_q4=round_q4,
+    )
+    arow = lambda r: jnp.asarray(r, jnp.int32).reshape(1, N)
+    acol = lambda c: jnp.broadcast_to(
+        jnp.asarray(c).astype(jnp.int32)[:, None], (A, N)
+    )
+    t2d = jnp.asarray(t, jnp.int32).reshape(1, 1)
+
+    spec_a = pl.BlockSpec((A, block_n), lambda i: (0, i))
+    spec_p = pl.BlockSpec((P, block_n), lambda i: (0, i))
+    spec_r = pl.BlockSpec((1, block_n), lambda i: (0, i))
+    spec_t = (
+        pl.BlockSpec(memory_space=_SMEM)
+        if _SMEM is not None
+        else pl.BlockSpec((1, 1), lambda i: (0, 0))
+    )
+    lease_specs = [spec_a] * 4 + [spec_p] * 3
+    net_specs = [spec_a] * 9 + [spec_r] * 4 + [spec_a] * 2
+    sds = jax.ShapeDtypeStruct
+    lease_shapes = [sds((A, N), jnp.int32)] * 4 + [sds((P, N), jnp.int32)] * 3
+    net_shapes = (
+        [sds((A, N), jnp.int32)] * 9
+        + [sds((1, N), jnp.int32)] * 4
+        + [sds((A, N), jnp.int32)] * 2
+    )
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec_t] + lease_specs + net_specs + [spec_r] * 2 + [spec_a] * 3,
+        out_specs=lease_specs + net_specs + [spec_r],
+        out_shape=lease_shapes + net_shapes + [sds((1, N), jnp.int32)],
+        interpret=interpret,
+    )(
+        t2d,
+        *state,
+        *net,
+        arow(attempt), arow(release), acol(acc_up), acol(delay), acol(drop),
+    )
+    new_state = LeaseArrayState(*outs[:N_LEASE])
+    new_net = NetPlaneState(*outs[N_LEASE:N_LEASE + N_NET])
+    return new_state, new_net, outs[-1].reshape(N)

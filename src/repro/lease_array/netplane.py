@@ -1,0 +1,273 @@
+"""In-flight message plane: a multi-tick delay/loss network model for the
+vectorized lease engine.
+
+PaxosLease's whole claim (§1) is safety under message loss, reordering and
+in-transit delays. The synchronous tick (`ref.lease_step_ref`) resolves a
+whole prepare/propose round in one zero-delay instant, so none of those
+behaviors exist at array scale. This module adds them as *dense state*:
+
+  - four in-flight planes, one per protocol phase
+    (``prepare_req / prepare_resp / propose_req / propose_resp``), each a
+    ``[A, N]`` slot array carrying the message's ballot and its delivery
+    quarter-tick (ballot 0 = empty slot). A slot holds at most one message
+    per (acceptor, cell) — the ``random_trace`` spacing construction
+    guarantees live messages never collide (see ``trace.py``);
+  - a proposer *round* plane: open ballot, phase (preparing/proposing),
+    the quarter-tick the proposer's own lease timer will expire (started
+    when a majority of opens is in hand — the §4 ordering), a
+    timeout-and-abandon deadline, and per-acceptor response masks so
+    duplicated deliveries can never double-count a quorum (the event
+    engine's ``set``-of-acceptors bookkeeping, vectorized).
+
+Per tick, messages *sent* at tick ``t`` on the link to/from acceptor ``a``
+take ``delay[a]`` whole ticks and are lost iff ``drop[a]`` — mirroring a
+deterministic per-message delay policy pinned onto the event-driven
+``sim.network.Network`` (see ``trace.replay_event_sim``). Reachability
+(``acc_up``) is checked when a *request* is delivered, exactly like the
+event transport checks ``set_down`` at delivery time; responses generated
+at that same tick see the same mask, like ``send`` checking its source.
+
+With all-zero delay/drop planes every message is generated and consumed
+inside one tick, the slots stay empty, and the step is bit-identical to
+the synchronous `lease_step_ref` — the PR 1 model is the zero-delay
+special case.
+
+``delayed_tick_math`` is pure elementwise/sublane-reduction jnp on plain
+arrays, so the SAME function is the jnp oracle's body (`ref.py`) and the
+fused Pallas kernel's body (`kernel.py`): the two backends agree bit-for-
+bit by construction.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .state import NO_PROPOSER, QUARTERS
+
+# round phases
+R_IDLE, R_PREPARING, R_PROPOSING = 0, 1, 2
+
+
+class NetPlaneState(NamedTuple):
+    """In-flight messages + open proposer rounds. All arrays int32.
+
+    Slot encoding: ``*_b`` is the message ballot (0 = empty slot), ``*_at``
+    the delivery quarter-tick (``4 * deliver_tick``). ``presp_pay`` is the
+    prepare response's payload: the acceptor's accepted proposer at grant
+    time (NO_PROPOSER = empty/open). Round rows are ``[1, N]``; response
+    masks ``[A, N]``.
+    """
+
+    preq_b: jax.Array      # [A, N] prepare requests in flight
+    preq_at: jax.Array     # [A, N]
+    presp_b: jax.Array     # [A, N] prepare responses (grants only) in flight
+    presp_at: jax.Array    # [A, N]
+    presp_pay: jax.Array   # [A, N] accepted proposer payload (-1 = open)
+    poreq_b: jax.Array     # [A, N] propose requests in flight
+    poreq_at: jax.Array    # [A, N]
+    poresp_b: jax.Array    # [A, N] propose responses (accepts only) in flight
+    poresp_at: jax.Array   # [A, N]
+    rnd_ballot: jax.Array    # [1, N] open round's ballot (0 = no round)
+    rnd_phase: jax.Array     # [1, N] R_IDLE / R_PREPARING / R_PROPOSING
+    rnd_expiry: jax.Array    # [1, N] quarter-tick the proposer's timer expires
+    rnd_deadline: jax.Array  # [1, N] quarter-tick the round is abandoned
+    rnd_open: jax.Array      # [A, N] acceptors whose open response counted
+    rnd_acc: jax.Array       # [A, N] acceptors whose accept counted
+
+    @property
+    def n_acceptors(self) -> int:
+        return self.preq_b.shape[0]
+
+    @property
+    def n_cells(self) -> int:
+        return self.preq_b.shape[1]
+
+
+def init_netplane(n_cells: int, n_acceptors: int) -> NetPlaneState:
+    za = jnp.zeros((n_acceptors, n_cells), jnp.int32)
+    zr = jnp.zeros((1, n_cells), jnp.int32)
+    return NetPlaneState(
+        preq_b=za, preq_at=za,
+        presp_b=za, presp_at=za, presp_pay=jnp.full_like(za, NO_PROPOSER),
+        poreq_b=za, poreq_at=za,
+        poresp_b=za, poresp_at=za,
+        rnd_ballot=zr, rnd_phase=zr, rnd_expiry=zr, rnd_deadline=zr,
+        rnd_open=za, rnd_acc=za,
+    )
+
+
+def delayed_tick_math(
+    lease: tuple,      # LeaseArrayState fields, [A, bn] / [P, bn] blocks
+    net: tuple,        # NetPlaneState fields, [A, bn] / [1, bn] blocks
+    t,                 # scalar int32 tick
+    attempt,           # [1, bn] int32 proposer id attempting (-1 = none)
+    release,           # [1, bn] int32 proposer id releasing (-1 = none)
+    up,                # [A, bn] int32 acceptor reachability this tick
+    delay,             # [A, bn] int32 delay (ticks) for messages sent this tick
+    drop,              # [A, bn] int32 1 = lose messages sent this tick
+    *,
+    majority: int,
+    lease_q4: int,     # lease timespan in quarter-ticks
+    round_q4: int,     # timeout-and-abandon horizon in quarter-ticks
+) -> tuple[tuple, tuple, jnp.ndarray]:
+    """One tick of the delayed model. Returns (lease', net', owner_count).
+
+    Within-tick order mirrors the event scheduler's drain window exactly:
+    expiries fired before the tick boundary, then releases/attempts issued
+    at the boundary, then the round-abandon timer, then deliveries in
+    causal phase order (a zero-delay message cascades through all four
+    phases inside this same tick).
+    """
+    (promised, acc_ballot, acc_prop, acc_expiry,
+     own_mask, own_expiry, own_ballot) = lease
+    (preq_b, preq_at, presp_b, presp_at, presp_pay,
+     poreq_b, poreq_at, poresp_b, poresp_at,
+     rnd_ballot, rnd_phase, rnd_expiry, rnd_deadline,
+     rnd_open, rnd_acc) = net
+
+    P = own_mask.shape[0]
+    t4 = QUARTERS * t
+    p_ids = jax.lax.broadcasted_iota(jnp.int32, own_mask.shape, 0)  # [P, bn]
+    up = up > 0
+    drop = drop > 0
+    dq4 = QUARTERS * delay                                          # [A, bn]
+
+    # -- 1. expiry ---------------------------------------------------------
+    acc_live = (acc_ballot > 0) & (acc_expiry > t4)
+    acc_ballot = jnp.where(acc_live, acc_ballot, 0)
+    acc_prop = jnp.where(acc_live, acc_prop, NO_PROPOSER)
+    acc_expiry = jnp.where(acc_live, acc_expiry, 0)
+    own_live = (own_mask > 0) & (own_expiry > t4)
+    own_mask = own_live.astype(jnp.int32)
+    own_expiry = jnp.where(own_live, own_expiry, 0)
+    own_ballot = jnp.where(own_live, own_ballot, 0)
+
+    # -- 2. release (§7, out-of-band: instantaneous & reliable) ------------
+    rel = release                                                   # [1, bn]
+    rel_owner = (p_ids == rel) & (own_mask > 0)                     # [P, bn]
+    rel_ballot = jnp.sum(jnp.where(rel_owner, own_ballot, 0), axis=0, keepdims=True)
+    own_mask = jnp.where(rel_owner, 0, own_mask)
+    discard = up & (rel_ballot > 0) & (acc_ballot == rel_ballot)    # [A, bn]
+    acc_ballot = jnp.where(discard, 0, acc_ballot)
+    acc_prop = jnp.where(discard, NO_PROPOSER, acc_prop)
+    acc_expiry = jnp.where(discard, 0, acc_expiry)
+
+    # -- 3. round lifecycle ------------------------------------------------
+    # a release wipes the releasing proposer's open round (Proposer.release
+    # sets st.round = None); a timed-out round is abandoned (the event
+    # round timer fires before this tick's deliveries); a new attempt
+    # overwrites whatever round was open (Proposer._start_round).
+    rnd_prop = rnd_ballot % P                                       # [1, bn]
+    rel_kills = (rnd_ballot > 0) & (rel >= 0) & (rnd_prop == rel)
+    timed_out = (rnd_ballot > 0) & (t4 >= rnd_deadline)
+    att = attempt                                                   # [1, bn]
+    has_att = att >= 0
+    new_ballot = jnp.where(has_att, (t + 1) * P + att, 0)
+    keep = (rnd_ballot > 0) & ~timed_out & ~rel_kills & ~has_att
+    rnd_ballot = jnp.where(has_att, new_ballot, jnp.where(keep, rnd_ballot, 0))
+    rnd_phase = jnp.where(
+        has_att, R_PREPARING, jnp.where(keep, rnd_phase, R_IDLE)
+    )
+    rnd_expiry = jnp.where(keep, rnd_expiry, 0)
+    rnd_deadline = jnp.where(
+        has_att, t4 + round_q4, jnp.where(keep, rnd_deadline, 0)
+    )
+    fresh = has_att | ~keep                                         # [1, bn]
+    rnd_open = jnp.where(fresh, 0, rnd_open)                        # [A, bn]
+    rnd_acc = jnp.where(fresh, 0, rnd_acc)
+
+    # -- 4a. broadcast prepare requests for new attempts -------------------
+    send_preq = has_att & ~drop                                     # [A, bn]
+    preq_b = jnp.where(send_preq, new_ballot, preq_b)
+    preq_at = jnp.where(send_preq, t4 + dq4, preq_at)
+
+    # -- 4b. deliver prepare requests at acceptors (§3.2) ------------------
+    preq_due = (preq_b > 0) & (preq_at <= t4)
+    grant = preq_due & up & (preq_b >= promised)
+    promised = jnp.where(grant, preq_b, promised)
+    send_presp = grant & ~drop
+    presp_b = jnp.where(send_presp, preq_b, presp_b)
+    presp_at = jnp.where(send_presp, t4 + dq4, presp_at)
+    presp_pay = jnp.where(send_presp, acc_prop, presp_pay)
+    preq_b = jnp.where(preq_due, 0, preq_b)
+    preq_at = jnp.where(preq_due, 0, preq_at)
+
+    # -- 4c. deliver prepare responses at proposers (§3.3) -----------------
+    presp_due = (presp_b > 0) & (presp_at <= t4)
+    rnd_prop = rnd_ballot % P  # recompute: the round may have changed above
+    match_prep = (
+        presp_due & (presp_b == rnd_ballot) & (rnd_phase == R_PREPARING)
+    )
+    # §6 extend: a response carrying our own proposal counts as open only
+    # while we still believe we own (checked at ARRIVAL, like st.owner)
+    rnd_prop_owns = jnp.sum(
+        jnp.where((p_ids == rnd_prop) & (own_mask > 0), 1, 0),
+        axis=0, keepdims=True,
+    ) > 0                                                           # [1, bn]
+    is_open = match_prep & (
+        (presp_pay == NO_PROPOSER) | ((presp_pay == rnd_prop) & rnd_prop_owns)
+    )
+    rnd_open = jnp.where(is_open, 1, rnd_open)  # set-union: duplicate-proof
+    opens = jnp.sum(rnd_open, axis=0, keepdims=True)                # [1, bn]
+    to_propose = (
+        (rnd_ballot > 0) & (rnd_phase == R_PREPARING) & (opens >= majority)
+    )
+    # majority open: start OUR timer first, then broadcast the proposal —
+    # the ordering the §4 proof depends on
+    rnd_phase = jnp.where(to_propose, R_PROPOSING, rnd_phase)
+    rnd_expiry = jnp.where(to_propose, t4 + lease_q4, rnd_expiry)
+    send_poreq = to_propose & ~drop                                 # [A, bn]
+    poreq_b = jnp.where(send_poreq, rnd_ballot, poreq_b)
+    poreq_at = jnp.where(send_poreq, t4 + dq4, poreq_at)
+    presp_b = jnp.where(presp_due, 0, presp_b)
+    presp_at = jnp.where(presp_due, 0, presp_at)
+    presp_pay = jnp.where(presp_due, NO_PROPOSER, presp_pay)
+
+    # -- 4d. deliver propose requests at acceptors (§3.4) ------------------
+    poreq_due = (poreq_b > 0) & (poreq_at <= t4)
+    accept = poreq_due & up & (poreq_b >= promised)
+    acc_ballot = jnp.where(accept, poreq_b, acc_ballot)
+    acc_prop = jnp.where(accept, poreq_b % P, acc_prop)
+    acc_expiry = jnp.where(accept, t4 + lease_q4, acc_expiry)
+    send_poresp = accept & ~drop
+    poresp_b = jnp.where(send_poresp, poreq_b, poresp_b)
+    poresp_at = jnp.where(send_poresp, t4 + dq4, poresp_at)
+    poreq_b = jnp.where(poreq_due, 0, poreq_b)
+    poreq_at = jnp.where(poreq_due, 0, poreq_at)
+
+    # -- 4e. deliver propose responses at proposers (§3.5) -----------------
+    poresp_due = (poresp_b > 0) & (poresp_at <= t4)
+    match_prop = (
+        poresp_due & (poresp_b == rnd_ballot) & (rnd_phase == R_PROPOSING)
+    )
+    rnd_acc = jnp.where(match_prop, 1, rnd_acc)
+    accs = jnp.sum(rnd_acc, axis=0, keepdims=True)
+    # the timer started in 4c bounds the claim (§3 step 5): accepts landing
+    # after our own lease window elapsed must not make us owner
+    win = (
+        (rnd_ballot > 0) & (rnd_phase == R_PROPOSING)
+        & (accs >= majority) & (rnd_expiry > t4)
+    )
+    new_owner = (p_ids == (rnd_ballot % P)) & win                   # [P, bn]
+    own_mask = jnp.where(new_owner, 1, own_mask)
+    own_expiry = jnp.where(new_owner, rnd_expiry, own_expiry)  # timer from 4c
+    own_ballot = jnp.where(new_owner, rnd_ballot, own_ballot)
+    rnd_ballot = jnp.where(win, 0, rnd_ballot)
+    rnd_phase = jnp.where(win, R_IDLE, rnd_phase)
+    rnd_expiry = jnp.where(win, 0, rnd_expiry)
+    rnd_deadline = jnp.where(win, 0, rnd_deadline)
+    rnd_open = jnp.where(win, 0, rnd_open)
+    rnd_acc = jnp.where(win, 0, rnd_acc)
+    poresp_b = jnp.where(poresp_due, 0, poresp_b)
+    poresp_at = jnp.where(poresp_due, 0, poresp_at)
+
+    lease_out = (promised, acc_ballot, acc_prop, acc_expiry,
+                 own_mask, own_expiry, own_ballot)
+    net_out = (preq_b, preq_at, presp_b, presp_at, presp_pay,
+               poreq_b, poreq_at, poresp_b, poresp_at,
+               rnd_ballot, rnd_phase, rnd_expiry, rnd_deadline,
+               rnd_open, rnd_acc)
+    owner_count = jnp.sum(own_mask, axis=0, keepdims=True)          # [1, bn]
+    return lease_out, net_out, owner_count

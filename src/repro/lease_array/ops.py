@@ -1,6 +1,10 @@
 """jit'd public entry points for the lease plane: backend dispatch
 (pure-jnp oracle vs fused Pallas kernel) plus cell-axis padding so callers
-can use any N. Mirrors the kernels/flash_attention kernel/ops/ref layout."""
+can use any N. Mirrors the kernels/flash_attention kernel/ops/ref layout.
+
+Two steps: `lease_plane_step` (synchronous zero-delay tick, PR 1) and
+`lease_plane_step_delayed` (in-flight message plane: multi-tick rounds,
+per-acceptor delay/drop — see `netplane.py`)."""
 from __future__ import annotations
 
 import functools
@@ -8,8 +12,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import lease_tick_pallas
-from .ref import lease_step_ref
+from .kernel import lease_tick_delayed_pallas, lease_tick_pallas
+from .netplane import NetPlaneState
+from .ref import lease_step_delayed_ref, lease_step_ref
 from .state import NO_PROPOSER, LeaseArrayState
 
 BACKENDS = ("jnp", "pallas", "pallas_tpu")
@@ -27,6 +32,21 @@ def _pad_cells(state: LeaseArrayState, attempt, release, multiple: int):
     attempt = jnp.pad(attempt, (0, pad), constant_values=NO_PROPOSER)
     release = jnp.pad(release, (0, pad), constant_values=NO_PROPOSER)
     return state, attempt, release, n
+
+
+def _pad_net(net: NetPlaneState, multiple: int) -> NetPlaneState:
+    pad = (-net.n_cells) % multiple
+    if pad == 0:
+        return net
+    # zero padding = empty slots / no open round in the padded cells;
+    # presp_pay's empty sentinel is NO_PROPOSER, matching init_netplane
+    return NetPlaneState(*(
+        jnp.pad(
+            arr, ((0, 0), (0, pad)),
+            constant_values=NO_PROPOSER if name == "presp_pay" else 0,
+        )
+        for name, arr in zip(NetPlaneState._fields, net)
+    ))
 
 
 @functools.partial(
@@ -71,3 +91,53 @@ def lease_plane_step(
         new_state = LeaseArrayState(*(a[:, :n] for a in new_state))
         count = count[:n]
     return new_state, count
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("majority", "lease_q4", "round_q4", "backend", "block_n"),
+)
+def lease_plane_step_delayed(
+    state: LeaseArrayState,
+    net: NetPlaneState,
+    t,
+    attempt,
+    release,
+    acc_up,
+    delay,     # [A] int32 per-acceptor delay (ticks) for messages sent this tick
+    drop,      # [A] bool/int32 per-acceptor drop mask for messages sent this tick
+    *,
+    majority: int,
+    lease_q4: int,
+    round_q4: int,
+    backend: str = "jnp",
+    block_n: int = 512,
+) -> tuple[LeaseArrayState, NetPlaneState, jax.Array]:
+    """Advance all cells one tick of the delayed (in-flight message) model.
+
+    Same backends as `lease_plane_step`. Returns
+    (new_state, new_net, owner_count[N]).
+    """
+    t = jnp.asarray(t, jnp.int32)
+    attempt = jnp.asarray(attempt, jnp.int32)
+    release = jnp.asarray(release, jnp.int32)
+    delay = jnp.asarray(delay, jnp.int32)
+    if backend == "jnp":
+        return lease_step_delayed_ref(
+            state, net, t, attempt, release, acc_up, delay, drop,
+            majority=majority, lease_q4=lease_q4, round_q4=round_q4,
+        )
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown lease-plane backend {backend!r}")
+    padded, attempt, release, n = _pad_cells(state, attempt, release, block_n)
+    net_p = _pad_net(net, block_n)
+    new_state, new_net, count = lease_tick_delayed_pallas(
+        padded, net_p, t, attempt, release, acc_up, delay, drop,
+        majority=majority, lease_q4=lease_q4, round_q4=round_q4,
+        block_n=block_n, interpret=(backend == "pallas"),
+    )
+    if new_state.n_cells != n:
+        new_state = LeaseArrayState(*(a[:, :n] for a in new_state))
+        new_net = NetPlaneState(*(a[:, :n] for a in new_net))
+        count = count[:n]
+    return new_state, new_net, count

@@ -25,11 +25,17 @@ a zero-delay network — `trace.replay_event_sim` is the bit-for-bit referee):
 
 All of it is branch-free elementwise/sublane-reduction work — the Pallas
 kernel (`kernel.py`) fuses the same dataflow into one VMEM pass.
+
+This synchronous step is the zero-delay special case. The *delayed* model
+(`lease_step_delayed_ref`) threads the same protocol through the in-flight
+message plane (`netplane.py`): rounds span multiple ticks, responses arrive
+late, get lost, or land after the proposer abandoned the round.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from .netplane import NetPlaneState, delayed_tick_math
 from .state import NO_PROPOSER, QUARTERS, LeaseArrayState
 
 
@@ -103,6 +109,38 @@ def lease_step_ref(
     )
     owner_count = jnp.sum(owner_mask, axis=0)                 # [N]
     return new_state, owner_count
+
+
+def lease_step_delayed_ref(
+    state: LeaseArrayState,
+    net: NetPlaneState,
+    t,                # scalar int32 tick
+    attempt,          # [N] int32 proposer id attempting each cell (-1 = none)
+    release,          # [N] int32 proposer id releasing each cell (-1 = none)
+    acc_up,           # [A] bool/int32 acceptor reachability this tick
+    delay,            # [A] int32 per-acceptor delay (ticks) for sends this tick
+    drop,             # [A] bool/int32 per-acceptor drop mask for sends this tick
+    *,
+    majority: int,
+    lease_q4: int,
+    round_q4: int,    # timeout-and-abandon horizon in quarter-ticks
+) -> tuple[LeaseArrayState, NetPlaneState, jnp.ndarray]:
+    """One tick of the delayed (in-flight message) model; pure-jnp oracle.
+
+    Returns (new_state, new_net, owner_count[N]). The whole tick body lives
+    in `netplane.delayed_tick_math`, which the Pallas kernel shares.
+    """
+    A, N = state.highest_promised.shape
+    row = lambda r: jnp.asarray(r, jnp.int32).reshape(1, N)
+    col = lambda c: jnp.broadcast_to(
+        jnp.asarray(c).astype(jnp.int32)[:, None], (A, N)
+    )
+    lease, netp, count = delayed_tick_math(
+        tuple(state), tuple(net), t,
+        row(attempt), row(release), col(acc_up), col(delay), col(drop),
+        majority=majority, lease_q4=lease_q4, round_q4=round_q4,
+    )
+    return LeaseArrayState(*lease), NetPlaneState(*netp), count.reshape(N)
 
 
 def owner_row(state: LeaseArrayState) -> jnp.ndarray:

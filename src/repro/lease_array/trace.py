@@ -1,17 +1,33 @@
 """Fault/timing traces replayable through BOTH lease engines.
 
 A trace is the *entire* timing of the world — which proposer attempts which
-cell at which tick, who releases, which acceptors are unreachable. Replaying
-one trace through the event-driven ``core/`` engine and through the
-vectorized ``lease_array`` plane must produce identical per-tick ownership
-(tests/test_lease_array_differential.py asserts it, plus §4 at-most-one-owner
-at every tick).
+cell at which tick, who releases, which acceptors are unreachable, and (in
+the delayed model) how long every message leg takes and which legs are
+lost. Replaying one trace through the event-driven ``core/`` engine and
+through the vectorized ``lease_array`` plane must produce identical
+per-tick ownership (tests assert it, plus §4 at-most-one-owner at every
+tick).
 
 Exact-match construction (why this works, not just approximately):
 
-  - zero-delay network -> a whole prepare/propose round resolves at one
-    simulation instant, FIFO event order = call order;
-  - one attempting proposer per (cell, tick) -> no same-instant races;
+  - message timing is *pinned*: every protocol message sent at tick ``t``
+    on the link to/from acceptor ``a`` takes exactly ``delay[t, a]`` whole
+    ticks and is lost iff ``drop[t, a]``. The event sim replays the same
+    planes via deterministic delay/drop policies on its ``Network``
+    (deliveries land at ``tick + DELIVER_EPS``, inside the drain window,
+    after tick-boundary reachability flips, releases and attempts);
+  - with all-zero planes a whole prepare/propose round resolves inside one
+    tick (FIFO event order = call order) — the PR 1 zero-delay model is
+    the special case, bit-identical on both engines;
+  - proposers abandon a round ``round_ticks`` ticks after starting it (the
+    event sim's round timer fires at ``t0 + round_ticks + ABANDON_EPS`` —
+    after that tick's attempts, *before* its deliveries), so a response
+    can arrive after its round was abandoned, in both engines;
+  - one attempting proposer per (cell, tick), and in delayed traces
+    attempts on the same cell are spaced ``> 4 * max_delay`` ticks apart —
+    a round's last message leaves the network within ``4 * max_delay``
+    ticks, so an in-flight slot in the array plane is never overwritten
+    while its message still matters (see ``netplane.py``);
   - lease timespan ``T = lease_ticks + 0.25`` sim-seconds -> every expiry
     lands strictly *between* integer ticks, so tick-boundary sampling is
     never ambiguous (the array plane's quarter-tick arithmetic encodes the
@@ -19,20 +35,36 @@ Exact-match construction (why this works, not just approximately):
   - event-sim ballots are pinned to ``run = tick + 1`` per attempt, so both
     engines order ballots identically by (tick, proposer id);
   - acceptor downtime is *network* unreachability: messages drop, local
-    expiry timers keep running — in both engines.
+    expiry timers keep running — in both engines. Down acceptors drop
+    requests at *delivery* time (a request in flight toward an acceptor
+    that goes down is lost), exactly like ``Network.set_down``;
+  - §7 releases stay out-of-band (instantaneous, loss-free to reachable
+    acceptors): the delay/drop planes govern the four round phases only.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 import numpy as np
 
 from ..configs.paxoslease_cell import CellConfig
 from ..core.cell import build_cell
+from ..core.messages import (
+    PrepareRequest,
+    PrepareResponse,
+    ProposeRequest,
+    ProposeResponse,
+)
 from ..sim.network import NetConfig
 from .state import NO_PROPOSER
 
 TICK_EPS = 0.1  # sample offset into a tick; < 0.25 so no expiry slips in
+DELIVER_EPS = 0.05  # messages land here within their delivery tick
+ABANDON_EPS = 0.02  # round timer fires here: before deliveries, after attempts
+
+#: messages governed by the trace's delay/drop planes
+PHASE_MESSAGES = (PrepareRequest, PrepareResponse, ProposeRequest, ProposeResponse)
 
 
 def cell_resource(n: int) -> str:
@@ -48,10 +80,31 @@ class Trace:
     attempts: np.ndarray  # [T, N] int32: proposer attempting (or -1)
     releases: np.ndarray  # [T, N] int32: proposer releasing (or -1)
     acc_up: np.ndarray    # [T, A] bool: acceptor reachability
+    delay: Optional[np.ndarray] = None  # [T, A] int32: per-leg delay (ticks)
+    drop: Optional[np.ndarray] = None   # [T, A] bool: per-leg loss
+    round_ticks: int = 1  # proposer abandons a round after this many ticks
 
     @property
     def n_ticks(self) -> int:
         return self.attempts.shape[0]
+
+    @property
+    def delayed(self) -> bool:
+        """True if the trace carries a nonzero delay or drop plane."""
+        return bool(
+            (self.delay is not None and self.delay.any())
+            or (self.drop is not None and self.drop.any())
+        )
+
+    def delay_plane(self) -> np.ndarray:
+        if self.delay is None:
+            return np.zeros((self.n_ticks, self.n_acceptors), np.int32)
+        return self.delay
+
+    def drop_plane(self) -> np.ndarray:
+        if self.drop is None:
+            return np.zeros((self.n_ticks, self.n_acceptors), bool)
+        return self.drop
 
 
 def random_trace(
@@ -65,12 +118,25 @@ def random_trace(
     p_attempt: float = 0.35,
     p_release: float = 0.05,
     p_down_flip: float = 0.02,
+    max_delay_ticks: int = 0,
+    p_drop: float = 0.0,
+    round_ticks: Optional[int] = None,
 ) -> Trace:
     """Randomized trace: per (tick, cell) at most one attempting proposer
     (the no-same-instant-race construction above); releases name a random
     proposer (a no-op unless it actually owns — both engines agree on
     no-ops too); acceptor up/down flips as a Markov chain so outages are
-    sticky, exercising quorum loss and recovery."""
+    sticky, exercising quorum loss and recovery.
+
+    With ``max_delay_ticks > 0`` / ``p_drop > 0`` the trace also carries
+    lossy/laggy message schedules: every leg sent at tick ``t`` to/from
+    acceptor ``a`` takes ``delay[t, a]`` ticks (uniform in
+    [0, max_delay_ticks]) and is lost with the drop plane. Attempts on the
+    same cell are then spaced ``4 * max_delay_ticks + 1`` ticks apart (the
+    slot-isolation construction above). ``round_ticks`` defaults to
+    ``max_delay_ticks + 1`` so slow rounds genuinely get abandoned and
+    responses genuinely arrive late.
+    """
     rng = np.random.default_rng(seed)
     attempts = np.where(
         rng.random((n_ticks, n_cells)) < p_attempt,
@@ -87,14 +153,38 @@ def random_trace(
     for t in range(n_ticks):
         up ^= rng.random(n_acceptors) < p_down_flip
         acc_up[t] = up
+    delay = drop = None
+    if round_ticks is None:
+        round_ticks = max_delay_ticks + 1
+    if max_delay_ticks > 0:
+        delay = rng.integers(
+            0, max_delay_ticks + 1, (n_ticks, n_acceptors)
+        ).astype(np.int32)
+        # slot isolation: a round's messages leave the network within
+        # 4 * max_delay ticks; keep same-cell attempts farther apart
+        gap = 4 * max_delay_ticks + 1
+        last = np.full(n_cells, -gap, np.int64)
+        for t in range(n_ticks):
+            ok = (attempts[t] >= 0) & (t - last >= gap)
+            attempts[t] = np.where(ok, attempts[t], NO_PROPOSER)
+            last = np.where(ok, t, last)
+    if p_drop > 0.0:
+        drop = rng.random((n_ticks, n_acceptors)) < p_drop
     return Trace(
         n_cells, n_acceptors, n_proposers, lease_ticks,
         attempts, releases, acc_up,
+        delay=delay, drop=drop, round_ticks=int(round_ticks),
     )
 
 
-def replay_array(trace: Trace, *, backend: str = "jnp"):
-    """Owners [T, N] + per-tick owner counts via the vectorized plane."""
+def replay_array(trace: Trace, *, backend: str = "jnp", netplane: Optional[bool] = None):
+    """Owners [T, N] + per-tick owner counts via the vectorized plane.
+
+    ``netplane=None`` picks the model automatically: the delayed in-flight
+    plane iff the trace carries nonzero delay/drop planes, else the
+    synchronous zero-delay step (they agree bit-for-bit on zero-delay
+    traces; ``netplane=True`` forces the delayed path to prove it).
+    """
     from .engine import LeaseArrayEngine
 
     eng = LeaseArrayEngine(
@@ -102,20 +192,65 @@ def replay_array(trace: Trace, *, backend: str = "jnp"):
         n_acceptors=trace.n_acceptors,
         n_proposers=trace.n_proposers,
         lease_ticks=trace.lease_ticks,
+        round_ticks=trace.round_ticks,
         backend=backend,
     )
-    return eng.run_trace(trace.attempts, trace.releases, trace.acc_up)
+    if netplane is None:
+        netplane = trace.delayed
+    if not netplane:
+        return eng.run_trace(trace.attempts, trace.releases, trace.acc_up)
+    return eng.run_trace(
+        trace.attempts, trace.releases, trace.acc_up,
+        delay=trace.delay_plane(), drop=trace.drop_plane(),
+    )
+
+
+def _pin_network_to_trace(net, trace: Trace, acc_index: dict[str, int]) -> None:
+    """Install deterministic delay/drop policies replaying the trace's
+    planes: a phase message sent at tick ``t`` on the link to/from acceptor
+    ``a`` is dropped iff ``drop[t, a]`` and otherwise delivered at
+    ``t + delay[t, a] + DELIVER_EPS``. Releases (and anything else) stay
+    instantaneous and loss-free."""
+    delay = trace.delay_plane()
+    dropm = trace.drop_plane()
+    last = trace.n_ticks - 1
+
+    def leg(src: str, dst: str) -> Optional[int]:
+        a = acc_index.get(dst)
+        return a if a is not None else acc_index.get(src)
+
+    def tick_of(now: float) -> int:
+        return min(int(now + 1e-9), last)
+
+    def delay_policy(src, dst, msg, now):
+        if not isinstance(msg, PHASE_MESSAGES):
+            return 0.0  # out-of-band (Release): deliver at the send instant
+        a = leg(src, dst)
+        t = tick_of(now)
+        return (t + int(delay[t, a])) + DELIVER_EPS - now
+
+    def drop_policy(src, dst, msg, now):
+        if not isinstance(msg, PHASE_MESSAGES):
+            return False
+        a = leg(src, dst)
+        return bool(dropm[tick_of(now), a])
+
+    net.set_delay_policy(delay_policy)
+    net.set_drop_policy(drop_policy)
 
 
 def replay_event_sim(trace: Trace, *, strict_monitor: bool = True) -> np.ndarray:
     """Owners [T, N] by replaying the trace through the event-driven core/
-    engine (dedicated acceptor ensemble + detached proposer fleet, zero-delay
-    deterministic network). The trace is the only source of timing: renewal
-    is disabled and autonomous retries are quiesced after every tick."""
+    engine (dedicated acceptor ensemble + detached proposer fleet, message
+    timing pinned to the trace's delay/drop planes). The trace is the only
+    source of timing: renewal is disabled, autonomous retries are quiesced
+    after every tick, and rounds are abandoned by the round timer exactly
+    ``round_ticks`` ticks after they start."""
     cfg = CellConfig(
         n_acceptors=trace.n_acceptors,
         max_lease_time=trace.lease_ticks + 10.0,
         lease_timespan=trace.lease_ticks + 0.25,
+        round_timeout=trace.round_ticks + ABANDON_EPS,
     )
     cell = build_cell(
         cfg,
@@ -127,6 +262,9 @@ def replay_event_sim(trace: Trace, *, strict_monitor: bool = True) -> np.ndarray
     )
     acc_addrs = [n.addr for n in cell.nodes if n.acceptor is not None]
     props = {n.node_id: n.proposer for n in cell.nodes if n.proposer is not None}
+    _pin_network_to_trace(
+        cell.env.network, trace, {addr: a for a, addr in enumerate(acc_addrs)}
+    )
     owners = np.full((trace.n_ticks, trace.n_cells), NO_PROPOSER, np.int32)
     up_now = np.ones(trace.n_acceptors, bool)
 
@@ -143,9 +281,11 @@ def replay_event_sim(trace: Trace, *, strict_monitor: bool = True) -> np.ndarray
             p = props[int(trace.attempts[t, n])]
             st = p._state(cell_resource(n))
             st.want, st.renew, st.timespan = True, False, cfg.lease_timespan
+            st.round = None  # overwrite any open round; no ballot jumps
             p.ballots.run = t  # next() -> run = t+1: (tick, pid) ballot order
             p._start_round(cell_resource(n))
-        cell.env.run_until(t + TICK_EPS)  # drain the zero-delay rounds
+        # drain this tick: round timers (+0.02), then deliveries (+0.05)
+        cell.env.run_until(t + TICK_EPS)
         for n in range(trace.n_cells):
             o = cell.monitor.owner_of(cell_resource(n))
             owners[t, n] = NO_PROPOSER if o is None else o

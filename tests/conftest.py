@@ -7,6 +7,14 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long differential replays (excluded by `make test`; "
+        "run with `make test-all`)",
+    )
+
+
 @pytest.fixture(scope="session")
 def rng_key():
     import jax

@@ -1,0 +1,118 @@
+"""Differential tests for the delayed (in-flight message) lease plane:
+the event-driven core/ engine with trace-pinned per-message delays/drops
+and the vectorized netplane model must agree on ownership at every tick —
+and never violate §4 at-most-one-owner. The construction that makes exact
+agreement possible (pinned delay/drop planes, DELIVER_EPS drain-window
+scheduling, round abandonment timers, attempt spacing) is documented in
+repro/lease_array/trace.py and repro/lease_array/netplane.py."""
+import numpy as np
+import pytest
+
+from repro.lease_array import random_trace, replay_array, replay_event_sim
+
+from test_lease_array_differential import assert_engines_agree
+
+
+@pytest.mark.slow
+def test_thousand_tick_delayed_trace():
+    trace = random_trace(
+        777,
+        n_ticks=1000,
+        n_cells=8,
+        n_acceptors=5,
+        n_proposers=4,
+        lease_ticks=8,
+        p_attempt=0.9,
+        p_release=0.05,
+        p_down_flip=0.02,
+        max_delay_ticks=1,
+        p_drop=0.04,
+        round_ticks=3,
+    )
+    assert trace.delayed
+    owners = assert_engines_agree(trace)
+    # the delayed trace actually exercises the plane: multi-tick rounds
+    # still produce ownership, and losses/abandons leave vacancies
+    assert (owners >= 0).any() and (owners == -1).any()
+    assert float((owners >= 0).mean()) > 0.1
+
+
+@pytest.mark.parametrize(
+    "seed,n_acceptors,n_proposers,lease_ticks,max_delay",
+    [(1, 3, 2, 4, 1), (2, 5, 6, 6, 3), (3, 7, 3, 5, 2), (4, 1, 2, 4, 1)],
+)
+def test_delayed_geometry_sweep(seed, n_acceptors, n_proposers, lease_ticks, max_delay):
+    trace = random_trace(
+        seed,
+        n_ticks=150,
+        n_cells=8,
+        n_acceptors=n_acceptors,
+        n_proposers=n_proposers,
+        lease_ticks=lease_ticks,
+        p_attempt=0.6,
+        p_release=0.1,
+        p_down_flip=0.05,
+        max_delay_ticks=max_delay,
+        p_drop=0.1,
+    )
+    assert_engines_agree(trace)
+
+
+def test_harsh_delay_regime_abandons_rounds():
+    """round_ticks == max_delay + 1 (the default): slow rounds are
+    abandoned mid-flight and responses arrive after abandonment — both
+    engines must still agree tick-for-tick."""
+    trace = random_trace(
+        99,
+        n_ticks=300,
+        n_cells=6,
+        n_acceptors=5,
+        n_proposers=5,
+        lease_ticks=6,
+        p_attempt=0.8,
+        p_release=0.1,
+        p_down_flip=0.05,
+        max_delay_ticks=2,
+        p_drop=0.08,
+    )
+    assert trace.round_ticks == 3
+    owners = assert_engines_agree(trace)
+    assert (owners >= 0).any(), "some fast rounds must still complete"
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_zero_delay_netplane_bitexact_vs_sync(backend):
+    """Acceptance: zero-delay traces reproduce the PR 1 synchronous model
+    bit-identically through the in-flight netplane path, on both backends."""
+    trace = random_trace(
+        1234, n_ticks=120, n_cells=10, n_acceptors=5, n_proposers=4,
+        lease_ticks=3, p_release=0.06, p_down_flip=0.02,
+    )
+    assert not trace.delayed
+    sync_owners, sync_counts = replay_array(trace, backend=backend, netplane=False)
+    net_owners, net_counts = replay_array(trace, backend=backend, netplane=True)
+    assert np.array_equal(sync_owners, net_owners)
+    assert np.array_equal(sync_counts, net_counts)
+
+
+def test_delayed_through_pallas_kernel():
+    trace = random_trace(
+        21, n_ticks=80, n_cells=12, n_acceptors=5, n_proposers=4,
+        lease_ticks=4, max_delay_ticks=2, p_drop=0.05, p_down_flip=0.03,
+    )
+    jnp_owners, jnp_counts = replay_array(trace, backend="jnp")
+    pal_owners, pal_counts = replay_array(trace, backend="pallas")
+    assert np.array_equal(jnp_owners, pal_owners)
+    assert np.array_equal(jnp_counts, pal_counts)
+    assert_engines_agree(trace, backend="pallas")
+
+
+def test_drop_only_trace_uses_netplane_and_agrees():
+    """A trace with zero delays but nonzero drops still needs the
+    netplane model (lost legs, abandoned rounds)."""
+    trace = random_trace(
+        5, n_ticks=150, n_cells=8, n_acceptors=3, n_proposers=3,
+        lease_ticks=3, p_drop=0.25, p_down_flip=0.0,
+    )
+    assert trace.delayed and trace.delay is None
+    assert_engines_agree(trace)

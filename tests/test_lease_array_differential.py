@@ -25,6 +25,7 @@ def assert_engines_agree(trace, backend="jnp"):
     return array_owners
 
 
+@pytest.mark.slow
 def test_thousand_tick_randomized_trace():
     trace = random_trace(
         1234,

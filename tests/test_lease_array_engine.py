@@ -91,6 +91,52 @@ def test_promises_survive_lease_expiry():
     assert (promised > 0).all()  # never reset by expiry
 
 
+# ------------------------------------------------------- engine queries
+def test_ticks_left_owned_unowned_expiring():
+    e = eng(n_cells=3, lease_ticks=3)
+    e.step(attempt=A([0, 1, NA]))
+    # owned cells: won at t=0, expiry quarter 4*3+1=13; unowned cell: 0
+    # at t=1: (13 - 4) // 4 = 2 whole ticks beyond the current one
+    assert e.ticks_left().tolist() == [2, 2, 0]
+    e.step()
+    assert e.ticks_left().tolist() == [1, 1, 0]
+    e.step()
+    assert e.ticks_left().tolist() == [0, 0, 0]  # expiring: no whole tick
+    assert e.owners().tolist() == [0, 1, NA]  # ...but still owned...
+    e.step()
+    assert e.owners().tolist() == [0, 1, NA]  # ...through the expiry tick
+    assert e.ticks_left().tolist() == [0, 0, 0]
+    e.step()  # gone the tick after
+    assert e.owners().tolist() == [NA] * 3
+    assert e.ticks_left().tolist() == [0, 0, 0]
+
+
+def test_ticks_left_resets_on_extend():
+    e = eng(n_cells=1, lease_ticks=4)
+    e.step(attempt=A([2]))
+    for _ in range(3):
+        e.step()
+    assert e.ticks_left().tolist() == [0]
+    e.step(attempt=A([2]))  # §6 extend restarts the clock
+    assert e.ticks_left().tolist() == [3]
+
+
+def test_row_rejects_ghost_proposer():
+    e = eng(n_cells=2, n_proposers=4)
+    with pytest.raises(ValueError, match=r"proposer id 4 out of range.*4 proposers"):
+        e.step(attempt=A([4, NA]))
+    with pytest.raises(ValueError, match="out of range"):
+        e.step(release=A([NA, 99]))
+
+
+def test_row_rejects_below_sentinel():
+    e = eng(n_cells=2)
+    with pytest.raises(ValueError, match="out of range"):
+        e.step(attempt=A([-2, 0]))
+    # the sentinel itself and valid ids are fine
+    assert e.step(attempt=A([NA, 0])).tolist() == [NA, 0]
+
+
 # -------------------------------------------------- kernel vs oracle, width
 @pytest.mark.parametrize("n_cells", [64, 100, 1000])
 def test_pallas_matches_jnp_oracle(n_cells):

@@ -1,0 +1,178 @@
+"""Unit tests for the in-flight message plane (netplane) edge cases:
+late responses after round abandonment, duplicate deliveries, full
+partitions, and response-leg loss — at the array level, driving
+LeaseArrayEngine.step with explicit per-tick delay/drop schedules."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.lease_array import LeaseArrayEngine, NO_PROPOSER
+from repro.lease_array.netplane import R_IDLE, R_PREPARING, R_PROPOSING
+
+A = np.array
+
+
+def eng(n_cells=1, **kw):
+    kw.setdefault("n_acceptors", 3)
+    kw.setdefault("n_proposers", 2)
+    kw.setdefault("lease_ticks", 3)
+    return LeaseArrayEngine(n_cells, **kw)
+
+
+def test_response_after_abandon_is_ignored():
+    """Round abandoned at t0 + round_ticks; the prepare responses land
+    later and must not resurrect it — but the acceptors still processed
+    the requests (promises were raised)."""
+    e = eng(round_ticks=2)
+    # requests take 3 ticks; the round is abandoned at t=2, requests land t=3
+    assert e.step(attempt=A([0]), delay=A([3, 3, 3])).tolist() == [NO_PROPOSER]
+    assert int(e.net.rnd_phase[0, 0]) == R_PREPARING
+    e.step()  # t=1: request still in flight
+    assert int(np.asarray(e.net.preq_b).max()) > 0
+    e.step()  # t=2: timeout-and-abandon fires (before any delivery)
+    assert int(e.net.rnd_ballot[0, 0]) == 0
+    assert int(e.net.rnd_phase[0, 0]) == R_IDLE
+    for _ in range(6):  # t=3: requests delivered, responses return, ignored
+        assert e.step().tolist() == [NO_PROPOSER]
+    promised = np.asarray(e.state.highest_promised)
+    assert (promised == 2).all(), "acceptors promised ballot (0+1)*2+0 = 2"
+    assert int(np.asarray(e.net.presp_b).max()) == 0, "late responses consumed"
+    assert int(np.asarray(e.state.owner_mask).sum()) == 0
+
+
+def test_duplicate_prepare_response_cannot_double_count_quorum():
+    """The event engine counts votes as sets of acceptor ids; the array
+    plane's rnd_open mask must be equally duplicate-proof."""
+    e = eng(round_ticks=10)  # majority = 2 of 3
+    # acceptor 0 answers fast; acceptors 1, 2 are 5 ticks away
+    e.step(attempt=A([0]), delay=A([1, 5, 5]))  # t=0
+    e.step()  # t=1: acc0 processes the request, response (0 delay) arrives
+    assert int(e.net.rnd_open[0, 0]) == 1
+    assert int(np.asarray(e.net.rnd_open).sum()) == 1
+    # adversarial transport: duplicate acc0's open response, delivered t=2
+    dup_b = e.net.presp_b.at[0, 0].set(int(e.net.rnd_ballot[0, 0]))
+    dup_at = e.net.presp_at.at[0, 0].set(4 * 2)
+    dup_pay = e.net.presp_pay.at[0, 0].set(NO_PROPOSER)
+    e.net = e.net._replace(presp_b=dup_b, presp_at=dup_at, presp_pay=dup_pay)
+    own = e.step()  # t=2: duplicate delivered
+    assert own.tolist() == [NO_PROPOSER]
+    assert int(np.asarray(e.net.rnd_open).sum()) == 1, "no double count"
+    assert int(e.net.rnd_phase[0, 0]) == R_PREPARING, "quorum not faked"
+    e.step()  # t=3
+    e.step()  # t=4
+    assert e.owners().tolist() == [NO_PROPOSER]
+    # t=5: the genuine second and third opens arrive -> propose -> owner
+    own = e.step()
+    assert own.tolist() == [0]
+    assert int(np.asarray(e.last_owner_count).max()) <= 1
+
+
+def test_full_partition_tick_leaves_acceptors_untouched():
+    """drop[t] all-True: every message sent this tick is lost — the
+    acceptors never see the round at all."""
+    e = eng(round_ticks=4)
+    before = np.asarray(e.state.highest_promised).copy()
+    e.step(attempt=A([0]), drop=A([1, 1, 1]))
+    assert int(np.asarray(e.net.preq_b).max()) == 0, "requests never sent"
+    for _ in range(6):
+        assert e.step().tolist() == [NO_PROPOSER]
+    assert np.array_equal(np.asarray(e.state.highest_promised), before)
+    assert int(np.asarray(e.state.accepted_ballot).max()) == 0
+
+
+def test_dropped_response_leg_still_raises_promise():
+    """Loss is per leg: when the responses are dropped the acceptors have
+    still processed the requests (promises raised), like the event
+    acceptor answering into a lossy socket."""
+    e = eng(round_ticks=4)
+    e.step(attempt=A([1]), delay=A([1, 1, 1]))  # t=0: requests in flight
+    e.step(drop=A([1, 1, 1]))  # t=1: requests land; every response is lost
+    promised = np.asarray(e.state.highest_promised)
+    assert (promised == 3).all(), "ballot (0+1)*2+1 = 3 promised everywhere"
+    assert int(np.asarray(e.net.presp_b).max()) == 0, "responses lost at send"
+    for _ in range(6):
+        assert e.step().tolist() == [NO_PROPOSER]
+
+
+def test_response_arriving_while_proposing_is_ignored():
+    """A straggler open response landing after the round moved to the
+    propose phase must not re-enter quorum counting (the event proposer
+    ignores PrepareResponses once phase != PREPARING)."""
+    e = eng(round_ticks=10)
+    # acc0 and acc1 answer immediately (majority!), acc2 is 4 ticks away
+    e.step(attempt=A([0]), delay=A([0, 0, 4]))  # t=0: quorum of 2 -> owner
+    assert e.owners().tolist() == [0]
+    assert int(e.net.rnd_ballot[0, 0]) == 0, "round completed and cleared"
+    opens_before = int(np.asarray(e.net.rnd_open).sum())
+    for _ in range(5):  # acc2's response lands around t=4+: round is gone
+        e.step()
+    assert int(np.asarray(e.net.rnd_open).sum()) == opens_before == 0
+    assert int(np.asarray(e.net.presp_b).max()) == 0
+
+
+def test_accepts_after_own_lease_window_do_not_grant_ownership():
+    """§3 step 5: the proposer's timer (started at the propose broadcast)
+    bounds the ownership claim. If the accepts crawl back after that window
+    elapsed, the proposer must NOT become owner — otherwise it would hold a
+    'lease' that outlives every acceptor's timer (a §4 hazard)."""
+    e = eng(round_ticks=10, lease_ticks=2)
+    e.step(attempt=A([0]), delay=A([1, 1, 1]))  # t=0: requests out
+    e.step(delay=A([1, 1, 1]))  # t=1: requests land, responses out
+    e.step(delay=A([4, 4, 4]))  # t=2: majority opens -> timer starts,
+    #                                  propose requests crawl (4 ticks)
+    assert int(e.net.rnd_phase[0, 0]) == R_PROPOSING
+    assert int(e.net.rnd_expiry[0, 0]) == 4 * 2 + 4 * 2 + 1  # expires ~t=4
+    for _ in range(3, 8):  # t=6: requests land, accepts return instantly —
+        e.step()           # but our window closed at quarter-tick 17 (t<=4)
+        assert e.owners().tolist() == [NO_PROPOSER]
+    # the acceptors DID accept (their leases run) — only the claim is dead
+    assert int(np.asarray(e.state.accepted_ballot).max()) > 0
+
+
+def test_late_accepts_differential_vs_event_sim():
+    """The same late-accept scenario through the differential referee:
+    the event proposer must also refuse the ghost lease (its lease timer
+    already fired), keeping both engines bit-identical."""
+    from repro.lease_array import Trace
+    from test_lease_array_differential import assert_engines_agree
+
+    T, N, A_, P = 16, 2, 3, 2
+    attempts = np.full((T, N), NO_PROPOSER, np.int32)
+    attempts[0, 0] = 0
+    attempts[3, 1] = 1  # control cell: a fast zero-delay round -> owner
+    delay = np.zeros((T, A_), np.int32)
+    delay[0] = 1  # prepare requests: land t=1
+    delay[1] = 1  # prepare responses: land t=2 (majority -> timer starts)
+    delay[2] = 4  # propose requests: land t=6, after the window (t<=4)
+    trace = Trace(
+        N, A_, P, lease_ticks=2,
+        attempts=attempts,
+        releases=np.full((T, N), NO_PROPOSER, np.int32),
+        acc_up=np.ones((T, A_), bool),
+        delay=delay, round_ticks=10,
+    )
+    owners = assert_engines_agree(trace)
+    assert (owners[:, 0] == NO_PROPOSER).all(), "late accepts: no owner ever"
+    assert (owners[3:6, 1] == 1).all(), "control cell owned normally"
+
+
+def test_multi_tick_round_timing():
+    """A symmetric 1-tick delay: prepare out t=0..1, responses t=2,
+    propose out t=2..3, accepts t=4 -> ownership visible at tick 4, and
+    the proposer's own timer started at the propose tick (t=2)."""
+    e = eng(round_ticks=10, lease_ticks=3)
+    e.step(attempt=A([0]), delay=A([1, 1, 1]))          # t=0
+    assert e.owners().tolist() == [NO_PROPOSER]
+    e.step(delay=A([1, 1, 1]))                           # t=1: preq lands, resp sent (1 tick)
+    assert e.owners().tolist() == [NO_PROPOSER]
+    e.step(delay=A([1, 1, 1]))                           # t=2: opens -> propose sent (1 tick)
+    assert int(e.net.rnd_phase[0, 0]) == R_PROPOSING
+    assert e.owners().tolist() == [NO_PROPOSER]
+    e.step(delay=A([1, 1, 1]))                           # t=3: accepts sent (1 tick)
+    assert e.owners().tolist() == [NO_PROPOSER]
+    own = e.step()                                       # t=4: accepts land -> owner
+    assert own.tolist() == [0]
+    # timer started at t=2 -> expiry quarter 4*2 + 4*3 + 1 = 21
+    assert int(np.asarray(e.state.owner_expiry).max()) == 21
+    # owned through tick 5 (21 > 20), gone at tick 6 (21 < 24)
+    assert e.step().tolist() == [0]
+    assert e.step().tolist() == [NO_PROPOSER]

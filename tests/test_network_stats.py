@@ -1,0 +1,82 @@
+"""Network accounting: loss causes are distinguished (src down, partition,
+policy, random loss, dst down mid-flight, unregistered address) and
+surfaced by Network.stats(); pinned delay/drop policies are deterministic."""
+from repro.sim.events import Scheduler
+from repro.sim.network import NetConfig, Network
+
+
+def make_net(**cfg):
+    cfg.setdefault("delay_min", 0.0)
+    cfg.setdefault("delay_max", 0.0)
+    sched = Scheduler()
+    net = Network(sched, NetConfig(**cfg), seed=0)
+    inbox = []
+    net.register("a", lambda msg, src: inbox.append(("a", src, msg)))
+    net.register("b", lambda msg, src: inbox.append(("b", src, msg)))
+    return sched, net, inbox
+
+
+def test_sent_vs_delivered_vs_dropped_causes():
+    sched, net, inbox = make_net()
+    net.send("a", "b", "m1")  # delivered
+    net.set_down("a")
+    net.send("a", "b", "m2")  # src down: a crashed node doesn't speak
+    net.set_down("a", False)
+    net.partition({"a"}, {"b"})
+    net.send("a", "b", "m3")  # partitioned at send
+    net.heal()
+    net.send("a", "ghost", "m4")  # nothing registered there
+    sched.run_until(1.0)  # m1 lands; m2-m4 were dropped at send
+    net.send("a", "b", "m5")  # dst goes down while m5 is in flight
+    net.set_down("b")
+    sched.run_until(10.0)
+    s = net.stats()
+    assert s["sent"] == 5
+    assert s["delivered"] == 1 and len(inbox) == 1
+    assert s["dropped"]["src_down"] == 1
+    assert s["dropped"]["partition"] == 1
+    assert s["dropped"]["no_handler"] == 1
+    assert s["dropped"]["dst_down"] == 1
+    assert s["dropped_total"] == 4
+    assert s["sent"] == s["delivered"] + s["dropped_total"]
+
+
+def test_random_loss_is_counted_as_loss():
+    sched, net, inbox = make_net(loss=1.0)
+    for _ in range(7):
+        net.send("a", "b", "x")
+    sched.run_until(1.0)
+    s = net.stats()
+    assert s["sent"] == 7 and s["delivered"] == 0
+    assert s["dropped"]["loss"] == 7 and len(inbox) == 0
+
+
+def test_partition_mid_flight_counts_as_partition():
+    sched, net, inbox = make_net(delay_min=1.0, delay_max=1.0)
+    net.send("a", "b", "slow")
+    net.partition({"a"}, {"b"})  # cut while the message is in transit
+    sched.run_until(5.0)
+    assert net.stats()["dropped"]["partition"] == 1
+    assert len(inbox) == 0
+
+
+def test_drop_and_delay_policies_are_deterministic():
+    sched, net, inbox = make_net()
+    net.set_drop_policy(lambda src, dst, msg, now: msg == "lose-me")
+    net.set_delay_policy(lambda src, dst, msg, now: 2.5)
+    net.send("a", "b", "lose-me")
+    net.send("a", "b", "keep-me")
+    sched.run_until(2.0)
+    assert len(inbox) == 0, "pinned delay: not delivered yet"
+    sched.run_until(3.0)
+    assert [m for _, _, m in inbox] == ["keep-me"]
+    s = net.stats()
+    assert s["dropped"]["policy"] == 1 and s["delivered"] == 1
+
+
+def test_duplicate_delivery_inflates_delivered():
+    sched, net, inbox = make_net(duplicate=1.0)
+    net.send("a", "b", "twin")
+    sched.run_until(1.0)
+    s = net.stats()
+    assert s["sent"] == 1 and s["delivered"] == 2 and len(inbox) == 2
