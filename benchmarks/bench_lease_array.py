@@ -5,8 +5,16 @@ The event engine pays Python per message (the per-message overhead that
 dominates quorum-protocol throughput in practice); the array plane pays one
 batched step for *all* cells per tick. Reported as cell-ticks/sec, plus the
 single-batched-step width (the acceptance floor is >= 4096 concurrent cells).
+
+``python -m benchmarks.bench_lease_array`` runs every mode and writes the
+machine-readable ``BENCH_lease_array.json`` (schema at the bottom) so the
+perf trajectory is tracked across PRs; ``make bench-json`` wraps it.
 """
 from __future__ import annotations
+
+import json
+import platform
+from pathlib import Path
 
 import numpy as np
 
@@ -74,13 +82,13 @@ def run():
     return rows
 
 
-def _delayed_trace(max_delay: int, n_ticks: int, seed: int = 5):
+def _delayed_trace(max_delay: int, n_ticks: int, seed: int = 5, asymmetric=False):
     return random_trace(
         seed, n_ticks=n_ticks, n_cells=DELAY_CELLS,
         n_acceptors=5, n_proposers=8, lease_ticks=8,
         p_attempt=0.8, p_release=0.05, p_down_flip=0.0,
         max_delay_ticks=max_delay, p_drop=0.05 if max_delay else 0.0,
-        round_ticks=max(3, max_delay + 1),
+        asymmetric=asymmetric, round_ticks=max(3, max_delay + 1),
     )
 
 
@@ -89,22 +97,59 @@ def run_delayed(depths=DELAY_DEPTHS):
     the netplane scan at increasing per-leg delay bounds (depth 0 = the
     zero-delay special case run through the same delayed step), plus the
     resulting ownership density — lease dynamics vs latency regime, the
-    Keyspace/cloud-report axis (arXiv 1209.3913, 1404.6719)."""
+    Keyspace/cloud-report axis (arXiv 1209.3913, 1404.6719). The last row
+    re-runs the deepest sweep point with asymmetric [T, P, A] link
+    matrices (per-(proposer, acceptor) Scenario planes)."""
     rows = []
-    for depth in depths:
-        tr = _delayed_trace(depth, DELAY_TICKS)
+    sweep = [(d, False) for d in depths] + [(max(depths), True)]
+    for depth, asym in sweep:
+        tr = _delayed_trace(depth, DELAY_TICKS, asymmetric=asym)
         # warm with the SAME trace length: the scan jit is shape-specialized,
         # so a short warm-up trace would leave the compile inside the timer
-        replay_array(_delayed_trace(depth, DELAY_TICKS, seed=6), netplane=True)
+        replay_array(
+            _delayed_trace(depth, DELAY_TICKS, seed=6, asymmetric=asym),
+            netplane=True,
+        )
         with WallTimer() as wt:
             owners, counts = replay_array(tr, netplane=True)
         assert counts.max() <= 1, "at-most-one-owner violated in the netplane"
         rate = DELAY_CELLS * DELAY_TICKS / wt.dt
+        name = f"lease_netplane_delay{depth}" + ("_asym" if asym else "")
         rows.append((
-            f"lease_netplane_delay{depth}",
+            name,
             wt.dt / (DELAY_CELLS * DELAY_TICKS) * 1e6,
             f"{DELAY_CELLS} cells x {DELAY_TICKS} ticks, delay<={depth} "
-            f"drop={0.05 if depth else 0.0}: {fmt(rate)} cell-ticks/s, "
+            f"drop={0.05 if depth else 0.0}"
+            f"{' [P, A] asymmetric links' if asym else ''}: "
+            f"{fmt(rate)} cell-ticks/s, "
             f"owned={float((owners >= 0).mean()):.2f}",
         ))
     return rows
+
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_lease_array.json"
+
+
+def emit_json(path=JSON_PATH) -> dict:
+    """Run every mode and write the machine-readable trajectory record:
+    ``{"rows": [{"name", "us_per_cell_tick", "detail"}, ...], ...}`` —
+    lower ``us_per_cell_tick`` is better; names are stable across PRs."""
+    rows = run() + run_delayed()
+    doc = {
+        "benchmark": "lease_array",
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "rows": [
+            {"name": n, "us_per_cell_tick": round(us, 4), "detail": d}
+            for n, us, d in rows
+        ],
+    }
+    Path(path).write_text(json.dumps(doc, indent=2) + "\n")
+    return doc
+
+
+if __name__ == "__main__":
+    doc = emit_json()
+    for r in doc["rows"]:
+        print(f'{r["name"]},{r["us_per_cell_tick"]:.2f},"{r["detail"]}"')
+    print(f"wrote {JSON_PATH}")

@@ -1,27 +1,51 @@
 """Vectorized lease plane (§8: PaxosLease for many resources).
 
 N independent PaxosLease cells x A acceptors x P proposers as dense int32
-arrays, advanced in lockstep one tick at a time — under two network
-models: the synchronous zero-delay tick (a whole prepare/propose round
-resolves in one tick) and the delayed *in-flight message plane*
-(`netplane.py`): dense per-phase request/response arrays with per-tick
-per-acceptor delay and drop schedules, so rounds span multiple ticks and
-responses arrive late, get lost, or land after the proposer abandoned the
-round — the §1 failure model, at array scale.
+arrays, advanced in lockstep one tick at a time.
 
+Every fault dimension is a named plane in one declarative **Scenario**
+pytree (``scenario.py``): proposer attempts/releases ``[T, N]``, acceptor
+reachability ``[T, A]``, and asymmetric per-(proposer, acceptor) link
+delay/drop matrices ``[T, P, A]`` (the symmetric ``[T, A]`` form
+broadcasts). The engine consumes a ``Scenario`` whole (``run_trace``) or
+one ``TickInputs`` slice at a time (``step``); registering a new fault
+plane (``register_plane``) extends the schema without changing any
+signature — the §1 failure model ("delayed, reordered, lost, crash and
+restart") as a registry, not an argument list.
+
+Two network models share one scanner: the synchronous zero-delay tick
+(a whole prepare/propose round resolves in one tick) and the delayed
+*in-flight message plane* (``netplane.py``): dense per-phase
+request/response slot arrays — plus §7 release discards riding the same
+slots — so rounds span multiple ticks and any leg can arrive late, be
+lost, or land after its round was abandoned. Zero-delay scenarios are
+bit-identical across the two models and both backends.
+
+  scenario.py — the Scenario/TickInputs pytrees + the plane registry
   state.py    — array layout, quarter-tick time base, (tick, proposer) ballots
   netplane.py — in-flight message + proposer round planes, shared tick math
   ref.py      — pure-jnp oracles for one tick (sync + delayed)
   kernel.py   — fused Pallas kernels (one VMEM pass per tick, both models)
   ops.py      — jit'd dispatch (jnp | pallas interpret | pallas TPU) + padding
-  engine.py   — stateful driver: per-tick step and lax.scan trace runners
-  trace.py    — fault/timing/delay/drop traces + the event-sim differential
-                referee (message timing pinned onto sim.network.Network)
+  engine.py   — stateful driver: per-tick step and the lax.scan scenario scanner
+  trace.py    — fault/timing traces + the event-sim differential referee
+                (per-link message timing pinned onto sim.network.Network)
   directory.py— shard-ownership directory on top (cluster/shards.py fast path)
+
+See docs/scenario_api.md for the migration table from the legacy
+one-kwarg-per-fault-dimension API (kept as deprecation shims).
 """
 from .engine import LeaseArrayEngine
 from .netplane import NetPlaneState, init_netplane
-from .ops import lease_plane_step, lease_plane_step_delayed
+from .ops import lease_plane_step, lease_plane_step_delayed, lease_plane_tick
+from .scenario import (
+    PLANES,
+    PlaneSpec,
+    Scenario,
+    TickInputs,
+    make_tick,
+    register_plane,
+)
 from .state import NO_PROPOSER, LeaseArrayState, ballot_of, init_state, lease_quarters
 from .trace import Trace, random_trace, replay_array, replay_event_sim
 
@@ -30,14 +54,21 @@ __all__ = [
     "LeaseArrayState",
     "NO_PROPOSER",
     "NetPlaneState",
+    "PLANES",
+    "PlaneSpec",
+    "Scenario",
+    "TickInputs",
     "Trace",
     "ballot_of",
     "init_netplane",
     "init_state",
     "lease_plane_step",
     "lease_plane_step_delayed",
+    "lease_plane_tick",
     "lease_quarters",
+    "make_tick",
     "random_trace",
+    "register_plane",
     "replay_array",
     "replay_event_sim",
 ]

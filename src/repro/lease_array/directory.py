@@ -131,7 +131,7 @@ class LeaseArrayDirectory:
             free = np.flatnonzero((owners < 0) & (attempt < 0))
             k = min(len(seq), len(free))
             attempt[free[:k]] = seq[:k]
-        return self.engine.step(attempt, release).astype(np.int32)
+        return self.engine.step(attempt=attempt, release=release).astype(np.int32)
 
     # -------------------------------------------------------------- queries
     def coverage(self) -> float:

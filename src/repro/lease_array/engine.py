@@ -2,17 +2,24 @@
 
 Two modes:
   - ``step(...)``    — advance one tick (host-driven; the directory uses it)
-  - ``run_trace``    — ``jax.lax.scan`` over a whole [T, ...] trace in one
-                       jitted call (the bulk/benchmark path); independent
-                       planes batch further with ``jax.vmap`` (see
-                       ``scan_fn``'s pytree-in/pytree-out signature and
-                       tests/test_lease_array_engine.py::test_vmap_planes).
+  - ``run_trace``    — ``jax.lax.scan`` over a whole [T]-tick ``Scenario``
+                       in one jitted call (the bulk/benchmark path);
+                       independent planes batch further with ``jax.vmap``
+                       over ``Scenario.stack`` (see ``_scenario_scanner``'s
+                       pytree-in/pytree-out signature and
+                       tests/test_scenario.py::test_vmap_stacked_scenarios).
 
-Two network models: the synchronous zero-delay tick (every round resolves
-in one tick) and the delayed in-flight message plane (``netplane.py``).
-Passing ``delay=``/``drop=`` to ``step``/``run_trace`` switches the engine
-onto the delayed model; it stays there (messages may be in flight) with
-zero-delay defaults from then on.
+Inputs are declarative **Scenario planes** (``scenario.py``): one pytree
+carries every fault dimension — attempts, releases, acceptor reachability,
+and asymmetric per-(proposer, acceptor) delay/drop link matrices — so new
+fault planes register into the schema instead of growing new arguments.
+The legacy per-plane kwargs still work as thin shims that build the pytree.
+
+Two network models share one scanner: the synchronous zero-delay tick
+(every round resolves in one tick) and the delayed in-flight message plane
+(``netplane.py``). A scenario (or ``step`` call) carrying nonzero delay or
+drop planes switches the engine onto the delayed model; it stays there
+(messages may be in flight) with zero-delay defaults from then on.
 """
 from __future__ import annotations
 
@@ -23,52 +30,37 @@ import jax.numpy as jnp
 import numpy as np
 
 from .netplane import NetPlaneState, init_netplane
-from .ops import lease_plane_step, lease_plane_step_delayed
+from .ops import lease_plane_tick
 from .ref import owner_row
-from .state import NO_PROPOSER, QUARTERS, LeaseArrayState, init_state, lease_quarters
+from .scenario import Scenario, TickInputs, make_tick
+from .state import QUARTERS, LeaseArrayState, init_state, lease_quarters
 
 
 @functools.lru_cache(maxsize=None)
-def _trace_scanner(majority: int, lease_q4: int, backend: str):
-    """Jitted (state, t0, attempts, releases, acc_up) -> (state, owners, counts)."""
-
-    def scan_fn(state, t0, attempts, releases, acc_up):
-        def body(carry, xs):
-            st, t = carry
-            att, rel, up = xs
-            st, count = lease_plane_step(
-                st, t, att, rel, up,
-                majority=majority, lease_q4=lease_q4, backend=backend,
-            )
-            return (st, t + 1), (owner_row(st), count)
-
-        (state, _), (owners, counts) = jax.lax.scan(
-            body, (state, t0), (attempts, releases, acc_up)
-        )
-        return state, owners, counts
-
-    return jax.jit(scan_fn)
-
-
-@functools.lru_cache(maxsize=None)
-def _delayed_trace_scanner(
-    majority: int, lease_q4: int, round_q4: int, backend: str
+def _scenario_scanner(
+    majority: int, lease_q4: int, round_q4: int, backend: str, sync: bool
 ):
-    """Jitted delayed-model scan: carries (lease state, netplane state)."""
+    """Jitted (state, net, t0, planes) -> (state, net, owners, counts).
 
-    def scan_fn(state, net, t0, attempts, releases, acc_up, delays, drops):
+    ONE scanner serves both network models: ``sync`` statically picks the
+    zero-delay body (net passes through untouched, delay/drop planes are
+    dead code) or the in-flight netplane body. ``planes`` is a dict pytree
+    of [T, ...] scenario planes — lax.scan slices every registered plane
+    per tick, so newly registered planes ride along with no new argument.
+    """
+
+    def scan_fn(state, net, t0, planes):
         def body(carry, xs):
             st, nt, t = carry
-            att, rel, up, dl, dr = xs
-            st, nt, count = lease_plane_step_delayed(
-                st, nt, t, att, rel, up, dl, dr,
+            st, nt, count = lease_plane_tick(
+                st, nt, t, TickInputs(xs),
                 majority=majority, lease_q4=lease_q4, round_q4=round_q4,
-                backend=backend,
+                backend=backend, sync=sync,
             )
             return (st, nt, t + 1), (owner_row(st), count)
 
         (state, net, _), (owners, counts) = jax.lax.scan(
-            body, (state, net, t0), (attempts, releases, acc_up, delays, drops)
+            body, (state, net, t0), planes
         )
         return state, net, owners, counts
 
@@ -107,82 +99,123 @@ class LeaseArrayEngine:
 
     # ------------------------------------------------------------ one tick
     def step(
-        self, attempt=None, release=None, acc_up=None, delay=None, drop=None
+        self, tick=None, release=None, acc_up=None, delay=None, drop=None,
+        *, attempt=None,
     ) -> np.ndarray:
         """Advance one tick; returns the per-cell owner row (id or -1).
 
-        ``delay``/``drop`` are per-acceptor [A] schedules for messages sent
-        this tick (delay in whole ticks); passing either switches the
-        engine onto the delayed in-flight model permanently.
+        Pass a :class:`TickInputs` (``make_tick(...)``) — or the legacy
+        per-plane kwargs, which build one: ``delay``/``drop`` are ``[P, A]``
+        link matrices (legacy ``[A]`` broadcasts over P) for legs sent this
+        tick, in whole ticks; passing either kwarg — or a tick whose
+        delay/drop planes are nonzero — switches the engine onto the
+        delayed in-flight model permanently. (For backward compatibility
+        the legacy planes are also accepted positionally — the first
+        positional argument doubles as the bare attempt row.)
 
         Slot-isolation precondition (netplane.py): a new attempt on a cell
         overwrites that cell's in-flight request slots, so attempts on the
         SAME cell must be spaced more than ``4 * max_delay`` ticks apart
-        while older messages may still be in flight (``random_trace``
-        enforces this; hand-driven schedules must too).
+        while older messages may still be in flight; same for releases
+        with ``max_delay`` (``random_trace`` enforces both; hand-driven
+        schedules must too).
         """
-        attempt = self._row(attempt)
-        release = self._row(release)
-        acc_up = (
-            jnp.ones(self.n_acceptors, jnp.int32) if acc_up is None
-            else jnp.asarray(acc_up)
-        )
-        if delay is not None or drop is not None:
-            self._netplane_active = True
-        if not self._netplane_active:
-            self.state, self.last_owner_count = lease_plane_step(
-                self.state, self.t, attempt, release, acc_up,
-                majority=self.majority, lease_q4=self.lease_q4,
-                backend=self.backend,
+        if tick is not None and not isinstance(tick, TickInputs):
+            if attempt is not None:
+                raise TypeError(
+                    "pass the attempt row positionally or as attempt=, not both"
+                )
+            attempt, tick = tick, None  # legacy positional attempt row
+        elif tick is not None and any(
+            x is not None for x in (attempt, release, acc_up, delay, drop)
+        ):
+            raise TypeError(
+                "pass planes inside the TickInputs, not alongside it"
             )
+        if tick is None:
+            tick = make_tick(  # validates ghost proposer ids, shapes, dtypes
+                n_cells=self.n_cells, n_acceptors=self.n_acceptors,
+                n_proposers=self.n_proposers,
+                attempts=attempt, releases=release, acc_up=acc_up,
+                delay=delay, drop=drop,
+            )
+            if delay is not None or drop is not None:
+                self._netplane_active = True  # only once validation passed
         else:
-            delay = self._schedule(delay, (self.n_acceptors,))
-            drop = self._schedule(drop, (self.n_acceptors,))
-            self.state, self.net, self.last_owner_count = lease_plane_step_delayed(
-                self.state, self.net, self.t, attempt, release, acc_up,
-                delay, drop,
-                majority=self.majority, lease_q4=self.lease_q4,
-                round_q4=self.round_q4, backend=self.backend,
+            tick.validate_for(
+                n_cells=self.n_cells, n_acceptors=self.n_acceptors,
+                n_proposers=self.n_proposers,
             )
+            if np.asarray(tick.delay).any() or np.asarray(tick.drop).any():
+                self._netplane_active = True
+        self.state, self.net, self.last_owner_count = lease_plane_tick(
+            self.state, self.net, self.t, tick,
+            majority=self.majority, lease_q4=self.lease_q4,
+            round_q4=self.round_q4, backend=self.backend,
+            sync=not self._netplane_active,
+        )
         self.t += 1
         return np.asarray(owner_row(self.state))
 
     # ------------------------------------------------------------ bulk path
-    def run_trace(self, attempts, releases=None, acc_up=None, delay=None, drop=None):
-        """Scan a [T, N] trace in one jitted call.
+    def run_trace(
+        self, scenario=None, releases=None, acc_up=None, delay=None,
+        drop=None, *, netplane=None, attempts=None,
+    ):
+        """Scan a [T]-tick :class:`Scenario` in one jitted call.
 
-        ``delay``/``drop`` are optional [T, A] schedules (per-tick,
-        per-acceptor); providing either runs the delayed in-flight model.
-        Returns (owners [T, N], owner_counts [T, N]) as numpy; the engine's
-        state/tick advance past the trace.
+        The first argument is a ``Scenario`` (``Scenario.build(...)``); the
+        legacy form — a [T, N] attempts array (positionally or as the
+        ``attempts=`` keyword) plus per-plane kwargs, with ``delay``/
+        ``drop`` as [T, A] or [T, P, A] schedules — builds one (and is
+        validated identically, ghost proposer ids included).
+
+        ``netplane`` picks the network model: None (default) auto-selects
+        the delayed in-flight model iff the scenario carries nonzero
+        delay/drop planes (or the engine is already on it); True forces it
+        (zero-delay scenarios are bit-identical either way); False forces
+        the synchronous step — the sync tick cannot honor fault planes, so
+        a delayed scenario (or an engine already on the in-flight model)
+        raises rather than silently dropping them.
+        Returns (owners [T, N], owner_counts [T, N]) as numpy; the
+        engine's state/tick advance past the trace.
         """
-        attempts = jnp.asarray(attempts, jnp.int32)
-        T = attempts.shape[0]
-        releases = (
-            jnp.full((T, self.n_cells), NO_PROPOSER, jnp.int32)
-            if releases is None else jnp.asarray(releases, jnp.int32)
-        )
-        acc_up = (
-            jnp.ones((T, self.n_acceptors), jnp.int32)
-            if acc_up is None else jnp.asarray(acc_up).astype(jnp.int32)
-        )
-        if delay is not None or drop is not None:
-            self._netplane_active = True
-        if not self._netplane_active:
-            scanner = _trace_scanner(self.majority, self.lease_q4, self.backend)
-            self.state, owners, counts = scanner(
-                self.state, jnp.int32(self.t), attempts, releases, acc_up
+        if attempts is not None:
+            if scenario is not None:
+                raise TypeError(
+                    "pass the attempts plane positionally or as attempts=, "
+                    "not both"
+                )
+            scenario = attempts  # legacy keyword call sites
+        if not isinstance(scenario, Scenario):
+            scenario = Scenario.build(
+                n_cells=self.n_cells, n_acceptors=self.n_acceptors,
+                n_proposers=self.n_proposers,
+                attempts=scenario, releases=releases, acc_up=acc_up,
+                delay=delay, drop=drop,
             )
         else:
-            delay = self._schedule(delay, (T, self.n_acceptors))
-            drop = self._schedule(drop, (T, self.n_acceptors))
-            scanner = _delayed_trace_scanner(
-                self.majority, self.lease_q4, self.round_q4, self.backend
+            scenario.validate_for(
+                n_cells=self.n_cells, n_acceptors=self.n_acceptors,
+                n_proposers=self.n_proposers,
             )
-            self.state, self.net, owners, counts = scanner(
-                self.state, self.net, jnp.int32(self.t),
-                attempts, releases, acc_up, delay, drop,
+        T = scenario.n_ticks
+        if netplane is False and (scenario.delayed or self._netplane_active):
+            raise ValueError(
+                "netplane=False but the scenario carries nonzero delay/drop "
+                "planes (or messages are already in flight); the synchronous "
+                "model cannot honor them"
             )
+        if netplane or (netplane is None and scenario.delayed):
+            self._netplane_active = True
+        scanner = _scenario_scanner(
+            self.majority, self.lease_q4, self.round_q4, self.backend,
+            not self._netplane_active,
+        )
+        planes = {k: jnp.asarray(v) for k, v in scenario.planes.items()}
+        self.state, self.net, owners, counts = scanner(
+            self.state, self.net, jnp.int32(self.t), planes
+        )
         self.t += int(T)
         if T > 0:
             self.last_owner_count = counts[-1]
@@ -201,28 +234,3 @@ class LeaseArrayEngine:
             )
         )
         return np.maximum(expiry - QUARTERS * self.t, 0) // QUARTERS
-
-    @staticmethod
-    def _schedule(v, shape) -> jnp.ndarray:
-        """Zero-default int32 coercion for delay/drop schedules."""
-        if v is None:
-            return jnp.zeros(shape, jnp.int32)
-        return jnp.asarray(v).astype(jnp.int32)
-
-    def _row(self, row) -> jnp.ndarray:
-        if row is None:
-            return jnp.full(self.n_cells, NO_PROPOSER, jnp.int32)
-        arr = np.asarray(row, np.int32)
-        if arr.size and int(arr.max()) >= self.n_proposers:
-            # an out-of-range id would lease cells to a proposer the plane
-            # has no row for — a ghost owner nobody believes in
-            raise ValueError(
-                f"proposer id {int(arr.max())} out of range "
-                f"(plane has {self.n_proposers} proposers)"
-            )
-        if arr.size and int(arr.min()) < NO_PROPOSER:
-            raise ValueError(
-                f"proposer id {int(arr.min())} out of range "
-                f"({NO_PROPOSER} means no proposer)"
-            )
-        return jnp.asarray(arr)

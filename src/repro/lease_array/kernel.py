@@ -35,6 +35,7 @@ except Exception:  # pragma: no cover
     _SMEM = None
 
 from .netplane import NetPlaneState, delayed_tick_math
+from .ref import flat_links
 from .state import NO_PROPOSER, QUARTERS, LeaseArrayState
 
 N_LEASE = len(LeaseArrayState._fields)
@@ -190,8 +191,9 @@ def lease_tick_pallas(
 
 def _delayed_tick_kernel(t_ref, *refs, majority, lease_q4, round_q4):
     """Fused delayed tick: loads every block, runs the shared netplane math,
-    stores every block. 27 inputs (7 lease + 15 net + 5 per-tick rows),
-    23 outputs (7 lease + 15 net + count)."""
+    stores every block. Inputs: lease + net planes + 5 per-tick blocks
+    (attempt/release rows, up columns, [P*A] link delay/drop matrices);
+    outputs: lease + net planes + count."""
     n_in = N_LEASE + N_NET + 5
     ins, outs = refs[:n_in], refs[n_in:]
     lease = tuple(r[...] for r in ins[:N_LEASE])
@@ -212,8 +214,8 @@ def lease_tick_delayed_pallas(
     attempt,   # [N] int32
     release,   # [N] int32
     acc_up,    # [A] bool/int32
-    delay,     # [A] int32 (ticks)
-    drop,      # [A] bool/int32
+    delay,     # [P, A] (or legacy [A]) int32 link delays (ticks)
+    drop,      # [P, A] (or legacy [A]) bool/int32 link drop masks
     *,
     majority: int,
     lease_q4: int,
@@ -242,24 +244,28 @@ def lease_tick_delayed_pallas(
     spec_a = pl.BlockSpec((A, block_n), lambda i: (0, i))
     spec_p = pl.BlockSpec((P, block_n), lambda i: (0, i))
     spec_r = pl.BlockSpec((1, block_n), lambda i: (0, i))
+    spec_pa = pl.BlockSpec((P * A, block_n), lambda i: (0, i))
     spec_t = (
         pl.BlockSpec(memory_space=_SMEM)
         if _SMEM is not None
         else pl.BlockSpec((1, 1), lambda i: (0, 0))
     )
     lease_specs = [spec_a] * 4 + [spec_p] * 3
-    net_specs = [spec_a] * 9 + [spec_r] * 4 + [spec_a] * 2
+    net_specs = [spec_a] * 11 + [spec_r] * 4 + [spec_a] * 2
     sds = jax.ShapeDtypeStruct
     lease_shapes = [sds((A, N), jnp.int32)] * 4 + [sds((P, N), jnp.int32)] * 3
     net_shapes = (
-        [sds((A, N), jnp.int32)] * 9
+        [sds((A, N), jnp.int32)] * 11
         + [sds((1, N), jnp.int32)] * 4
         + [sds((A, N), jnp.int32)] * 2
     )
     outs = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[spec_t] + lease_specs + net_specs + [spec_r] * 2 + [spec_a] * 3,
+        in_specs=(
+            [spec_t] + lease_specs + net_specs
+            + [spec_r] * 2 + [spec_a] + [spec_pa] * 2
+        ),
         out_specs=lease_specs + net_specs + [spec_r],
         out_shape=lease_shapes + net_shapes + [sds((1, N), jnp.int32)],
         interpret=interpret,
@@ -267,7 +273,8 @@ def lease_tick_delayed_pallas(
         t2d,
         *state,
         *net,
-        arow(attempt), arow(release), acol(acc_up), acol(delay), acol(drop),
+        arow(attempt), arow(release), acol(acc_up),
+        flat_links(delay, P, A, N), flat_links(drop, P, A, N),
     )
     new_state = LeaseArrayState(*outs[:N_LEASE])
     new_net = NetPlaneState(*outs[N_LEASE:N_LEASE + N_NET])

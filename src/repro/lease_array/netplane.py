@@ -6,9 +6,9 @@ in-transit delays. The synchronous tick (`ref.lease_step_ref`) resolves a
 whole prepare/propose round in one zero-delay instant, so none of those
 behaviors exist at array scale. This module adds them as *dense state*:
 
-  - four in-flight planes, one per protocol phase
-    (``prepare_req / prepare_resp / propose_req / propose_resp``), each a
-    ``[A, N]`` slot array carrying the message's ballot and its delivery
+  - five in-flight planes, one per protocol phase plus §7 releases
+    (``prepare_req / prepare_resp / propose_req / propose_resp / rel``),
+    each a ``[A, N]`` slot array carrying the message's ballot and its delivery
     quarter-tick (ballot 0 = empty slot). A slot holds at most one message
     per (acceptor, cell) — the ``random_trace`` spacing construction
     guarantees live messages never collide (see ``trace.py``);
@@ -19,13 +19,28 @@ behaviors exist at array scale. This module adds them as *dense state*:
     duplicated deliveries can never double-count a quorum (the event
     engine's ``set``-of-acceptors bookkeeping, vectorized).
 
-Per tick, messages *sent* at tick ``t`` on the link to/from acceptor ``a``
-take ``delay[a]`` whole ticks and are lost iff ``drop[a]`` — mirroring a
-deterministic per-message delay policy pinned onto the event-driven
-``sim.network.Network`` (see ``trace.replay_event_sim``). Reachability
-(``acc_up``) is checked when a *request* is delivered, exactly like the
-event transport checks ``set_down`` at delivery time; responses generated
-at that same tick see the same mask, like ``send`` checking its source.
+Per tick, messages *sent* at tick ``t`` on the link between proposer ``p``
+and acceptor ``a`` — request or response, either direction — take
+``delay[p, a]`` whole ticks and are lost iff ``drop[p, a]``: asymmetric
+per-(proposer, acceptor) link matrices (a straggler replica, a lossy rack
+uplink, a slow cross-zone pair), mirroring a deterministic per-message
+delay policy pinned onto the event-driven ``sim.network.Network`` (see
+``trace.replay_event_sim``). The link matrices arrive flattened as
+``[P*A, bn]`` blocks (row ``p*A + a``); each send leg gathers its row by
+the proposer id it involves (``_link_rows``) — the attempt row for
+prepare broadcasts, the in-flight ballot's proposer for response legs.
+Symmetric per-acceptor schedules are the P-broadcast special case.
+Reachability (``acc_up``) is checked when a *request* is delivered,
+exactly like the event transport checks ``set_down`` at delivery time;
+responses generated at that same tick see the same mask, like ``send``
+checking its source.
+
+§7 releases are routed through the same plane: a releasing proposer stops
+believing it owns immediately (a local action), but the discard messages
+to the acceptors ride the ``rel_*`` in-flight slots — delayed by their
+link and droppable like any other leg. In the event sim they deliver at
+``REL_EPS`` inside the drain window, before any phase message (see
+``trace.py``).
 
 With all-zero delay/drop planes every message is generated and consumed
 inside one tick, the slots stay empty, and the step is bit-identical to
@@ -69,6 +84,8 @@ class NetPlaneState(NamedTuple):
     poreq_at: jax.Array    # [A, N]
     poresp_b: jax.Array    # [A, N] propose responses (accepts only) in flight
     poresp_at: jax.Array   # [A, N]
+    rel_b: jax.Array       # [A, N] §7 release messages in flight
+    rel_at: jax.Array      # [A, N]
     rnd_ballot: jax.Array    # [1, N] open round's ballot (0 = no round)
     rnd_phase: jax.Array     # [1, N] R_IDLE / R_PREPARING / R_PROPOSING
     rnd_expiry: jax.Array    # [1, N] quarter-tick the proposer's timer expires
@@ -93,9 +110,30 @@ def init_netplane(n_cells: int, n_acceptors: int) -> NetPlaneState:
         presp_b=za, presp_at=za, presp_pay=jnp.full_like(za, NO_PROPOSER),
         poreq_b=za, poreq_at=za,
         poresp_b=za, poresp_at=za,
+        rel_b=za, rel_at=za,
         rnd_ballot=zr, rnd_phase=zr, rnd_expiry=zr, rnd_deadline=zr,
         rnd_open=za, rnd_acc=za,
     )
+
+
+def _link_rows(flat: jnp.ndarray, prop, n_acceptors: int) -> jnp.ndarray:
+    """Gather the [A, bn] link rows of a flattened ``[P*A, bn]`` matrix for
+    the proposer each column's leg involves.
+
+    ``prop`` is an int32 proposer-id array, either ``[1, bn]`` (one sender
+    per cell: attempts, open rounds, releases) or ``[A, bn]`` (per-slot:
+    the in-flight ballot's proposer on response legs). Ids outside
+    [0, P) — the no-attempt sentinel, empty slots — select zeros; every
+    such leg is gated off by its own send/due mask anyway. The P loop is
+    compile-time (P is tiny), keeping the math elementwise on 2D blocks —
+    Pallas-sublane friendly, no dynamic gather.
+    """
+    A = n_acceptors
+    P = flat.shape[0] // A
+    out = jnp.zeros((A,) + flat.shape[1:], flat.dtype)
+    for p in range(P):
+        out = jnp.where(prop == p, flat[p * A:(p + 1) * A], out)
+    return out
 
 
 def delayed_tick_math(
@@ -105,8 +143,8 @@ def delayed_tick_math(
     attempt,           # [1, bn] int32 proposer id attempting (-1 = none)
     release,           # [1, bn] int32 proposer id releasing (-1 = none)
     up,                # [A, bn] int32 acceptor reachability this tick
-    delay,             # [A, bn] int32 delay (ticks) for messages sent this tick
-    drop,              # [A, bn] int32 1 = lose messages sent this tick
+    delay,             # [P*A, bn] int32 link delays (ticks) for legs sent this tick
+    drop,              # [P*A, bn] int32 1 = lose legs sent this tick
     *,
     majority: int,
     lease_q4: int,     # lease timespan in quarter-ticks
@@ -124,15 +162,19 @@ def delayed_tick_math(
      own_mask, own_expiry, own_ballot) = lease
     (preq_b, preq_at, presp_b, presp_at, presp_pay,
      poreq_b, poreq_at, poresp_b, poresp_at,
+     rel_b, rel_at,
      rnd_ballot, rnd_phase, rnd_expiry, rnd_deadline,
      rnd_open, rnd_acc) = net
 
+    A = up.shape[0]
     P = own_mask.shape[0]
     t4 = QUARTERS * t
     p_ids = jax.lax.broadcasted_iota(jnp.int32, own_mask.shape, 0)  # [P, bn]
     up = up > 0
-    drop = drop > 0
-    dq4 = QUARTERS * delay                                          # [A, bn]
+    dq4 = QUARTERS * delay                                          # [P*A, bn]
+    # per-leg link gathers: [A, bn] delay/drop rows for a given sender id
+    leg_dq4 = lambda prop: _link_rows(dq4, prop, A)
+    leg_drop = lambda prop: _link_rows(drop, prop, A) > 0
 
     # -- 1. expiry ---------------------------------------------------------
     acc_live = (acc_ballot > 0) & (acc_expiry > t4)
@@ -144,15 +186,27 @@ def delayed_tick_math(
     own_expiry = jnp.where(own_live, own_expiry, 0)
     own_ballot = jnp.where(own_live, own_ballot, 0)
 
-    # -- 2. release (§7, out-of-band: instantaneous & reliable) ------------
+    # -- 2. release (§7, routed through the network) -----------------------
+    # 2a. the local action: the releasing owner stops believing NOW (the
+    #     §7 "switch to non-owner first" ordering) ...
     rel = release                                                   # [1, bn]
     rel_owner = (p_ids == rel) & (own_mask > 0)                     # [P, bn]
     rel_ballot = jnp.sum(jnp.where(rel_owner, own_ballot, 0), axis=0, keepdims=True)
     own_mask = jnp.where(rel_owner, 0, own_mask)
-    discard = up & (rel_ballot > 0) & (acc_ballot == rel_ballot)    # [A, bn]
+    # 2b. ... then the discard messages ride the in-flight plane, delayed
+    #     and droppable per (releasing proposer, acceptor) link
+    send_rel = (rel_ballot > 0) & ~leg_drop(rel)                    # [A, bn]
+    rel_b = jnp.where(send_rel, rel_ballot, rel_b)
+    rel_at = jnp.where(send_rel, t4 + leg_dq4(rel), rel_at)
+    # 2c. deliver due releases (a zero-delay one lands this same tick):
+    #     discard iff still reachable and the accepted ballot matches
+    rel_due = (rel_b > 0) & (rel_at <= t4)
+    discard = rel_due & up & (acc_ballot == rel_b)                  # [A, bn]
     acc_ballot = jnp.where(discard, 0, acc_ballot)
     acc_prop = jnp.where(discard, NO_PROPOSER, acc_prop)
     acc_expiry = jnp.where(discard, 0, acc_expiry)
+    rel_b = jnp.where(rel_due, 0, rel_b)
+    rel_at = jnp.where(rel_due, 0, rel_at)
 
     # -- 3. round lifecycle ------------------------------------------------
     # a release wipes the releasing proposer's open round (Proposer.release
@@ -179,17 +233,20 @@ def delayed_tick_math(
     rnd_acc = jnp.where(fresh, 0, rnd_acc)
 
     # -- 4a. broadcast prepare requests for new attempts -------------------
-    send_preq = has_att & ~drop                                     # [A, bn]
+    send_preq = has_att & ~leg_drop(att)                            # [A, bn]
     preq_b = jnp.where(send_preq, new_ballot, preq_b)
-    preq_at = jnp.where(send_preq, t4 + dq4, preq_at)
+    preq_at = jnp.where(send_preq, t4 + leg_dq4(att), preq_at)
 
     # -- 4b. deliver prepare requests at acceptors (§3.2) ------------------
     preq_due = (preq_b > 0) & (preq_at <= t4)
     grant = preq_due & up & (preq_b >= promised)
     promised = jnp.where(grant, preq_b, promised)
-    send_presp = grant & ~drop
+    # the response leg belongs to the REQUESTER's link: each slot's ballot
+    # names the proposer the grant travels back to
+    preq_prop = preq_b % P                                          # [A, bn]
+    send_presp = grant & ~leg_drop(preq_prop)
     presp_b = jnp.where(send_presp, preq_b, presp_b)
-    presp_at = jnp.where(send_presp, t4 + dq4, presp_at)
+    presp_at = jnp.where(send_presp, t4 + leg_dq4(preq_prop), presp_at)
     presp_pay = jnp.where(send_presp, acc_prop, presp_pay)
     preq_b = jnp.where(preq_due, 0, preq_b)
     preq_at = jnp.where(preq_due, 0, preq_at)
@@ -218,9 +275,9 @@ def delayed_tick_math(
     # the ordering the §4 proof depends on
     rnd_phase = jnp.where(to_propose, R_PROPOSING, rnd_phase)
     rnd_expiry = jnp.where(to_propose, t4 + lease_q4, rnd_expiry)
-    send_poreq = to_propose & ~drop                                 # [A, bn]
+    send_poreq = to_propose & ~leg_drop(rnd_prop)                   # [A, bn]
     poreq_b = jnp.where(send_poreq, rnd_ballot, poreq_b)
-    poreq_at = jnp.where(send_poreq, t4 + dq4, poreq_at)
+    poreq_at = jnp.where(send_poreq, t4 + leg_dq4(rnd_prop), poreq_at)
     presp_b = jnp.where(presp_due, 0, presp_b)
     presp_at = jnp.where(presp_due, 0, presp_at)
     presp_pay = jnp.where(presp_due, NO_PROPOSER, presp_pay)
@@ -228,12 +285,13 @@ def delayed_tick_math(
     # -- 4d. deliver propose requests at acceptors (§3.4) ------------------
     poreq_due = (poreq_b > 0) & (poreq_at <= t4)
     accept = poreq_due & up & (poreq_b >= promised)
+    poreq_prop = poreq_b % P                                        # [A, bn]
     acc_ballot = jnp.where(accept, poreq_b, acc_ballot)
-    acc_prop = jnp.where(accept, poreq_b % P, acc_prop)
+    acc_prop = jnp.where(accept, poreq_prop, acc_prop)
     acc_expiry = jnp.where(accept, t4 + lease_q4, acc_expiry)
-    send_poresp = accept & ~drop
+    send_poresp = accept & ~leg_drop(poreq_prop)
     poresp_b = jnp.where(send_poresp, poreq_b, poresp_b)
-    poresp_at = jnp.where(send_poresp, t4 + dq4, poresp_at)
+    poresp_at = jnp.where(send_poresp, t4 + leg_dq4(poreq_prop), poresp_at)
     poreq_b = jnp.where(poreq_due, 0, poreq_b)
     poreq_at = jnp.where(poreq_due, 0, poreq_at)
 
@@ -267,6 +325,7 @@ def delayed_tick_math(
                  own_mask, own_expiry, own_ballot)
     net_out = (preq_b, preq_at, presp_b, presp_at, presp_pay,
                poreq_b, poreq_at, poresp_b, poresp_at,
+               rel_b, rel_at,
                rnd_ballot, rnd_phase, rnd_expiry, rnd_deadline,
                rnd_open, rnd_acc)
     owner_count = jnp.sum(own_mask, axis=0, keepdims=True)          # [1, bn]

@@ -2,19 +2,28 @@
 (pure-jnp oracle vs fused Pallas kernel) plus cell-axis padding so callers
 can use any N. Mirrors the kernels/flash_attention kernel/ops/ref layout.
 
-Two steps: `lease_plane_step` (synchronous zero-delay tick, PR 1) and
-`lease_plane_step_delayed` (in-flight message plane: multi-tick rounds,
-per-acceptor delay/drop — see `netplane.py`)."""
+One step: ``lease_plane_tick`` advances every cell one tick of either
+network model — the synchronous zero-delay tick (``sync=True``, PR 1) or
+the delayed in-flight message plane (multi-tick rounds, asymmetric
+per-(proposer, acceptor) link delay/drop — see ``netplane.py``). Its
+per-tick inputs are a :class:`~repro.lease_array.scenario.TickInputs`
+pytree, so registering a new fault plane never changes this signature.
+
+``lease_plane_step`` / ``lease_plane_step_delayed`` are deprecation shims
+for the old one-positional-argument-per-fault-dimension API.
+"""
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 
 from .kernel import lease_tick_delayed_pallas, lease_tick_pallas
 from .netplane import NetPlaneState
-from .ref import lease_step_delayed_ref, lease_step_ref
+from .ref import lease_step_delayed_ref, lease_step_ref, link_matrix
+from .scenario import TickInputs, make_tick
 from .state import NO_PROPOSER, LeaseArrayState
 
 BACKENDS = ("jnp", "pallas", "pallas_tpu")
@@ -50,85 +59,67 @@ def _pad_net(net: NetPlaneState, multiple: int) -> NetPlaneState:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("majority", "lease_q4", "backend", "block_n")
-)
-def lease_plane_step(
-    state: LeaseArrayState,
-    t,
-    attempt,
-    release,
-    acc_up,
-    *,
-    majority: int,
-    lease_q4: int,
-    backend: str = "jnp",
-    block_n: int = 512,
-) -> tuple[LeaseArrayState, jax.Array]:
-    """Advance all cells one synchronous tick.
-
-    backend: "jnp" (reference), "pallas" (kernel, interpret mode — runs
-    anywhere), "pallas_tpu" (compiled kernel, real TPUs).
-    Returns (new_state, owner_count[N]) — owner_count is the per-cell number
-    of proposers who believe they own it (>1 would be a §4 violation).
-    """
-    t = jnp.asarray(t, jnp.int32)
-    attempt = jnp.asarray(attempt, jnp.int32)
-    release = jnp.asarray(release, jnp.int32)
-    if backend == "jnp":
-        return lease_step_ref(
-            state, t, attempt, release, acc_up,
-            majority=majority, lease_q4=lease_q4,
-        )
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown lease-plane backend {backend!r}")
-    padded, attempt, release, n = _pad_cells(state, attempt, release, block_n)
-    new_state, count = lease_tick_pallas(
-        padded, t, attempt, release, acc_up,
-        majority=majority, lease_q4=lease_q4,
-        block_n=block_n, interpret=(backend == "pallas"),
-    )
-    if new_state.n_cells != n:
-        new_state = LeaseArrayState(*(a[:, :n] for a in new_state))
-        count = count[:n]
-    return new_state, count
-
-
-@functools.partial(
     jax.jit,
-    static_argnames=("majority", "lease_q4", "round_q4", "backend", "block_n"),
+    static_argnames=(
+        "majority", "lease_q4", "round_q4", "backend", "block_n", "sync",
+    ),
 )
-def lease_plane_step_delayed(
+def lease_plane_tick(
     state: LeaseArrayState,
     net: NetPlaneState,
     t,
-    attempt,
-    release,
-    acc_up,
-    delay,     # [A] int32 per-acceptor delay (ticks) for messages sent this tick
-    drop,      # [A] bool/int32 per-acceptor drop mask for messages sent this tick
+    tick: TickInputs,
     *,
     majority: int,
     lease_q4: int,
     round_q4: int,
     backend: str = "jnp",
     block_n: int = 512,
+    sync: bool = False,
 ) -> tuple[LeaseArrayState, NetPlaneState, jax.Array]:
-    """Advance all cells one tick of the delayed (in-flight message) model.
+    """Advance all cells one tick.
 
-    Same backends as `lease_plane_step`. Returns
-    (new_state, new_net, owner_count[N]).
+    ``sync=True`` runs the zero-delay synchronous model (``net`` passes
+    through untouched; the tick's delay/drop planes are ignored);
+    ``sync=False`` runs the delayed in-flight model with the tick's
+    ``[P, A]`` link matrices. backend: "jnp" (reference), "pallas"
+    (kernel, interpret mode — runs anywhere), "pallas_tpu" (compiled
+    kernel, real TPUs). Returns (new_state, new_net, owner_count[N]) —
+    owner_count is the per-cell number of proposers who believe they own
+    it (>1 would be a §4 violation).
     """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown lease-plane backend {backend!r}")
     t = jnp.asarray(t, jnp.int32)
-    attempt = jnp.asarray(attempt, jnp.int32)
-    release = jnp.asarray(release, jnp.int32)
-    delay = jnp.asarray(delay, jnp.int32)
+    attempt = jnp.asarray(tick.attempts, jnp.int32)
+    release = jnp.asarray(tick.releases, jnp.int32)
+    acc_up = jnp.asarray(tick.acc_up, jnp.int32)
+    if sync:
+        if backend == "jnp":
+            new_state, count = lease_step_ref(
+                state, t, attempt, release, acc_up,
+                majority=majority, lease_q4=lease_q4,
+            )
+            return new_state, net, count
+        padded, attempt, release, n = _pad_cells(
+            state, attempt, release, block_n
+        )
+        new_state, count = lease_tick_pallas(
+            padded, t, attempt, release, acc_up,
+            majority=majority, lease_q4=lease_q4,
+            block_n=block_n, interpret=(backend == "pallas"),
+        )
+        if new_state.n_cells != n:
+            new_state = LeaseArrayState(*(a[:, :n] for a in new_state))
+            count = count[:n]
+        return new_state, net, count
+    delay = jnp.asarray(tick.delay, jnp.int32)
+    drop = jnp.asarray(tick.drop, jnp.int32)
     if backend == "jnp":
         return lease_step_delayed_ref(
             state, net, t, attempt, release, acc_up, delay, drop,
             majority=majority, lease_q4=lease_q4, round_q4=round_q4,
         )
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown lease-plane backend {backend!r}")
     padded, attempt, release, n = _pad_cells(state, attempt, release, block_n)
     net_p = _pad_net(net, block_n)
     new_state, new_net, count = lease_tick_delayed_pallas(
@@ -141,3 +132,100 @@ def lease_plane_step_delayed(
         new_net = NetPlaneState(*(a[:, :n] for a in new_net))
         count = count[:n]
     return new_state, new_net, count
+
+
+# --------------------------------------------------------------------------
+# deprecation shims: the pre-Scenario one-argument-per-fault-dimension API
+# --------------------------------------------------------------------------
+def _shim_tick(state: LeaseArrayState, attempt, release, acc_up, delay, drop):
+    A, N = state.highest_promised.shape
+    P = state.n_proposers
+    if any(
+        isinstance(x, jax.core.Tracer)
+        for x in (attempt, release, acc_up, delay, drop)
+    ):
+        # the old step functions were jit-traceable; keep the shims so too —
+        # coerce with jnp and skip the host-side validation make_tick does
+        links = lambda m: (
+            jnp.zeros((P, A), jnp.int32) if m is None else link_matrix(m, P, A)
+        )
+        return TickInputs({
+            "attempts": (
+                jnp.full((N,), NO_PROPOSER, jnp.int32) if attempt is None
+                else jnp.asarray(attempt, jnp.int32)
+            ),
+            "releases": (
+                jnp.full((N,), NO_PROPOSER, jnp.int32) if release is None
+                else jnp.asarray(release, jnp.int32)
+            ),
+            "acc_up": (
+                jnp.ones((A,), jnp.int32) if acc_up is None
+                else jnp.asarray(acc_up).astype(jnp.int32)
+            ),
+            "delay": links(delay),
+            "drop": links(drop),
+        })
+    return make_tick(
+        n_cells=N, n_acceptors=A, n_proposers=P,
+        attempts=attempt, releases=release, acc_up=acc_up,
+        delay=delay, drop=drop,
+    )
+
+
+def lease_plane_step(
+    state: LeaseArrayState,
+    t,
+    attempt,
+    release,
+    acc_up,
+    *,
+    majority: int,
+    lease_q4: int,
+    backend: str = "jnp",
+    block_n: int = 512,
+) -> tuple[LeaseArrayState, jax.Array]:
+    """Deprecated: build a :class:`TickInputs` and call
+    :func:`lease_plane_tick` with ``sync=True`` instead."""
+    warnings.warn(
+        "lease_plane_step is deprecated; use lease_plane_tick(state, net, "
+        "t, tick, ..., sync=True) with a scenario.TickInputs",
+        DeprecationWarning, stacklevel=2,
+    )
+    tick = _shim_tick(state, attempt, release, acc_up, None, None)
+    new_state, _, count = lease_plane_tick(
+        state, None, t, tick,
+        majority=majority, lease_q4=lease_q4, round_q4=0,
+        backend=backend, block_n=block_n, sync=True,
+    )
+    return new_state, count
+
+
+def lease_plane_step_delayed(
+    state: LeaseArrayState,
+    net: NetPlaneState,
+    t,
+    attempt,
+    release,
+    acc_up,
+    delay,     # [A] or [P, A] int32 delays (ticks) for legs sent this tick
+    drop,      # [A] or [P, A] bool/int32 drop masks for legs sent this tick
+    *,
+    majority: int,
+    lease_q4: int,
+    round_q4: int,
+    backend: str = "jnp",
+    block_n: int = 512,
+) -> tuple[LeaseArrayState, NetPlaneState, jax.Array]:
+    """Deprecated: build a :class:`TickInputs` and call
+    :func:`lease_plane_tick` instead."""
+    warnings.warn(
+        "lease_plane_step_delayed is deprecated; use lease_plane_tick with "
+        "a scenario.TickInputs",
+        DeprecationWarning, stacklevel=2,
+    )
+    tick = _shim_tick(state, attempt, release, acc_up, delay, drop)
+    return lease_plane_tick(
+        state, net, t, tick,
+        majority=majority, lease_q4=lease_q4, round_q4=round_q4,
+        backend=backend, block_n=block_n, sync=False,
+    )

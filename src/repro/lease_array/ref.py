@@ -111,6 +111,33 @@ def lease_step_ref(
     return new_state, owner_count
 
 
+def link_matrix(m, n_proposers: int, n_acceptors: int) -> jnp.ndarray:
+    """Normalize a delay/drop input to the canonical [P, A] link matrix.
+
+    Accepts the asymmetric per-(proposer, acceptor) ``[P, A]`` form or the
+    legacy symmetric per-acceptor ``[A]`` form (broadcast over P)."""
+    m = jnp.asarray(m).astype(jnp.int32)
+    if m.ndim == 1:
+        m = jnp.broadcast_to(m[None, :], (n_proposers, n_acceptors))
+    if m.shape != (n_proposers, n_acceptors):
+        raise ValueError(
+            f"delay/drop must be [A]={n_acceptors} or "
+            f"[P, A]=({n_proposers}, {n_acceptors}); got {m.shape}"
+        )
+    return m
+
+
+def flat_links(m, n_proposers: int, n_acceptors: int, n_cells: int) -> jnp.ndarray:
+    """A link matrix as the ``[P*A, N]`` blocks ``netplane._link_rows``
+    gathers from: row ``p*A + a``, broadcast along cells. The one encoding
+    of the flattened-link layout, shared by the jnp oracle and the Pallas
+    kernel wrapper."""
+    return jnp.broadcast_to(
+        link_matrix(m, n_proposers, n_acceptors).reshape(n_proposers * n_acceptors, 1),
+        (n_proposers * n_acceptors, n_cells),
+    )
+
+
 def lease_step_delayed_ref(
     state: LeaseArrayState,
     net: NetPlaneState,
@@ -118,8 +145,8 @@ def lease_step_delayed_ref(
     attempt,          # [N] int32 proposer id attempting each cell (-1 = none)
     release,          # [N] int32 proposer id releasing each cell (-1 = none)
     acc_up,           # [A] bool/int32 acceptor reachability this tick
-    delay,            # [A] int32 per-acceptor delay (ticks) for sends this tick
-    drop,             # [A] bool/int32 per-acceptor drop mask for sends this tick
+    delay,            # [P, A] (or legacy [A]) int32 link delays for sends this tick
+    drop,             # [P, A] (or legacy [A]) bool/int32 link drop masks
     *,
     majority: int,
     lease_q4: int,
@@ -131,13 +158,15 @@ def lease_step_delayed_ref(
     in `netplane.delayed_tick_math`, which the Pallas kernel shares.
     """
     A, N = state.highest_promised.shape
+    P = state.n_proposers
     row = lambda r: jnp.asarray(r, jnp.int32).reshape(1, N)
     col = lambda c: jnp.broadcast_to(
         jnp.asarray(c).astype(jnp.int32)[:, None], (A, N)
     )
     lease, netp, count = delayed_tick_math(
         tuple(state), tuple(net), t,
-        row(attempt), row(release), col(acc_up), col(delay), col(drop),
+        row(attempt), row(release), col(acc_up),
+        flat_links(delay, P, A, N), flat_links(drop, P, A, N),
         majority=majority, lease_q4=lease_q4, round_q4=round_q4,
     )
     return LeaseArrayState(*lease), NetPlaneState(*netp), count.reshape(N)

@@ -1,0 +1,384 @@
+"""Scenario plane: one declarative pytree for every fault dimension.
+
+The paper's failure model (§1) is open-ended — "messages may be delayed,
+reordered, lost, and nodes may crash and restart" — so the engine API must
+not grow one positional argument per failure dimension. A ``Scenario`` is
+a *registry-driven* bundle of named planes, each a dense array with a
+leading tick axis:
+
+  attempts  [T, N]     proposer id attempting each cell (-1 = none)
+  releases  [T, N]     proposer id releasing each cell (-1 = none)
+  acc_up    [T, A]     acceptor reachability (1 = reachable)
+  delay     [T, P, A]  per-(proposer, acceptor) link delay in whole ticks
+  drop      [T, P, A]  per-(proposer, acceptor) link loss mask
+
+``delay``/``drop`` are *asymmetric link matrices*: every message leg sent
+at tick ``t`` on the link between proposer ``p`` and acceptor ``a`` —
+request or response, either direction — takes ``delay[t, p, a]`` ticks
+and is lost iff ``drop[t, p, a]``. The symmetric per-acceptor ``[T, A]``
+schedules of earlier revisions are the P-broadcast special case and are
+accepted everywhere a plane is (see each spec's ``alts``).
+
+Adding a failure dimension (restart planes, clock-rate planes, …) is now
+"register a plane": ``register_plane`` extends the schema, ``Scenario``
+defaults/validates/slices it, and the scan machinery carries it without
+any signature change (see docs/scenario_api.md).
+
+Both ``Scenario`` and its per-tick slice ``TickInputs`` are registered
+JAX pytrees: they flow through ``jax.jit``/``jax.lax.scan`` unchanged and
+batch with ``jax.vmap`` over a ``Scenario.stack`` of stacked scenarios.
+"""
+from __future__ import annotations
+
+from typing import Iterable, NamedTuple, Optional
+
+import jax
+import numpy as np
+
+from .state import NO_PROPOSER
+
+__all__ = [
+    "PlaneSpec",
+    "PLANES",
+    "register_plane",
+    "Scenario",
+    "TickInputs",
+    "make_tick",
+    "validate_proposer_ids",
+]
+
+
+class PlaneSpec(NamedTuple):
+    """Schema of one scenario plane (shapes are per tick, sans the T axis)."""
+
+    name: str
+    dims: tuple[str, ...]  # per-tick dims, of {"N", "A", "P"}
+    default: int           # fill value when the plane is omitted
+    doc: str = ""
+    #: alternate per-tick shapes accepted from callers; missing axes are
+    #: broadcast (e.g. delay's ("A",): a symmetric [T, A] plane is expanded
+    #: to [T, P, A] by repeating it for every proposer)
+    alts: tuple[tuple[str, ...], ...] = ()
+    #: validated as proposer-id rows (-1 sentinel .. n_proposers - 1)
+    proposer_ids: bool = False
+
+
+#: the plane registry — insertion order is the canonical plane order
+PLANES: dict[str, PlaneSpec] = {}
+
+
+def register_plane(
+    name: str,
+    dims: Iterable[str],
+    default: int,
+    doc: str = "",
+    *,
+    alts: Iterable[Iterable[str]] = (),
+    proposer_ids: bool = False,
+) -> PlaneSpec:
+    """Extend the scenario schema with a new named plane."""
+    spec = PlaneSpec(
+        name, tuple(dims), int(default), doc,
+        tuple(tuple(a) for a in alts), proposer_ids,
+    )
+    PLANES[name] = spec
+    return spec
+
+
+register_plane(
+    "attempts", ("N",), NO_PROPOSER,
+    "proposer id attempting each cell this tick (-1 = none)",
+    proposer_ids=True,
+)
+register_plane(
+    "releases", ("N",), NO_PROPOSER,
+    "proposer id releasing each cell this tick (-1 = none)",
+    proposer_ids=True,
+)
+register_plane(
+    "acc_up", ("A",), 1,
+    "acceptor reachability this tick (1 = reachable)",
+)
+register_plane(
+    "delay", ("P", "A"), 0,
+    "per-(proposer, acceptor) link delay (whole ticks) for legs sent this tick",
+    alts=(("A",),),
+)
+register_plane(
+    "drop", ("P", "A"), 0,
+    "per-(proposer, acceptor) link loss mask for legs sent this tick",
+    alts=(("A",),),
+)
+
+
+def validate_proposer_ids(arr, n_proposers: int) -> None:
+    """Reject ids outside [-1, n_proposers): an out-of-range id would lease
+    cells to a proposer the plane has no row for — a ghost owner nobody
+    believes in. Shared by ``LeaseArrayEngine.step`` and every Scenario
+    build (so ``run_trace`` traces are checked too)."""
+    a = np.asarray(arr)
+    if a.size == 0:
+        return
+    hi, lo = int(a.max()), int(a.min())
+    if hi >= n_proposers:
+        raise ValueError(
+            f"proposer id {hi} out of range "
+            f"(plane has {n_proposers} proposers)"
+        )
+    if lo < NO_PROPOSER:
+        raise ValueError(
+            f"proposer id {lo} out of range ({NO_PROPOSER} means no proposer)"
+        )
+
+
+def _dim_sizes(n_cells: int, n_acceptors: int, n_proposers: int) -> dict[str, int]:
+    return {"N": int(n_cells), "A": int(n_acceptors), "P": int(n_proposers)}
+
+
+def _coerce_plane(
+    spec: PlaneSpec,
+    value,
+    sizes: dict[str, int],
+    lead: tuple[int, ...],
+    what: str,
+) -> np.ndarray:
+    """Default / validate / broadcast one plane to ``lead + canonical``."""
+    shape = lead + tuple(sizes[d] for d in spec.dims)
+    if value is None:
+        return np.full(shape, spec.default, np.int32)
+    arr = np.asarray(value)
+    if arr.dtype == bool:
+        arr = arr.astype(np.int32)
+    arr = arr.astype(np.int32, copy=False)
+    forms = (spec.dims,) + spec.alts
+    for dims in forms:
+        want = lead + tuple(sizes[d] for d in dims)
+        if arr.shape == want:
+            if dims != spec.dims:  # expand the alternate form, e.g. [T,A]
+                missing = [d for d in spec.dims if d not in dims]
+                for d in missing:
+                    ax = len(lead) + spec.dims.index(d)
+                    arr = np.expand_dims(arr, ax)
+                arr = np.broadcast_to(arr, shape).copy()
+            if spec.proposer_ids:
+                validate_proposer_ids(arr, sizes["P"])
+            if spec.name == "delay" and arr.size and int(arr.min()) < 0:
+                raise ValueError(
+                    f"{what} plane 'delay' has negative entries "
+                    f"(min {int(arr.min())}); delays are whole ticks >= 0"
+                )
+            return arr
+    accepted = " or ".join(
+        str(lead + tuple(sizes[d] for d in dims)) for dims in forms
+    )
+    raise ValueError(
+        f"{what} plane {spec.name!r} has shape {arr.shape}; expected "
+        f"{accepted} (T, N, A, P = ticks, cells, acceptors, proposers)"
+    )
+
+
+def _raise_unknown(bad):
+    raise ValueError(
+        f"unknown scenario plane(s) {sorted(bad)}; registered planes: "
+        f"{sorted(PLANES)} (extend with register_plane)"
+    )
+
+
+class _PlaneBundle:
+    """Shared dict-of-planes pytree behavior for Scenario / TickInputs."""
+
+    __slots__ = ("planes",)
+    _lead_ndim = 0  # leading axes before the per-tick dims
+
+    def __init__(self, planes: dict) -> None:
+        if bad := set(planes) - set(PLANES):
+            _raise_unknown(bad)
+        self.planes = {k: planes[k] for k in PLANES if k in planes}
+
+    def __getattr__(self, name: str):
+        if name == "planes":  # unset slot (e.g. during unpickling probes)
+            raise AttributeError(name)
+        try:
+            return self.planes[name]
+        except KeyError:
+            raise AttributeError(name) from None
+
+    def _dim(self, plane: str, axis: int) -> int:
+        return int(self.planes[plane].shape[self._lead_ndim + axis])
+
+    @property
+    def n_cells(self) -> int:
+        return self._dim("attempts", 0)
+
+    @property
+    def n_acceptors(self) -> int:
+        return self._dim("acc_up", 0)
+
+    @property
+    def n_proposers(self) -> int:
+        return self._dim("delay", 0)
+
+    @property
+    def delayed(self) -> bool:
+        """True iff the delay or drop plane is nonzero anywhere (needs the
+        in-flight netplane model). Host-side only — not traceable."""
+        return bool(
+            np.asarray(self.planes["delay"]).any()
+            or np.asarray(self.planes["drop"]).any()
+        )
+
+    def validate_for(
+        self, *, n_cells: int, n_acceptors: int, n_proposers: int
+    ) -> None:
+        """Check every plane against an engine's geometry (shape + ids +
+        delay sign). ``build``/``make_tick`` output always passes;
+        hand-rolled pytrees are checked here before they reach the step or
+        the scanner."""
+        sizes = _dim_sizes(n_cells, n_acceptors, n_proposers)
+        lead: tuple[int, ...] = ()
+        if self._lead_ndim:
+            lead = (int(self.planes["attempts"].shape[0]),)
+        what = type(self).__name__
+        for name, spec in PLANES.items():
+            if name not in self.planes:
+                raise ValueError(f"{what} is missing plane {name!r}")
+            arr = np.asarray(self.planes[name])
+            want = lead + tuple(sizes[d] for d in spec.dims)
+            if arr.shape != want:
+                raise ValueError(
+                    f"{what} plane {name!r} has shape {arr.shape}; "
+                    f"engine geometry wants {want}"
+                )
+            if spec.proposer_ids:
+                validate_proposer_ids(arr, sizes["P"])
+            if name == "delay" and arr.size and int(arr.min()) < 0:
+                raise ValueError(
+                    f"{what} plane 'delay' has negative entries "
+                    f"(min {int(arr.min())}); delays are whole ticks >= 0"
+                )
+
+    def __repr__(self) -> str:
+        inner = ", ".join(
+            f"{k}{tuple(v.shape)}" for k, v in self.planes.items()
+        )
+        return f"{type(self).__name__}({inner})"
+
+
+def _register(cls):
+    jax.tree_util.register_pytree_node(
+        cls,
+        lambda s: (tuple(s.planes.values()), tuple(s.planes.keys())),
+        lambda names, leaves: cls(dict(zip(names, leaves))),
+    )
+    return cls
+
+
+@_register
+class TickInputs(_PlaneBundle):
+    """One tick's worth of every scenario plane (no leading T axis)."""
+
+
+def make_tick(
+    *,
+    n_cells: int,
+    n_acceptors: int,
+    n_proposers: int,
+    **planes,
+) -> TickInputs:
+    """Build a validated single-tick input bundle (engine.step's currency).
+
+    Omitted planes get their registered defaults; ``delay``/``drop`` accept
+    the symmetric per-acceptor ``[A]`` form and broadcast it over P.
+    """
+    if bad := set(planes) - set(PLANES):
+        _raise_unknown(bad)
+    sizes = _dim_sizes(n_cells, n_acceptors, n_proposers)
+    return TickInputs({
+        name: _coerce_plane(spec, planes.get(name), sizes, (), "tick")
+        for name, spec in PLANES.items()
+    })
+
+
+@_register
+class Scenario(_PlaneBundle):
+    """A [T]-tick fault scenario: every registered plane, leading T axis.
+
+    Build with :meth:`Scenario.build` (defaulting + shape/dtype/id
+    validation + broadcasting), slice with ``scenario[t]`` (→ TickInputs)
+    or ``scenario[a:b]`` (→ sub-Scenario), join with :meth:`concat`, and
+    batch with :meth:`stack` for ``jax.vmap``.
+    """
+
+    _lead_ndim = 1
+
+    @classmethod
+    def build(
+        cls,
+        n_ticks: Optional[int] = None,
+        *,
+        n_cells: int,
+        n_acceptors: int,
+        n_proposers: int,
+        **planes,
+    ) -> "Scenario":
+        """Default, validate and broadcast every registered plane.
+
+        ``n_ticks`` may be omitted when at least one plane is given (it is
+        inferred from the first one). Unknown plane names are rejected with
+        the list of registered planes.
+        """
+        if bad := {k for k in planes if k not in PLANES}:
+            _raise_unknown(bad)
+        if n_ticks is None:
+            for v in planes.values():
+                if v is not None:
+                    n_ticks = int(np.asarray(v).shape[0])
+                    break
+            else:
+                raise ValueError(
+                    "n_ticks is required when no plane is provided"
+                )
+        sizes = _dim_sizes(n_cells, n_acceptors, n_proposers)
+        lead = (int(n_ticks),)
+        return cls({
+            name: _coerce_plane(spec, planes.get(name), sizes, lead, "scenario")
+            for name, spec in PLANES.items()
+        })
+
+    # ------------------------------------------------------------- queries
+    @property
+    def n_ticks(self) -> int:
+        return int(self.planes["attempts"].shape[0])
+
+    # -------------------------------------------------------- composition
+    def __getitem__(self, key):
+        if isinstance(key, slice):
+            return Scenario({k: v[key] for k, v in self.planes.items()})
+        return TickInputs({k: v[key] for k, v in self.planes.items()})
+
+    def concat(self, *others: "Scenario") -> "Scenario":
+        """Concatenate scenarios along the tick axis (same geometry)."""
+        for o in others:
+            for name in PLANES:
+                a, b = self.planes[name], o.planes[name]
+                if a.shape[1:] != b.shape[1:]:
+                    raise ValueError(
+                        f"cannot concat: plane {name!r} per-tick shapes "
+                        f"differ ({a.shape[1:]} vs {b.shape[1:]})"
+                    )
+        return Scenario({
+            k: np.concatenate(
+                [np.asarray(self.planes[k])]
+                + [np.asarray(o.planes[k]) for o in others], axis=0,
+            )
+            for k in self.planes
+        })
+
+    @classmethod
+    def stack(cls, scenarios: Iterable["Scenario"]):
+        """Stack same-shape scenarios on a new leading batch axis — the
+        ``jax.vmap`` batching form. Returns a Scenario-shaped pytree whose
+        leaves are [B, T, ...] (its per-tick properties no longer apply);
+        feed it to a vmapped scanner with ``in_axes=0``."""
+        scenarios = list(scenarios)
+        return jax.tree.map(lambda *xs: np.stack(xs), *scenarios)

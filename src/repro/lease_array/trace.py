@@ -6,16 +6,20 @@ the delayed model) how long every message leg takes and which legs are
 lost. Replaying one trace through the event-driven ``core/`` engine and
 through the vectorized ``lease_array`` plane must produce identical
 per-tick ownership (tests assert it, plus §4 at-most-one-owner at every
-tick).
+tick). A :class:`Trace` converts to the engine's declarative
+:class:`~repro.lease_array.scenario.Scenario` pytree via :meth:`Trace.scenario`.
 
 Exact-match construction (why this works, not just approximately):
 
-  - message timing is *pinned*: every protocol message sent at tick ``t``
-    on the link to/from acceptor ``a`` takes exactly ``delay[t, a]`` whole
-    ticks and is lost iff ``drop[t, a]``. The event sim replays the same
-    planes via deterministic delay/drop policies on its ``Network``
-    (deliveries land at ``tick + DELIVER_EPS``, inside the drain window,
-    after tick-boundary reachability flips, releases and attempts);
+  - message timing is *pinned*: every message leg sent at tick ``t`` on the
+    link between proposer ``p`` and acceptor ``a`` takes exactly
+    ``delay[t, p, a]`` whole ticks and is lost iff ``drop[t, p, a]`` —
+    asymmetric per-(proposer, acceptor) link matrices; the symmetric
+    per-acceptor ``[T, A]`` form is the P-broadcast special case. The event
+    sim replays the same planes via deterministic delay/drop policies on
+    its ``Network`` (phase deliveries land at ``tick + DELIVER_EPS``,
+    inside the drain window, after tick-boundary reachability flips,
+    releases and attempts);
   - with all-zero planes a whole prepare/propose round resolves inside one
     tick (FIFO event order = call order) — the PR 1 zero-delay model is
     the special case, bit-identical on both engines;
@@ -28,6 +32,14 @@ Exact-match construction (why this works, not just approximately):
     a round's last message leaves the network within ``4 * max_delay``
     ticks, so an in-flight slot in the array plane is never overwritten
     while its message still matters (see ``netplane.py``);
+  - §7 release messages ride the same in-flight plane (``rel_*`` slots):
+    the releasing proposer stops believing immediately (the §7 local
+    ordering), but each discard leg takes ``delay[t, p, a]`` ticks and is
+    droppable like any phase leg. In the event sim they deliver at
+    ``REL_EPS`` — after the round-abandon timers, before any phase
+    delivery, matching the array tick's step order. Releases on the same
+    cell are spaced ``> max_delay`` ticks apart (a release slot holds one
+    in-flight discard per (acceptor, cell));
   - lease timespan ``T = lease_ticks + 0.25`` sim-seconds -> every expiry
     lands strictly *between* integer ticks, so tick-boundary sampling is
     never ambiguous (the array plane's quarter-tick arithmetic encodes the
@@ -37,9 +49,7 @@ Exact-match construction (why this works, not just approximately):
   - acceptor downtime is *network* unreachability: messages drop, local
     expiry timers keep running — in both engines. Down acceptors drop
     requests at *delivery* time (a request in flight toward an acceptor
-    that goes down is lost), exactly like ``Network.set_down``;
-  - §7 releases stay out-of-band (instantaneous, loss-free to reachable
-    acceptors): the delay/drop planes govern the four round phases only.
+    that goes down is lost), exactly like ``Network.set_down``.
 """
 from __future__ import annotations
 
@@ -55,16 +65,21 @@ from ..core.messages import (
     PrepareResponse,
     ProposeRequest,
     ProposeResponse,
+    Release,
 )
 from ..sim.network import NetConfig
+from .scenario import PLANES, Scenario, _coerce_plane, _dim_sizes
 from .state import NO_PROPOSER
 
 TICK_EPS = 0.1  # sample offset into a tick; < 0.25 so no expiry slips in
-DELIVER_EPS = 0.05  # messages land here within their delivery tick
+DELIVER_EPS = 0.05  # phase messages land here within their delivery tick
+REL_EPS = 0.03  # §7 discards land here: after abandons, before phase legs
 ABANDON_EPS = 0.02  # round timer fires here: before deliveries, after attempts
 
-#: messages governed by the trace's delay/drop planes
+#: messages governed by the trace's delay/drop planes (every protocol leg;
+#: LearnHints stay out-of-band — advisory, never authoritative)
 PHASE_MESSAGES = (PrepareRequest, PrepareResponse, ProposeRequest, ProposeResponse)
+PLANE_MESSAGES = PHASE_MESSAGES + (Release,)
 
 
 def cell_resource(n: int) -> str:
@@ -80,8 +95,10 @@ class Trace:
     attempts: np.ndarray  # [T, N] int32: proposer attempting (or -1)
     releases: np.ndarray  # [T, N] int32: proposer releasing (or -1)
     acc_up: np.ndarray    # [T, A] bool: acceptor reachability
-    delay: Optional[np.ndarray] = None  # [T, A] int32: per-leg delay (ticks)
-    drop: Optional[np.ndarray] = None   # [T, A] bool: per-leg loss
+    #: per-leg delay in whole ticks: asymmetric [T, P, A], or the symmetric
+    #: per-acceptor [T, A] special case (broadcast over P)
+    delay: Optional[np.ndarray] = None
+    drop: Optional[np.ndarray] = None   # [T, P, A] or [T, A] bool: per-leg loss
     round_ticks: int = 1  # proposer abandons a round after this many ticks
 
     @property
@@ -96,15 +113,30 @@ class Trace:
             or (self.drop is not None and self.drop.any())
         )
 
-    def delay_plane(self) -> np.ndarray:
-        if self.delay is None:
-            return np.zeros((self.n_ticks, self.n_acceptors), np.int32)
-        return self.delay
+    def scenario(self) -> Scenario:
+        """The trace's fault planes as one declarative Scenario pytree
+        (defaulted, validated, [T, A] forms broadcast to [T, P, A])."""
+        return Scenario.build(
+            self.n_ticks,
+            n_cells=self.n_cells,
+            n_acceptors=self.n_acceptors,
+            n_proposers=self.n_proposers,
+            attempts=self.attempts,
+            releases=self.releases,
+            acc_up=self.acc_up,
+            delay=self.delay,
+            drop=self.drop,
+        )
 
-    def drop_plane(self) -> np.ndarray:
-        if self.drop is None:
-            return np.zeros((self.n_ticks, self.n_acceptors), bool)
-        return self.drop
+    def link_planes(self) -> tuple[np.ndarray, np.ndarray]:
+        """Canonical [T, P, A] (delay, drop) link matrices, zero-defaulted
+        — just the two planes, without materializing a whole Scenario."""
+        sizes = _dim_sizes(self.n_cells, self.n_acceptors, self.n_proposers)
+        lead = (self.n_ticks,)
+        return (
+            _coerce_plane(PLANES["delay"], self.delay, sizes, lead, "trace"),
+            _coerce_plane(PLANES["drop"], self.drop, sizes, lead, "trace"),
+        )
 
 
 def random_trace(
@@ -120,6 +152,7 @@ def random_trace(
     p_down_flip: float = 0.02,
     max_delay_ticks: int = 0,
     p_drop: float = 0.0,
+    asymmetric: bool = False,
     round_ticks: Optional[int] = None,
 ) -> Trace:
     """Randomized trace: per (tick, cell) at most one attempting proposer
@@ -129,10 +162,14 @@ def random_trace(
     sticky, exercising quorum loss and recovery.
 
     With ``max_delay_ticks > 0`` / ``p_drop > 0`` the trace also carries
-    lossy/laggy message schedules: every leg sent at tick ``t`` to/from
-    acceptor ``a`` takes ``delay[t, a]`` ticks (uniform in
-    [0, max_delay_ticks]) and is lost with the drop plane. Attempts on the
-    same cell are then spaced ``4 * max_delay_ticks + 1`` ticks apart (the
+    lossy/laggy message schedules: every leg sent at tick ``t`` on the
+    (p, a) link takes ``delay[t, p, a]`` ticks (uniform in
+    [0, max_delay_ticks]) and is lost with the drop plane.
+    ``asymmetric=True`` draws per-(proposer, acceptor) ``[T, P, A]``
+    planes — heterogeneous links (a straggler replica, one proposer behind
+    a lossy uplink); the default draws the symmetric ``[T, A]`` form.
+    Attempts on the same cell are then spaced ``4 * max_delay_ticks + 1``
+    ticks apart, releases ``max_delay_ticks + 1`` apart (the
     slot-isolation construction above). ``round_ticks`` defaults to
     ``max_delay_ticks + 1`` so slow rounds genuinely get abandoned and
     responses genuinely arrive late.
@@ -154,22 +191,30 @@ def random_trace(
         up ^= rng.random(n_acceptors) < p_down_flip
         acc_up[t] = up
     delay = drop = None
+    link_shape = (
+        (n_ticks, n_proposers, n_acceptors) if asymmetric
+        else (n_ticks, n_acceptors)
+    )
     if round_ticks is None:
         round_ticks = max_delay_ticks + 1
     if max_delay_ticks > 0:
-        delay = rng.integers(
-            0, max_delay_ticks + 1, (n_ticks, n_acceptors)
-        ).astype(np.int32)
-        # slot isolation: a round's messages leave the network within
-        # 4 * max_delay ticks; keep same-cell attempts farther apart
-        gap = 4 * max_delay_ticks + 1
-        last = np.full(n_cells, -gap, np.int64)
-        for t in range(n_ticks):
-            ok = (attempts[t] >= 0) & (t - last >= gap)
-            attempts[t] = np.where(ok, attempts[t], NO_PROPOSER)
-            last = np.where(ok, t, last)
+        delay = rng.integers(0, max_delay_ticks + 1, link_shape).astype(np.int32)
+
+        def space(rows: np.ndarray, gap: int) -> None:
+            # slot isolation: keep same-cell events farther apart than the
+            # lifetime of the in-flight messages they generate
+            last = np.full(n_cells, -gap, np.int64)
+            for t in range(n_ticks):
+                ok = (rows[t] >= 0) & (t - last >= gap)
+                rows[t] = np.where(ok, rows[t], NO_PROPOSER)
+                last = np.where(ok, t, last)
+
+        # a round's messages leave the network within 4 * max_delay ticks;
+        # a release's discard legs within max_delay
+        space(attempts, 4 * max_delay_ticks + 1)
+        space(releases, max_delay_ticks + 1)
     if p_drop > 0.0:
-        drop = rng.random((n_ticks, n_acceptors)) < p_drop
+        drop = rng.random(link_shape) < p_drop
     return Trace(
         n_cells, n_acceptors, n_proposers, lease_ticks,
         attempts, releases, acc_up,
@@ -195,45 +240,44 @@ def replay_array(trace: Trace, *, backend: str = "jnp", netplane: Optional[bool]
         round_ticks=trace.round_ticks,
         backend=backend,
     )
-    if netplane is None:
-        netplane = trace.delayed
-    if not netplane:
-        return eng.run_trace(trace.attempts, trace.releases, trace.acc_up)
-    return eng.run_trace(
-        trace.attempts, trace.releases, trace.acc_up,
-        delay=trace.delay_plane(), drop=trace.drop_plane(),
-    )
+    return eng.run_trace(trace.scenario(), netplane=netplane)
 
 
-def _pin_network_to_trace(net, trace: Trace, acc_index: dict[str, int]) -> None:
+def _pin_network_to_trace(
+    net, trace: Trace, acc_index: dict[str, int], prop_index: dict[str, int]
+) -> None:
     """Install deterministic delay/drop policies replaying the trace's
-    planes: a phase message sent at tick ``t`` on the link to/from acceptor
-    ``a`` is dropped iff ``drop[t, a]`` and otherwise delivered at
-    ``t + delay[t, a] + DELIVER_EPS``. Releases (and anything else) stay
-    instantaneous and loss-free."""
-    delay = trace.delay_plane()
-    dropm = trace.drop_plane()
+    planes: a protocol message sent at tick ``t`` on the (p, a) link is
+    dropped iff ``drop[t, p, a]`` and otherwise delivered at
+    ``t + delay[t, p, a]`` — phase legs at ``+ DELIVER_EPS``, §7 release
+    legs at ``+ REL_EPS`` (the array tick delivers due discards before any
+    phase message). Anything else (LearnHints) stays instantaneous and
+    loss-free."""
+    delay, dropm = trace.link_planes()
     last = trace.n_ticks - 1
 
-    def leg(src: str, dst: str) -> Optional[int]:
+    def leg(src: str, dst: str) -> tuple[int, int]:
         a = acc_index.get(dst)
-        return a if a is not None else acc_index.get(src)
+        if a is not None:  # proposer -> acceptor: requests, releases
+            return prop_index[src], a
+        return prop_index[dst], acc_index[src]  # acceptor -> proposer
 
     def tick_of(now: float) -> int:
         return min(int(now + 1e-9), last)
 
     def delay_policy(src, dst, msg, now):
-        if not isinstance(msg, PHASE_MESSAGES):
-            return 0.0  # out-of-band (Release): deliver at the send instant
-        a = leg(src, dst)
+        if not isinstance(msg, PLANE_MESSAGES):
+            return 0.0  # out-of-band (hints): deliver at the send instant
+        p, a = leg(src, dst)
         t = tick_of(now)
-        return (t + int(delay[t, a])) + DELIVER_EPS - now
+        eps = REL_EPS if isinstance(msg, Release) else DELIVER_EPS
+        return (t + int(delay[t, p, a])) + eps - now
 
     def drop_policy(src, dst, msg, now):
-        if not isinstance(msg, PHASE_MESSAGES):
+        if not isinstance(msg, PLANE_MESSAGES):
             return False
-        a = leg(src, dst)
-        return bool(dropm[tick_of(now), a])
+        p, a = leg(src, dst)
+        return bool(dropm[tick_of(now), p, a])
 
     net.set_delay_policy(delay_policy)
     net.set_drop_policy(drop_policy)
@@ -263,7 +307,9 @@ def replay_event_sim(trace: Trace, *, strict_monitor: bool = True) -> np.ndarray
     acc_addrs = [n.addr for n in cell.nodes if n.acceptor is not None]
     props = {n.node_id: n.proposer for n in cell.nodes if n.proposer is not None}
     _pin_network_to_trace(
-        cell.env.network, trace, {addr: a for a, addr in enumerate(acc_addrs)}
+        cell.env.network, trace,
+        {addr: a for a, addr in enumerate(acc_addrs)},
+        {n.addr: n.node_id for n in cell.nodes if n.proposer is not None},
     )
     owners = np.full((trace.n_ticks, trace.n_cells), NO_PROPOSER, np.int32)
     up_now = np.ones(trace.n_acceptors, bool)
@@ -284,7 +330,8 @@ def replay_event_sim(trace: Trace, *, strict_monitor: bool = True) -> np.ndarray
             st.round = None  # overwrite any open round; no ballot jumps
             p.ballots.run = t  # next() -> run = t+1: (tick, pid) ballot order
             p._start_round(cell_resource(n))
-        # drain this tick: round timers (+0.02), then deliveries (+0.05)
+        # drain this tick: round timers (+0.02), release discards (+0.03),
+        # then phase deliveries (+0.05)
         cell.env.run_until(t + TICK_EPS)
         for n in range(trace.n_cells):
             o = cell.monitor.owner_of(cell_resource(n))

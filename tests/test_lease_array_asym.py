@@ -1,0 +1,157 @@
+"""Asymmetric per-(proposer, acceptor) link matrices and in-flight §7
+releases, differentially vs the event sim: every leg sent at tick t on
+the (p, a) link takes delay[t, p, a] ticks and is lost iff drop[t, p, a]
+— including a release's discard legs, which now ride the netplane instead
+of bypassing it. Exact-match construction in repro/lease_array/trace.py."""
+import numpy as np
+import pytest
+
+from repro.lease_array import NO_PROPOSER, Trace, random_trace, replay_array
+
+from test_lease_array_differential import assert_engines_agree
+
+NA = NO_PROPOSER
+
+
+def _hand_trace(n_ticks, *, n_cells=1, n_acceptors=3, n_proposers=2,
+                lease_ticks=6, round_ticks=1):
+    """All-quiet asymmetric trace skeleton to write schedules into."""
+    return Trace(
+        n_cells, n_acceptors, n_proposers, lease_ticks,
+        attempts=np.full((n_ticks, n_cells), NA, np.int32),
+        releases=np.full((n_ticks, n_cells), NA, np.int32),
+        acc_up=np.ones((n_ticks, n_acceptors), bool),
+        delay=np.zeros((n_ticks, n_proposers, n_acceptors), np.int32),
+        drop=np.zeros((n_ticks, n_proposers, n_acceptors), bool),
+        round_ticks=round_ticks,
+    )
+
+
+# ---------------------------------------------------------------- randomized
+@pytest.mark.slow
+def test_thousand_tick_asymmetric_trace():
+    """Acceptance: a 1000-tick trace with non-trivial [T, P, A] delay/drop
+    planes replays bit-exactly through both engines."""
+    trace = random_trace(
+        4242,
+        n_ticks=1000,
+        n_cells=8,
+        n_acceptors=5,
+        n_proposers=4,
+        lease_ticks=8,
+        p_attempt=0.9,
+        p_release=0.06,
+        p_down_flip=0.02,
+        max_delay_ticks=1,
+        p_drop=0.05,
+        asymmetric=True,
+        round_ticks=3,
+    )
+    assert trace.delay.shape == (1000, 4, 5) and trace.delayed
+    # genuinely asymmetric: some tick has two proposers seeing different links
+    assert (trace.delay.max(axis=1) != trace.delay.min(axis=1)).any()
+    owners = assert_engines_agree(trace)
+    assert (owners >= 0).any() and (owners == -1).any()
+    assert float((owners >= 0).mean()) > 0.1
+
+
+@pytest.mark.parametrize(
+    "seed,n_acceptors,n_proposers,lease_ticks,max_delay",
+    [(21, 3, 2, 4, 1), (22, 5, 6, 6, 3), (23, 7, 3, 5, 2)],
+)
+def test_asymmetric_geometry_sweep(seed, n_acceptors, n_proposers, lease_ticks, max_delay):
+    trace = random_trace(
+        seed,
+        n_ticks=150,
+        n_cells=8,
+        n_acceptors=n_acceptors,
+        n_proposers=n_proposers,
+        lease_ticks=lease_ticks,
+        p_attempt=0.6,
+        p_release=0.1,
+        p_down_flip=0.05,
+        max_delay_ticks=max_delay,
+        p_drop=0.1,
+        asymmetric=True,
+    )
+    assert_engines_agree(trace)
+
+
+def test_asymmetric_through_pallas_kernel():
+    trace = random_trace(
+        31, n_ticks=80, n_cells=12, n_acceptors=5, n_proposers=4,
+        lease_ticks=4, max_delay_ticks=2, p_drop=0.05, p_down_flip=0.03,
+        asymmetric=True,
+    )
+    jnp_owners, jnp_counts = replay_array(trace, backend="jnp")
+    pal_owners, pal_counts = replay_array(trace, backend="pallas")
+    assert np.array_equal(jnp_owners, pal_owners)
+    assert np.array_equal(jnp_counts, pal_counts)
+    assert_engines_agree(trace, backend="pallas")
+
+
+# ------------------------------------------------------------- structured
+def test_straggler_proposer_loses_contended_cell():
+    """Per-proposer asymmetry the old [T, A] planes could not express: p0's
+    links lag 2 ticks everywhere, p1's are instant — attempting one tick
+    apart on the same cell, the slow proposer's round is overtaken."""
+    tr = _hand_trace(12, n_proposers=2, lease_ticks=4, round_ticks=6)
+    tr.delay[:, 0, :] = 2  # p0 is behind a straggler uplink
+    tr.attempts[0, 0] = 0  # p0 starts first...
+    tr.attempts[1, 0] = 1  # ...p1 starts a tick later, with a higher ballot
+    owners = assert_engines_agree(tr)
+    # p1's instant round wins at its attempt tick; p0's responses come back
+    # to an already-raised promise floor and never assemble a quorum
+    assert owners[1, 0] == 1
+    assert (owners[1:5, 0] == 1).all()
+    assert not (owners[:, 0] == 0).any()
+
+
+def test_release_discard_is_delayed_through_netplane():
+    """§7 discards ride the in-flight plane: the releasing owner stops
+    believing immediately, but acceptors keep the accepted lease until the
+    discard leg lands — a contender in that window still finds the cell
+    taken, in BOTH engines."""
+    tr = _hand_trace(10)
+    tr.attempts[0, 0] = 0          # p0 acquires instantly at t=0
+    tr.releases[2, 0] = 0          # p0 releases at t=2 ...
+    tr.delay[2, 0, :] = 3          # ... but its discard legs take 3 ticks
+    tr.attempts[3, 0] = 1          # p1 probes inside the in-flight window
+    tr.attempts[6, 0] = 1          # and again once the discards have landed
+    owners = assert_engines_agree(tr)
+    col = owners[:, 0]
+    assert col[0] == 0 and col[1] == 0      # owned by p0
+    assert (col[2:6] == NA).all()           # released locally at t=2; p1's
+                                            # t=3 probe hits undischarged state
+    assert (col[6:] == 1).all()             # discards landed at t=5 -> p1 wins
+    assert col[6:].size > 0
+
+
+def test_dropped_release_keeps_lease_until_expiry():
+    """A fully dropped release discards nothing: acceptors hold the lease
+    to its natural expiry, and only then can a contender win."""
+    tr = _hand_trace(11)
+    tr.attempts[0, 0] = 0
+    tr.releases[2, 0] = 0
+    tr.drop[2, 0, :] = True        # every discard leg is lost
+    tr.attempts[4, 0] = 1          # blocked: acceptors still hold p0's lease
+    tr.attempts[8, 0] = 1          # lease (t=0, 6 ticks) expired -> wins
+    owners = assert_engines_agree(tr)
+    col = owners[:, 0]
+    assert (col[:2] == 0).all()
+    assert (col[2:8] == NA).all()
+    assert (col[8:] == 1).all()
+
+
+def test_release_discard_dropped_at_one_acceptor_only():
+    """Asymmetric drop row: one acceptor never hears the discard but the
+    other two do — a fresh contender still finds an open majority."""
+    tr = _hand_trace(8)
+    tr.attempts[0, 0] = 0
+    tr.releases[2, 0] = 0
+    tr.drop[2, 0, 0] = True        # acc0 keeps p0's stale accepted lease
+    tr.attempts[3, 0] = 1          # 2 of 3 opens is a majority -> wins
+    owners = assert_engines_agree(tr)
+    col = owners[:, 0]
+    assert (col[:2] == 0).all() and col[2] == NA
+    assert (col[3:] == 1).all()
