@@ -2,7 +2,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-all test-fast bench-smoke bench-delay bench-json bench dev-deps
+.PHONY: test test-all test-fast bench-smoke bench-delay bench-json bench-compare bench dev-deps
 
 test:  ## fast default: skip the long @slow differential replays
 	python -m pytest -x -q -m "not slow"
@@ -23,6 +23,11 @@ bench-delay:  ## netplane smoke: delay-depth sweep of the in-flight plane
 
 bench-json:  ## all lease-plane modes -> machine-readable BENCH_lease_array.json
 	python -m benchmarks.bench_lease_array
+
+bench-compare:  ## fresh bench run diffed against the committed baseline (>25% regression fails; measured on row ratios when the machines differ)
+	python -m benchmarks.bench_lease_array BENCH_candidate.json
+	python -m benchmarks.compare_bench BENCH_lease_array.json BENCH_candidate.json > BENCH_compare.txt; \
+	  status=$$?; cat BENCH_compare.txt; exit $$status
 
 bench:  ## every paper table (slow)
 	python -m benchmarks.run

@@ -3,14 +3,41 @@ simulator on identical randomized workloads.
 
 The event engine pays Python per message (the per-message overhead that
 dominates quorum-protocol throughput in practice); the array plane pays one
-batched step for *all* cells per tick. Reported as cell-ticks/sec, plus the
-single-batched-step width (the acceptance floor is >= 4096 concurrent cells).
+batched dispatch for *all* cells — and, since PR 4, for all TICKS too: the
+``lease_fused_scan`` row drives the fused window scan (packed int32 layout,
+cell axis shard_map-ed across every visible device), while
+``lease_array_scan`` keeps timing the per-tick ``lax.scan`` driver it always
+measured, so the fused speedup is visible inside one file. Reported as
+cell-ticks/sec.
 
 ``python -m benchmarks.bench_lease_array`` runs every mode and writes the
 machine-readable ``BENCH_lease_array.json`` (schema at the bottom) so the
-perf trajectory is tracked across PRs; ``make bench-json`` wraps it.
+perf trajectory is tracked across PRs; ``make bench-json`` wraps it. The
+__main__ entry re-execs itself with one JAX host device per CPU core so the
+sharded driver has something to shard over (a real accelerator platform is
+unaffected). ``benchmarks/compare_bench.py`` diffs two of these files and
+gates CI on regressions.
 """
 from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+if __name__ == "__main__" and "_LEASE_BENCH_CHILD" not in os.environ:
+    # re-exec BEFORE jax is imported: expose every CPU core as a device so
+    # the sharded fused driver can split the cell axis across them
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        n = os.cpu_count() or 1
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip()
+        )
+    os.environ["_LEASE_BENCH_CHILD"] = "1"
+    os.execv(
+        sys.executable,
+        [sys.executable, "-m", "benchmarks.bench_lease_array", *sys.argv[1:]],
+    )
 
 import json
 import platform
@@ -18,15 +45,36 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.lease_array import LeaseArrayEngine, random_trace, replay_array, replay_event_sim
+from repro.lease_array import (
+    LeaseArrayEngine,
+    random_trace,
+    replay_array,
+    replay_event_sim,
+)
 
 from .common import WallTimer, fmt
 
+BEST_OF = 3  # timed reps per row (after warm-up); best wall time wins
+
+
+def timed(fn, reps=BEST_OF):
+    """Best-of-N wall time of ``fn`` (call it warm first): the bench gates
+    CI on per-row deltas, so single-shot scheduler noise must not fail the
+    25% regression threshold on a loaded 2-core runner."""
+    best_dt, best_out = None, None
+    for _ in range(reps):
+        with WallTimer() as wt:
+            out = fn()
+        if best_dt is None or wt.dt < best_dt:
+            best_dt, best_out = wt.dt, out
+    return best_dt, best_out
+
 EVENT_CELLS, EVENT_TICKS = 96, 30
 ARRAY_CELLS, ARRAY_TICKS = 4096, 128
-KERNEL_CELLS = 4096
+KERNEL_CELLS, KERNEL_TICKS = 1024, 32
 DELAY_CELLS, DELAY_TICKS = 1024, 96
 DELAY_DEPTHS = (0, 1, 2, 4)
+SWEEP_SCENARIOS, SWEEP_CELLS, SWEEP_TICKS = 1024, 32, 16
 
 
 def _trace(n_cells, n_ticks, seed=0):
@@ -37,47 +85,105 @@ def _trace(n_cells, n_ticks, seed=0):
     )
 
 
+def _pertick_replay(trace, *, netplane=False):
+    """The trace through the pre-fused per-tick lax.scan driver (ONE
+    lease_plane_tick dispatch body per tick) — the dispatch-overhead
+    baseline the fused rows are measured against."""
+    import jax.numpy as jnp
+
+    from repro.lease_array import init_netplane, init_state
+    from repro.lease_array.engine import _scenario_scanner
+    from repro.lease_array.state import QUARTERS, lease_quarters
+
+    scanner = _scenario_scanner(
+        trace.n_acceptors // 2 + 1,
+        lease_quarters(trace.lease_ticks),
+        QUARTERS * trace.round_ticks,
+        "jnp",
+        not netplane,
+    )
+    planes = {
+        k: jnp.asarray(v) for k, v in trace.scenario().planes.items()
+    }
+    state = init_state(trace.n_cells, trace.n_acceptors, trace.n_proposers)
+    net = init_netplane(trace.n_cells, trace.n_acceptors)
+    _, _, owners, counts = scanner(state, net, jnp.int32(0), planes)
+    return np.asarray(owners), np.asarray(counts)
+
+
 def run():
     rows = []
 
     ev = _trace(EVENT_CELLS, EVENT_TICKS)
-    with WallTimer() as wt:
-        replay_event_sim(ev, strict_monitor=True)
-    ev_rate = EVENT_CELLS * EVENT_TICKS / wt.dt
+    dt, _ = timed(lambda: replay_event_sim(ev, strict_monitor=True), reps=2)
+    ev_rate = EVENT_CELLS * EVENT_TICKS / dt
     rows.append((
         "lease_event_sim",
-        wt.dt / (EVENT_CELLS * EVENT_TICKS) * 1e6,
+        dt / (EVENT_CELLS * EVENT_TICKS) * 1e6,
         f"{EVENT_CELLS} cells x {EVENT_TICKS} ticks: {fmt(ev_rate)} cell-ticks/s",
     ))
 
     ar = _trace(ARRAY_CELLS, ARRAY_TICKS)
-    replay_array(_trace(ARRAY_CELLS, 2))  # warm the scan jit cache
-    with WallTimer() as wt:
-        owners, counts = replay_array(ar)
+    _pertick_replay(_trace(ARRAY_CELLS, ARRAY_TICKS, seed=1))  # warm the jit
+    dt, (owners, counts) = timed(lambda: _pertick_replay(ar))
     assert counts.max() <= 1, "at-most-one-owner violated in the array plane"
-    ar_rate = ARRAY_CELLS * ARRAY_TICKS / wt.dt
+    ar_rate = ARRAY_CELLS * ARRAY_TICKS / dt
     rows.append((
         "lease_array_scan",
-        wt.dt / (ARRAY_CELLS * ARRAY_TICKS) * 1e6,
-        f"{ARRAY_CELLS} cells x {ARRAY_TICKS} ticks in one scan: "
+        dt / (ARRAY_CELLS * ARRAY_TICKS) * 1e6,
+        f"{ARRAY_CELLS} cells x {ARRAY_TICKS} ticks, per-tick scan driver: "
         f"{fmt(ar_rate)} cell-ticks/s ({fmt(ar_rate / ev_rate)}x event sim), "
         f"owned={float((owners >= 0).mean()):.2f}",
     ))
 
-    # one fused batched step at the acceptance width (kernel path)
-    eng = LeaseArrayEngine(
-        KERNEL_CELLS, n_acceptors=5, n_proposers=8, lease_ticks=4,
-        backend="pallas",
-    )
-    attempt = np.arange(KERNEL_CELLS, dtype=np.int32) % eng.n_proposers
-    eng.step(attempt)  # warm the kernel
-    with WallTimer() as wt:
-        owner = eng.step(attempt)
+    # the fused window scan (run_trace's default path): packed layout, one
+    # dispatch for the whole trace, cell axis sharded across devices
+    replay_array(_trace(ARRAY_CELLS, ARRAY_TICKS, seed=1))  # warm
+    dt, (owners, counts) = timed(lambda: replay_array(ar))
+    assert counts.max() <= 1
+    fused_rate = ARRAY_CELLS * ARRAY_TICKS / dt
     rows.append((
-        "lease_array_kernel_step",
-        wt.dt / KERNEL_CELLS * 1e6,
-        f"one fused pallas step over {KERNEL_CELLS} cells "
-        f"(owned {int((owner >= 0).sum())}/{KERNEL_CELLS})",
+        "lease_fused_scan",
+        dt / (ARRAY_CELLS * ARRAY_TICKS) * 1e6,
+        f"{ARRAY_CELLS} cells x {ARRAY_TICKS} ticks, fused+sharded scan: "
+        f"{fmt(fused_rate)} cell-ticks/s "
+        f"({fused_rate / ar_rate:.2f}x the per-tick scan driver)",
+    ))
+
+    # dispatch cost, kept visible: ONE host-driven tick (warm) is dominated
+    # by launch overhead, which the fused scan pays once per trace instead
+    # of once per tick
+    eng = LeaseArrayEngine(ARRAY_CELLS, n_acceptors=5, n_proposers=8,
+                           lease_ticks=4)
+    attempt = np.arange(ARRAY_CELLS, dtype=np.int32) % eng.n_proposers
+    eng.step(attempt)  # warm
+    dt, _ = timed(lambda: eng.step(attempt))
+    rows.append((
+        "kernel_launch_overhead",
+        dt / ARRAY_CELLS * 1e6,
+        f"one dispatched tick over {ARRAY_CELLS} cells "
+        f"({dt * 1e3:.2f} ms/dispatch — the per-tick driver pays this "
+        f"every tick, the fused scan once per trace)",
+    ))
+
+    # the Pallas window kernel under the scan driver, interpret mode: the
+    # CI-portable correctness harness for the TPU kernel (interpret-mode
+    # wall time is a python-loop artifact, not a kernel speed claim)
+    kt = _trace(KERNEL_CELLS, KERNEL_TICKS)
+    replay_array(
+        _trace(KERNEL_CELLS, KERNEL_TICKS, seed=1), backend="pallas"
+    )  # warm
+    dt, (owners_k, counts_k) = timed(
+        lambda: replay_array(kt, backend="pallas"), reps=2
+    )
+    owners_j, _ = replay_array(kt)
+    assert np.array_equal(owners_k, owners_j), "kernel != jnp oracle"
+    rows.append((
+        "lease_kernel_scan",
+        dt / (KERNEL_CELLS * KERNEL_TICKS) * 1e6,
+        f"{KERNEL_CELLS} cells x {KERNEL_TICKS} ticks, fused window kernel "
+        f"(interpret mode, bit-exact vs jnp oracle; compile with "
+        f"backend='pallas_tpu' on real TPUs)",
     ))
     return rows
 
@@ -97,9 +203,10 @@ def run_delayed(depths=DELAY_DEPTHS):
     the netplane scan at increasing per-leg delay bounds (depth 0 = the
     zero-delay special case run through the same delayed step), plus the
     resulting ownership density — lease dynamics vs latency regime, the
-    Keyspace/cloud-report axis (arXiv 1209.3913, 1404.6719). The last row
-    re-runs the deepest sweep point with asymmetric [T, P, A] link
-    matrices (per-(proposer, acceptor) Scenario planes)."""
+    Keyspace/cloud-report axis (arXiv 1209.3913, 1404.6719). The deepest
+    sweep point re-runs with asymmetric [T, P, A] link matrices, both
+    through the fused scan (the historic row name) and through the
+    per-tick driver (the in-file baseline for the fused speedup)."""
     rows = []
     sweep = [(d, False) for d in depths] + [(max(depths), True)]
     for depth, asym in sweep:
@@ -110,35 +217,104 @@ def run_delayed(depths=DELAY_DEPTHS):
             _delayed_trace(depth, DELAY_TICKS, seed=6, asymmetric=asym),
             netplane=True,
         )
-        with WallTimer() as wt:
-            owners, counts = replay_array(tr, netplane=True)
+        dt, (owners, counts) = timed(
+            lambda: replay_array(tr, netplane=True)
+        )
         assert counts.max() <= 1, "at-most-one-owner violated in the netplane"
-        rate = DELAY_CELLS * DELAY_TICKS / wt.dt
+        rate = DELAY_CELLS * DELAY_TICKS / dt
         name = f"lease_netplane_delay{depth}" + ("_asym" if asym else "")
         rows.append((
             name,
-            wt.dt / (DELAY_CELLS * DELAY_TICKS) * 1e6,
+            dt / (DELAY_CELLS * DELAY_TICKS) * 1e6,
             f"{DELAY_CELLS} cells x {DELAY_TICKS} ticks, delay<={depth} "
             f"drop={0.05 if depth else 0.0}"
             f"{' [P, A] asymmetric links' if asym else ''}: "
             f"{fmt(rate)} cell-ticks/s, "
             f"owned={float((owners >= 0).mean()):.2f}",
         ))
+        if asym:  # the per-tick baseline on the identical workload
+            _pertick_replay(
+                _delayed_trace(depth, DELAY_TICKS, seed=6, asymmetric=True),
+                netplane=True,
+            )  # warm
+            dt, _ = timed(lambda: _pertick_replay(tr, netplane=True))
+            base_rate = DELAY_CELLS * DELAY_TICKS / dt
+            rows.append((
+                f"{name}_pertick",
+                dt / (DELAY_CELLS * DELAY_TICKS) * 1e6,
+                f"same workload through the per-tick scan driver: "
+                f"{fmt(base_rate)} cell-ticks/s "
+                f"(the fused row is {rate / base_rate:.2f}x faster)",
+            ))
     return rows
+
+
+def run_sweep():
+    """The scenario-sweep driver: a stacked batch of fault scenarios in ONE
+    dispatch (vmap inside, shard_map across devices), §4 verified."""
+    from repro.lease_array import Scenario
+
+    traces = [
+        random_trace(
+            s, n_ticks=SWEEP_TICKS, n_cells=SWEEP_CELLS,
+            n_acceptors=3, n_proposers=4, lease_ticks=3,
+            p_attempt=0.5, p_release=0.05, p_down_flip=0.05,
+        )
+        for s in range(SWEEP_SCENARIOS)
+    ]
+    stacked = Scenario.stack([t.scenario() for t in traces])
+    eng = LeaseArrayEngine(SWEEP_CELLS, n_acceptors=3, n_proposers=4,
+                           lease_ticks=3)
+    eng.sweep(stacked)  # warm
+    dt, res = timed(lambda: eng.sweep(stacked))
+    assert int(res.max_owner_count.max()) <= 1
+    total = SWEEP_SCENARIOS * SWEEP_CELLS * SWEEP_TICKS
+    return [(
+        "lease_sweep_batch",
+        dt / total * 1e6,
+        f"{SWEEP_SCENARIOS} scenarios x {SWEEP_CELLS} cells x "
+        f"{SWEEP_TICKS} ticks in one dispatch: "
+        f"{fmt(total / dt)} cell-ticks/s, "
+        f"owned={float(res.owned_frac.mean()):.2f}",
+    )]
 
 
 JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_lease_array.json"
 
 
+def _git_rev() -> str:
+    cwd = Path(__file__).resolve().parent
+    try:
+        rev = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10, cwd=cwd,
+        ).stdout.strip() or "unknown"
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"],
+            capture_output=True, text=True, timeout=10, cwd=cwd,
+        ).stdout.strip()
+        return f"{rev}+dirty" if dirty else rev
+    except Exception:
+        return "unknown"
+
+
 def emit_json(path=JSON_PATH) -> dict:
     """Run every mode and write the machine-readable trajectory record:
     ``{"rows": [{"name", "us_per_cell_tick", "detail"}, ...], ...}`` —
-    lower ``us_per_cell_tick`` is better; names are stable across PRs."""
-    rows = run() + run_delayed()
+    lower ``us_per_cell_tick`` is better; names are stable across PRs. The
+    header stamps git rev, JAX backend, and device kind/count so the bench
+    trajectory stays interpretable across machines and PRs."""
+    import jax
+
+    rows = run() + run_delayed() + run_sweep()
     doc = {
         "benchmark": "lease_array",
+        "git_rev": _git_rev(),
         "platform": platform.platform(),
         "python": platform.python_version(),
+        "jax_backend": jax.default_backend(),
+        "device_kind": jax.devices()[0].device_kind,
+        "n_devices": len(jax.devices()),
         "rows": [
             {"name": n, "us_per_cell_tick": round(us, 4), "detail": d}
             for n, us, d in rows
@@ -149,7 +325,8 @@ def emit_json(path=JSON_PATH) -> dict:
 
 
 if __name__ == "__main__":
-    doc = emit_json()
+    out = sys.argv[1] if len(sys.argv) > 1 else JSON_PATH
+    doc = emit_json(out)
     for r in doc["rows"]:
         print(f'{r["name"]},{r["us_per_cell_tick"]:.2f},"{r["detail"]}"')
-    print(f"wrote {JSON_PATH}")
+    print(f"wrote {out}")

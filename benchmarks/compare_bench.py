@@ -1,0 +1,176 @@
+"""Diff two ``BENCH_lease_array.json`` files row by row and gate on
+regressions.
+
+    python -m benchmarks.compare_bench BASELINE.json CANDIDATE.json
+
+Prints a per-row delta table (negative = the candidate got faster) and
+exits nonzero on regressions. Rows present in only one file are listed but
+never fail the gate — new benchmarks and retired rows are expected as the
+suite grows. ``make bench-compare`` runs a fresh bench and diffs it
+against the committed baseline; CI uploads the report as an artifact next
+to the JSON.
+
+The gate is header-aware: wall-clock numbers only compare honestly on the
+same hardware, so the strict threshold (default 25%, ``--threshold``)
+applies to raw deltas when both files report the same
+platform/device-kind/device-count stamp (``bench_lease_array.emit_json``
+writes it). Across machines — e.g. CI diffing a runner's numbers against
+a baseline committed from a dev box — each row instead gates on its ratio
+to a reference row present in both files (``--reference``, default
+``lease_array_scan``): machine speed cancels out of ``row / reference``,
+so the strict threshold still applies to *relative* slowdowns, while raw
+wall-clock deltas only fail at the catastrophic threshold
+(``--cross-machine-threshold``, default 300%; also the fallback when the
+reference row is missing). ``--strict`` forces the raw same-machine gate
+regardless.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+MACHINE_KEYS = ("platform", "device_kind", "n_devices", "jax_backend")
+
+
+def load_rows(path: Path) -> tuple[dict, dict]:
+    doc = json.loads(path.read_text())
+    return doc, {r["name"]: r for r in doc.get("rows", [])}
+
+
+def describe(doc: dict) -> str:
+    return (
+        f"rev={doc.get('git_rev', '?')} "
+        f"backend={doc.get('jax_backend', '?')} "
+        f"device={doc.get('device_kind', '?')} x{doc.get('n_devices', '?')} "
+        f"({doc.get('platform', '?')})"
+    )
+
+
+def same_machine(a: dict, b: dict) -> bool:
+    return all(
+        a.get(k) is not None and a.get(k) == b.get(k) for k in MACHINE_KEYS
+    )
+
+
+def compare(
+    base_path: Path,
+    cand_path: Path,
+    threshold: float,
+    cross_threshold: float = 3.0,
+    strict: bool = False,
+    reference: str = "lease_array_scan",
+) -> int:
+    base_doc, base = load_rows(base_path)
+    cand_doc, cand = load_rows(cand_path)
+    comparable = strict or same_machine(base_doc, cand_doc)
+    # cross-machine: gate each row's ratio to the reference row instead —
+    # machine speed cancels out of row/reference, raw deltas only gate at
+    # the catastrophic threshold
+    ref = None
+    if not comparable and not strict:
+        b_ref = base.get(reference, {}).get("us_per_cell_tick", 0.0)
+        c_ref = cand.get(reference, {}).get("us_per_cell_tick", 0.0)
+        if b_ref > 0 and c_ref > 0:
+            ref = (b_ref, c_ref)
+    gate = threshold if comparable else cross_threshold
+    print(f"baseline : {base_path}  [{describe(base_doc)}]")
+    print(f"candidate: {cand_path}  [{describe(cand_doc)}]")
+    if not comparable:
+        if ref:
+            print(
+                f"machine stamps differ: cross-machine mode — raw deltas "
+                f"gate at {gate:.0%} (catastrophic), ratios to "
+                f"{reference!r} gate at {threshold:.0%}"
+            )
+        else:
+            print(
+                f"machine stamps differ and no shared {reference!r} row: "
+                f"rows gate at {gate:.0%} (catastrophic only); deltas "
+                f"below are indicative"
+            )
+    print()
+    header = f"{'row':<36} {'base us':>10} {'cand us':>10} {'delta':>8}"
+    if ref:
+        header += f" {'rel':>8}"
+    print(header)
+    print("-" * len(header))
+    regressions = []
+    for name in base:
+        if name not in cand:
+            print(f"{name:<36} {base[name]['us_per_cell_tick']:>10.4f} "
+                  f"{'—':>10} {'gone':>8}")
+            continue
+        b = base[name]["us_per_cell_tick"]
+        c = cand[name]["us_per_cell_tick"]
+        delta = (c - b) / b if b else 0.0
+        rel_col = ""
+        flag = ""
+        if delta > gate:
+            regressions.append((name, b, c, delta, "raw"))
+            flag = "  << REGRESSION"
+        elif ref and name != reference and b > 0:
+            rel = (c / ref[1]) / (b / ref[0]) - 1.0
+            rel_col = f" {rel:>+7.1%}"
+            if rel > threshold:
+                regressions.append((name, b, c, rel, f"vs {reference}"))
+                flag = "  << REGRESSION (relative)"
+        elif not comparable and delta > threshold:
+            flag = "  (over same-machine threshold; cross-machine run)"
+        print(f"{name:<36} {b:>10.4f} {c:>10.4f} {delta:>+7.1%}"
+              f"{rel_col}{flag}")
+    for name in cand:
+        if name not in base:
+            print(f"{name:<36} {'—':>10} "
+                  f"{cand[name]['us_per_cell_tick']:>10.4f} {'new':>8}")
+    print()
+    if regressions:
+        print(f"FAIL: {len(regressions)} row(s) regressed:")
+        for name, b, c, delta, kind in regressions:
+            print(f"  {name}: {b:.4f} -> {c:.4f} us/cell-tick "
+                  f"({delta:+.1%} {kind})")
+        return 1
+    if ref:
+        print(f"OK: no shared row regressed more than {gate:.0%} raw or "
+              f"{threshold:.0%} relative to {reference!r}")
+    else:
+        print(f"OK: no shared row regressed more than {gate:.0%}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two lease-plane bench JSON files"
+    )
+    ap.add_argument("baseline", type=Path)
+    ap.add_argument("candidate", type=Path)
+    ap.add_argument(
+        "--threshold", type=float, default=0.25,
+        help="same-machine gate: fail on any shared row slower by more "
+             "than this fraction (default 0.25)",
+    )
+    ap.add_argument(
+        "--cross-machine-threshold", type=float, default=3.0,
+        help="gate when the two files' machine stamps differ "
+             "(default 3.0 = only a 4x cliff fails)",
+    )
+    ap.add_argument(
+        "--strict", action="store_true",
+        help="apply the same-machine threshold even across machines",
+    )
+    ap.add_argument(
+        "--reference", default="lease_array_scan",
+        help="row used to normalize cross-machine comparisons: each row's "
+             "ratio to it gates at --threshold even when the machine "
+             "stamps differ (default lease_array_scan)",
+    )
+    args = ap.parse_args(argv)
+    return compare(
+        args.baseline, args.candidate, args.threshold,
+        args.cross_machine_threshold, args.strict, args.reference,
+    )
+
+
+if __name__ == "__main__":
+    sys.exit(main())

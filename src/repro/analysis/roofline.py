@@ -260,3 +260,72 @@ def roofline_terms(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshShape,
         "step_time_bound_s": bound,
         "roofline_frac": (mf / (mesh.chips * PEAK_FLOPS)) / bound if bound else 0.0,
     }
+
+
+# ---------------------------------------------------------------------------
+# Lease plane (PaxosLease array engine)
+# ---------------------------------------------------------------------------
+def lease_plane_roofline(
+    n_cells: int,
+    n_acceptors: int = 5,
+    n_proposers: int = 8,
+    *,
+    delayed: bool = True,
+    window: int = 16,
+    block_n: int = 512,
+) -> dict:
+    """Analytic roofline of the fused lease-plane window kernel per tick on
+    TPU v5e (docs/perf.md walks through the numbers).
+
+    The kernel is pure int32 VPU work — no MXU — so the interesting bound
+    is memory. Two regimes:
+
+      - ``resident``: the per-tick HBM traffic of the time-resident window
+        kernel — only the streamed scenario planes move (attempt/release
+        rows and the per-tick owner/count outputs; acc_up and the [P, A]
+        link matrices are O(1) per tick), ~16 bytes/cell-tick. State never
+        leaves VMEM inside a window.
+      - ``per_tick_dispatch``: the same tick if every state plane
+        round-trips HBM (the pre-fused per-tick driver): all packed lease
+        (+ netplane) planes in AND out each tick.
+
+    The ratio is the architectural headline of the fusion: the window
+    kernel removes ~(state bytes / streamed bytes) of HBM traffic — about
+    ``(2A + 14) x 2 / 16`` for the delayed model — and one kernel launch
+    replaces T of them.
+    """
+    b = 4  # int32
+    a = n_acceptors
+    # packed planes: lease = 2x[A,N] + 2x[1,N]; netplane = 6x[A,N] + 6x[1,N]
+    state_planes = (2 * a + 2) + ((6 * a + 6) if delayed else 0)
+    streamed = 2 + 2  # attempt+release rows in, owner+count rows out
+    # cell-independent per-tick streams: acc_up [A] + the fused [P, A]
+    # link matrix (delayed model only) — O(1) in N but P-proportional
+    bcast_bytes = b * (a + (n_proposers * a if delayed else 0))
+    resident_bytes = streamed * b * n_cells + bcast_bytes
+    dispatch_bytes = (2 * state_planes + streamed) * b * n_cells + bcast_bytes
+    # VPU work: ~110 [A, N]-sized int ops per delayed tick (~25 sync)
+    ops = (110 if delayed else 25) * a * n_cells
+    vpu_int_ops_per_s = PEAK_FLOPS / 2  # int32 VPU lanes, no MXU: ~0.5x bf16
+    t_resident = resident_bytes / HBM_BW
+    t_dispatch = dispatch_bytes / HBM_BW
+    t_compute = ops / vpu_int_ops_per_s
+    # VMEM is a PER-PROGRAM footprint: each grid step holds ONE block_n-wide
+    # cell block's state plus one window of its streamed slabs, independent
+    # of n_cells
+    bn = min(block_n, n_cells)
+    vmem_bytes = (
+        state_planes * b * bn  # resident state of one cell block
+        + streamed * b * bn * window  # one window's streamed slabs
+    )
+    return {
+        "resident_hbm_bytes_per_tick": resident_bytes,
+        "dispatch_hbm_bytes_per_tick": dispatch_bytes,
+        "hbm_traffic_ratio": dispatch_bytes / resident_bytes,
+        "compute_s_per_tick": t_compute,
+        "memory_s_per_tick_resident": t_resident,
+        "memory_s_per_tick_dispatch": t_dispatch,
+        "bound": "compute" if t_compute > t_resident else "memory",
+        "vmem_bytes_at_window": vmem_bytes,
+        "cell_ticks_per_s_bound": n_cells / max(t_compute, t_resident),
+    }

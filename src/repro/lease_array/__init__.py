@@ -22,12 +22,18 @@ lost, or land after its round was abandoned. Zero-delay scenarios are
 bit-identical across the two models and both backends.
 
   scenario.py — the Scenario/TickInputs pytrees + the plane registry
-  state.py    — array layout, quarter-tick time base, (tick, proposer) ballots
+  state.py    — array layout, quarter-tick time base, (tick, proposer)
+                ballots, and the packed int32 compute format (one int per
+                (deadline, ballot) pair; see docs/perf.md)
   netplane.py — in-flight message + proposer round planes, shared tick math
-  ref.py      — pure-jnp oracles for one tick (sync + delayed)
-  kernel.py   — fused Pallas kernels (one VMEM pass per tick, both models)
-  ops.py      — jit'd dispatch (jnp | pallas interpret | pallas TPU) + padding
-  engine.py   — stateful driver: per-tick step and the lax.scan scenario scanner
+  ref.py      — pure-jnp tick bodies on the packed layout (sync + delayed)
+  kernel.py   — time-resident fused Pallas window kernels: a whole [T]
+                scenario in ONE launch, state VMEM-resident across windows
+  ops.py      — jit'd dispatch (jnp | pallas interpret | pallas TPU),
+                padding, and the fused lease_window_scan entry point
+  engine.py   — stateful driver: per-tick step, the fused (and, with >1
+                device, cell-sharded) run_trace, and the batched
+                scenario-sweep dispatch (engine.sweep)
   trace.py    — fault/timing traces + the event-sim differential referee
                 (per-link message timing pinned onto sim.network.Network)
   directory.py— shard-ownership directory on top (cluster/shards.py fast path)
@@ -35,9 +41,14 @@ bit-identical across the two models and both backends.
 See docs/scenario_api.md for the migration table from the legacy
 one-kwarg-per-fault-dimension API (kept as deprecation shims).
 """
-from .engine import LeaseArrayEngine
-from .netplane import NetPlaneState, init_netplane
-from .ops import lease_plane_step, lease_plane_step_delayed, lease_plane_tick
+from .engine import LeaseArrayEngine, SweepResult
+from .netplane import NetPlaneState, init_netplane, pack_link, pack_slot
+from .ops import (
+    lease_plane_step,
+    lease_plane_step_delayed,
+    lease_plane_tick,
+    lease_window_scan,
+)
 from .scenario import (
     PLANES,
     PlaneSpec,
@@ -46,7 +57,17 @@ from .scenario import (
     make_tick,
     register_plane,
 )
-from .state import NO_PROPOSER, LeaseArrayState, ballot_of, init_state, lease_quarters
+from .state import (
+    NO_PROPOSER,
+    LeaseArrayState,
+    PackedLeaseState,
+    ballot_of,
+    init_state,
+    lease_quarters,
+    max_pack_tick,
+    pack_state,
+    unpack_state,
+)
 from .trace import Trace, random_trace, replay_array, replay_event_sim
 
 __all__ = [
@@ -55,8 +76,10 @@ __all__ = [
     "NO_PROPOSER",
     "NetPlaneState",
     "PLANES",
+    "PackedLeaseState",
     "PlaneSpec",
     "Scenario",
+    "SweepResult",
     "TickInputs",
     "Trace",
     "ballot_of",
@@ -66,9 +89,15 @@ __all__ = [
     "lease_plane_step_delayed",
     "lease_plane_tick",
     "lease_quarters",
+    "lease_window_scan",
     "make_tick",
+    "max_pack_tick",
+    "pack_link",
+    "pack_slot",
+    "pack_state",
     "random_trace",
     "register_plane",
     "replay_array",
     "replay_event_sim",
+    "unpack_state",
 ]

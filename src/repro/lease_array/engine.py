@@ -1,39 +1,54 @@
 """LeaseArrayEngine: a stateful driver over the vectorized lease plane.
 
-Two modes:
+Three modes:
   - ``step(...)``    — advance one tick (host-driven; the directory uses it)
-  - ``run_trace``    — ``jax.lax.scan`` over a whole [T]-tick ``Scenario``
-                       in one jitted call (the bulk/benchmark path);
-                       independent planes batch further with ``jax.vmap``
-                       over ``Scenario.stack`` (see ``_scenario_scanner``'s
-                       pytree-in/pytree-out signature and
-                       tests/test_scenario.py::test_vmap_stacked_scenarios).
+  - ``run_trace``    — a whole [T]-tick ``Scenario`` in ONE dispatch (the
+                       bulk/benchmark path): the fused window scan
+                       (``ops.lease_window_scan``) runs the packed tick
+                       math under ``lax.scan`` (jnp) or inside the
+                       time-resident Pallas window kernel (pallas backends)
+  - ``sweep``        — a stacked BATCH of scenarios in one dispatch
+                       (``jax.vmap`` inside, ``shard_map`` across devices
+                       when more than one is visible), each replayed from
+                       the engine's current state with donated plane
+                       buffers; per-scenario §4 verification built in.
 
 Inputs are declarative **Scenario planes** (``scenario.py``): one pytree
 carries every fault dimension — attempts, releases, acceptor reachability,
-and asymmetric per-(proposer, acceptor) delay/drop link matrices — so new
+and asymmetric per-(proposer, acceptor) link delay/drop matrices — so new
 fault planes register into the schema instead of growing new arguments.
 The legacy per-plane kwargs still work as thin shims that build the pytree.
 
-Two network models share one scanner: the synchronous zero-delay tick
+Two network models share the machinery: the synchronous zero-delay tick
 (every round resolves in one tick) and the delayed in-flight message plane
 (``netplane.py``). A scenario (or ``step`` call) carrying nonzero delay or
 drop planes switches the engine onto the delayed model; it stays there
 (messages may be in flight) with zero-delay defaults from then on.
+
+The packed int32 layout bounds the clock: ballots must fit in
+``state.PACK_MASK`` — ``run_trace``/``step``/``sweep`` raise once a trace
+would cross ``state.max_pack_tick`` (≈ 4k ticks at P = 8; see
+docs/perf.md).
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .netplane import NetPlaneState, init_netplane
-from .ops import lease_plane_tick
+from .ops import _window_scan_impl, lease_plane_tick
 from .ref import owner_row
 from .scenario import Scenario, TickInputs, make_tick
-from .state import QUARTERS, LeaseArrayState, init_state, lease_quarters
+from .state import (
+    QUARTERS,
+    check_pack_budget,
+    init_state,
+    lease_quarters,
+)
 
 
 @functools.lru_cache(maxsize=None)
@@ -42,11 +57,12 @@ def _scenario_scanner(
 ):
     """Jitted (state, net, t0, planes) -> (state, net, owners, counts).
 
-    ONE scanner serves both network models: ``sync`` statically picks the
-    zero-delay body (net passes through untouched, delay/drop planes are
-    dead code) or the in-flight netplane body. ``planes`` is a dict pytree
-    of [T, ...] scenario planes — lax.scan slices every registered plane
-    per tick, so newly registered planes ride along with no new argument.
+    The pre-PR 4 per-tick scanner: ``lax.scan`` whose body is ONE
+    ``lease_plane_tick`` — every plane crosses the scan boundary every
+    tick. Kept as the dispatch-overhead baseline (benchmarks) and the
+    cross-check that the fused window scan (``ops.lease_window_scan``,
+    what ``run_trace`` uses) changes nothing but speed; both run the same
+    packed tick math, so they agree bit-for-bit.
     """
 
     def scan_fn(state, net, t0, planes):
@@ -67,6 +83,112 @@ def _scenario_scanner(
     return jax.jit(scan_fn)
 
 
+class SweepResult(NamedTuple):
+    """Per-scenario results of one :meth:`LeaseArrayEngine.sweep` dispatch.
+
+    ``max_owner_count`` is the §4 verdict: >1 anywhere means some tick of
+    that scenario would have produced a second simultaneous believer.
+    """
+
+    max_owner_count: np.ndarray  # [B] max per-cell owner count over T x N
+    owned_frac: np.ndarray       # [B] fraction of (tick, cell) slots owned
+    final_owners: np.ndarray     # [B, N] owner row after the last tick
+    owners: Optional[np.ndarray] = None  # [B, T, N] iff collect="owners"
+    counts: Optional[np.ndarray] = None  # [B, T, N] iff collect="owners"
+
+
+def _cell_sharding_specs(planes_keys):
+    """shard_map PartitionSpecs for a (state, net, t0, planes) call: every
+    state/output plane splits on its trailing cell axis; scenario planes
+    split iff their registered dims carry the cell axis "N" (acc_up and the
+    [T, P, A] link matrices are replicated)."""
+    from jax.sharding import PartitionSpec as P
+
+    from .scenario import PLANES
+
+    cells = P(None, "cells")
+    plane_specs = {
+        k: (P(None, "cells") if "N" in PLANES[k].dims else P())
+        for k in planes_keys
+    }
+    return (cells, cells, P(), plane_specs), (cells, cells, cells, cells)
+
+
+@functools.lru_cache(maxsize=None)
+def _trace_fn(
+    majority: int, lease_q4: int, round_q4: int, backend: str, sync: bool,
+    block_n: int, window: int, n_devices: int, planes_keys: tuple,
+):
+    """The fused scenario replay, jitted; with >1 device the cell axis is
+    shard_map-ed across a 1-D device mesh (cells are independent — the
+    tick math never reduces across N), so a trace uses every device."""
+
+    def run(state, net, t0, planes):
+        return _window_scan_impl(
+            state, net, t0, planes,
+            majority=majority, lease_q4=lease_q4, round_q4=round_q4,
+            backend=backend, sync=sync, block_n=block_n, window=window,
+        )
+
+    if n_devices > 1:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh
+
+        mesh = Mesh(np.array(jax.devices()[:n_devices]), ("cells",))
+        in_specs, out_specs = _cell_sharding_specs(planes_keys)
+        run = shard_map(
+            run, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False,
+        )
+    return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=None)
+def _sweep_fn(
+    majority: int, lease_q4: int, round_q4: int, backend: str, sync: bool,
+    block_n: int, window: int, collect: str, n_devices: int,
+):
+    """One-dispatch batched scenario replay: vmap over the stacked planes
+    (state broadcast), reductions inside the jit so a summary sweep never
+    materializes [B, T, N] outputs, shard_map over the device mesh when
+    more than one device is visible. The planes dict arrives split in two
+    so that in ``collect="owners"`` mode only the [B, T, N] attempts/
+    releases leaves are donated — exactly the buffers XLA can reuse for
+    the owners/counts cubes; a summary sweep's outputs are [B]-shaped, so
+    nothing could reuse any plane and donating would only warn."""
+
+    def one(state, net, t0, cell_planes, rest_planes):
+        _, _, owners, counts = _window_scan_impl(
+            state, net, t0, {**cell_planes, **rest_planes},
+            majority=majority, lease_q4=lease_q4, round_q4=round_q4,
+            backend=backend, sync=sync, block_n=block_n, window=window,
+        )
+        out = {
+            "max_owner_count": counts.max(),
+            "owned_frac": (owners >= 0).mean(),
+            "final_owners": owners[-1],
+        }
+        if collect == "owners":
+            out["owners"] = owners
+            out["counts"] = counts
+        return out
+
+    batched = jax.vmap(one, in_axes=(None, None, None, 0, 0))
+    if n_devices > 1:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+
+        mesh = Mesh(np.array(jax.devices()[:n_devices]), ("b",))
+        batched = shard_map(
+            batched, mesh=mesh,
+            in_specs=(P(), P(), P(), P("b"), P("b")),
+            out_specs=P("b"),
+            check_rep=False,
+        )
+    donate = (3,) if collect == "owners" else ()
+    return jax.jit(batched, donate_argnums=donate)
+
+
 class LeaseArrayEngine:
     def __init__(
         self,
@@ -77,6 +199,7 @@ class LeaseArrayEngine:
         lease_ticks: int = 3,
         round_ticks: int = 1,
         backend: str = "jnp",
+        window: int = 16,
     ) -> None:
         if n_acceptors < 1 or n_proposers < 1:
             raise ValueError("need at least one acceptor and one proposer")
@@ -89,6 +212,7 @@ class LeaseArrayEngine:
         self.round_ticks = round_ticks
         self.round_q4 = QUARTERS * int(round_ticks)
         self.backend = backend
+        self.window = int(window)
         self.state = init_state(n_cells, n_acceptors, n_proposers)
         self.net: NetPlaneState = init_netplane(n_cells, n_acceptors)
         self.t = 0
@@ -96,6 +220,10 @@ class LeaseArrayEngine:
         # flips True on the first delayed step; once messages may be in
         # flight, every later tick must run the delayed model too
         self._netplane_active = False
+
+    # -------------------------------------------------------- packing budget
+    def _check_pack_budget(self, t_end: int, max_delay: int = 0) -> None:
+        check_pack_budget(t_end, self.n_proposers, self.lease_q4, max_delay)
 
     # ------------------------------------------------------------ one tick
     def step(
@@ -148,21 +276,55 @@ class LeaseArrayEngine:
             )
             if np.asarray(tick.delay).any() or np.asarray(tick.drop).any():
                 self._netplane_active = True
+        self._check_pack_budget(
+            self.t + 1, int(np.asarray(tick.delay).max(initial=0))
+        )
         self.state, self.net, self.last_owner_count = lease_plane_tick(
             self.state, self.net, self.t, tick,
             majority=self.majority, lease_q4=self.lease_q4,
             round_q4=self.round_q4, backend=self.backend,
-            sync=not self._netplane_active,
+            sync=not self._netplane_active, window=self.window,
         )
         self.t += 1
         return np.asarray(owner_row(self.state))
+
+    # ---------------------------------------------------------- validation
+    def _coerce_scenario(self, scenario, releases, acc_up, delay, drop):
+        if not isinstance(scenario, Scenario):
+            scenario = Scenario.build(
+                n_cells=self.n_cells, n_acceptors=self.n_acceptors,
+                n_proposers=self.n_proposers,
+                attempts=scenario, releases=releases, acc_up=acc_up,
+                delay=delay, drop=drop,
+            )
+        else:
+            scenario.validate_for(
+                n_cells=self.n_cells, n_acceptors=self.n_acceptors,
+                n_proposers=self.n_proposers,
+            )
+        return scenario
+
+    def _pick_model(self, netplane, delayed: bool, *, mutate: bool = True) -> bool:
+        """Returns sync=True/False. With ``mutate`` the engine flips onto
+        the netplane permanently (run_trace/step); a read-only caller
+        (sweep) passes ``mutate=False`` and the engine is left untouched."""
+        if netplane is False and (delayed or self._netplane_active):
+            raise ValueError(
+                "netplane=False but the scenario carries nonzero delay/drop "
+                "planes (or messages are already in flight); the synchronous "
+                "model cannot honor them"
+            )
+        wants_net = bool(netplane) or (netplane is None and delayed)
+        if mutate and wants_net:
+            self._netplane_active = True
+        return not (wants_net or self._netplane_active)
 
     # ------------------------------------------------------------ bulk path
     def run_trace(
         self, scenario=None, releases=None, acc_up=None, delay=None,
         drop=None, *, netplane=None, attempts=None,
     ):
-        """Scan a [T]-tick :class:`Scenario` in one jitted call.
+        """Replay a [T]-tick :class:`Scenario` in one fused dispatch.
 
         The first argument is a ``Scenario`` (``Scenario.build(...)``); the
         legacy form — a [T, N] attempts array (positionally or as the
@@ -187,39 +349,124 @@ class LeaseArrayEngine:
                     "not both"
                 )
             scenario = attempts  # legacy keyword call sites
-        if not isinstance(scenario, Scenario):
-            scenario = Scenario.build(
-                n_cells=self.n_cells, n_acceptors=self.n_acceptors,
-                n_proposers=self.n_proposers,
-                attempts=scenario, releases=releases, acc_up=acc_up,
-                delay=delay, drop=drop,
-            )
-        else:
-            scenario.validate_for(
-                n_cells=self.n_cells, n_acceptors=self.n_acceptors,
-                n_proposers=self.n_proposers,
-            )
+        scenario = self._coerce_scenario(
+            scenario, releases, acc_up, delay, drop
+        )
         T = scenario.n_ticks
-        if netplane is False and (scenario.delayed or self._netplane_active):
-            raise ValueError(
-                "netplane=False but the scenario carries nonzero delay/drop "
-                "planes (or messages are already in flight); the synchronous "
-                "model cannot honor them"
-            )
-        if netplane or (netplane is None and scenario.delayed):
-            self._netplane_active = True
-        scanner = _scenario_scanner(
-            self.majority, self.lease_q4, self.round_q4, self.backend,
-            not self._netplane_active,
+        sync = self._pick_model(netplane, scenario.delayed)
+        if T == 0:
+            empty = np.zeros((0, self.n_cells), np.int32)
+            return empty, empty.copy()
+        self._check_pack_budget(
+            self.t + T, int(np.asarray(scenario.delay).max(initial=0))
         )
         planes = {k: jnp.asarray(v) for k, v in scenario.planes.items()}
-        self.state, self.net, owners, counts = scanner(
+        n_dev = len(jax.devices())
+        if n_dev > 1 and self.n_cells % n_dev != 0:
+            n_dev = 1  # uneven cell split: stay on one device
+        fn = _trace_fn(
+            self.majority, self.lease_q4, self.round_q4, self.backend, sync,
+            512, self.window, n_dev, tuple(planes),
+        )
+        self.state, self.net, owners, counts = fn(
             self.state, self.net, jnp.int32(self.t), planes
         )
         self.t += int(T)
-        if T > 0:
-            self.last_owner_count = counts[-1]
+        self.last_owner_count = counts[-1]
         return np.asarray(owners), np.asarray(counts)
+
+    # ----------------------------------------------------------- the sweep
+    def sweep(
+        self, scenarios, *, netplane=None, collect: str = "summary",
+        verify: bool = True, backend: Optional[str] = None,
+    ) -> SweepResult:
+        """Replay a BATCH of scenarios in ONE dispatch — "replay 10k fault
+        scenarios" as a single call.
+
+        ``scenarios`` is a list of same-geometry same-length
+        :class:`Scenario`\\ s or an already-stacked ``Scenario.stack``
+        pytree ([B, T, ...] planes). Every scenario starts from THIS
+        engine's current state/tick; the engine itself is NOT advanced
+        (a sweep is a fan-out query, not a state transition). The batch is
+        ``jax.vmap``-ed inside one jit (in ``collect="owners"`` mode the
+        stacked planes are donated — their buffers become the output cubes);
+        with more than one JAX device visible it is additionally
+        ``shard_map``-ed across a 1-D device mesh over the batch axis
+        (B must then divide by the device count).
+
+        ``collect="summary"`` (default) reduces inside the dispatch — only
+        [B]-shaped verdicts and the [B, N] final owner rows come back, so
+        10k-scenario sweeps never materialize [B, T, N] on the host;
+        ``collect="owners"`` also returns the full owners/counts cubes.
+        With ``verify=True`` a per-scenario §4 violation (max owner count
+        > 1) raises immediately.
+        """
+        if collect not in ("summary", "owners"):
+            raise ValueError(f"unknown collect mode {collect!r}")
+        if isinstance(scenarios, (list, tuple)):
+            if not scenarios:
+                raise ValueError("sweep needs at least one scenario")
+            for sc in scenarios:
+                sc.validate_for(
+                    n_cells=self.n_cells, n_acceptors=self.n_acceptors,
+                    n_proposers=self.n_proposers,
+                )
+            stacked = Scenario.stack(scenarios)
+        else:
+            stacked = scenarios
+        # one host read per fault plane (the delay plane feeds both the
+        # model choice and the pack-budget check; don't pull it twice)
+        dmax = int(np.asarray(stacked.planes["delay"]).max(initial=0))
+        delayed = dmax > 0 or bool(np.asarray(stacked.planes["drop"]).any())
+        # in collect="owners" mode the [B, T, N] attempts/releases planes
+        # are DONATED to the dispatch (XLA reuses their buffers for the
+        # output cubes); copy those leaves when they are already device
+        # arrays so a caller can reuse its stacked Scenario
+        donating = collect == "owners"
+        cell_planes, rest_planes = {}, {}
+        for k, v in stacked.planes.items():
+            arr = jnp.asarray(v)
+            if k in ("attempts", "releases"):
+                cell_planes[k] = (
+                    arr.copy() if donating and arr is v else arr
+                )
+            else:
+                rest_planes[k] = arr
+        B, T = cell_planes["attempts"].shape[:2]
+        if T == 0:
+            raise ValueError("sweep scenarios must have at least one tick")
+        # a sweep is read-only: pick the model without flipping the engine
+        sync = self._pick_model(netplane, delayed, mutate=False)
+        self._check_pack_budget(self.t + T, dmax)
+        n_dev = len(jax.devices())
+        if n_dev > 1 and B % n_dev != 0:
+            n_dev = 1  # uneven batch: fall back to single-device vmap
+        fn = _sweep_fn(
+            self.majority, self.lease_q4, self.round_q4,
+            backend or self.backend, sync, 512, self.window, collect, n_dev,
+        )
+        out = fn(
+            self.state, self.net, jnp.int32(self.t), cell_planes,
+            rest_planes,
+        )
+        result = SweepResult(
+            max_owner_count=np.asarray(out["max_owner_count"]),
+            owned_frac=np.asarray(out["owned_frac"]),
+            final_owners=np.asarray(out["final_owners"]),
+            owners=(
+                np.asarray(out["owners"]) if collect == "owners" else None
+            ),
+            counts=(
+                np.asarray(out["counts"]) if collect == "owners" else None
+            ),
+        )
+        if verify and (result.max_owner_count > 1).any():
+            bad = np.flatnonzero(result.max_owner_count > 1)
+            raise AssertionError(
+                f"§4 at-most-one-owner violated in scenario(s) "
+                f"{bad[:8].tolist()} of the sweep"
+            )
+        return result
 
     # ------------------------------------------------------------- queries
     def owners(self) -> np.ndarray:

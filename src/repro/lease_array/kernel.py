@@ -1,22 +1,37 @@
-"""Pallas TPU kernels for the lease-plane tick: fused expiry + release +
-prepare/quorum-count + propose/state-update in a single VMEM pass.
+"""Time-resident fused Pallas kernels for the lease plane: the WHOLE tick
+loop lives inside the kernel, not just one tick.
 
-Two kernels share the layout: the synchronous zero-delay tick
-(`lease_tick_pallas`, PR 1) and the delayed in-flight-message tick
-(`lease_tick_delayed_pallas`), whose body is `netplane.delayed_tick_math`
-— the same function the jnp oracle runs, so kernel and oracle are
-bit-identical by construction.
+Earlier revisions dispatched one `pallas_call` per tick, round-tripping
+every state plane through HBM ``T`` times per scenario and paying a kernel
+launch per tick (the dispatch-dominated `lease_array_kernel_step` bench
+row). The window kernels here replay a full ``[T, ...]`` scenario with ONE
+launch: the grid is ``(cell_blocks, windows)`` with the window axis minor,
+so each cell block's packed state stays **resident in VMEM** across the
+whole scenario (the state BlockSpecs ignore the window index — Pallas
+revisits the same block, no HBM writeback until the block changes), while
+the per-tick scenario planes stream in one ``window``-tick slab at a time
+and a `jax.lax.fori_loop` walks the ticks inside.
 
-Grid: (n_cell_blocks,) — each program owns a ``block_n``-wide column slice of
-every state array. The acceptor (A) and proposer (P) axes ride on sublanes,
-so quorum counting (`sum over A`) and owner lookups (`any over P`) are
-sublane reductions; the cell axis N is the 128-lane axis. All state is
-int32, all updates are `jnp.where` selects — pure VPU work, no MXU.
+The tick bodies are the SAME functions the jnp oracle scans
+(`ref.sync_tick_math`, `netplane.delayed_tick_math`), so kernel and oracle
+are bit-identical by construction — including across window boundaries: a
+message sent in window ``w`` with a deliver-at in window ``w+1`` simply
+stays in its packed in-flight slot (part of the resident state) until the
+later window's tick loop finds it due. Per-leg link delays are resolved
+block-locally (`netplane.legs_select`): the tiny ``[P, A]`` link matrix of
+the current tick is selected row-by-row in a compile-time P loop, so no
+gather indices (and no flattened ``[P*A, N]`` planes) ever touch HBM.
 
-The tick scalar lives in SMEM (it is traced — `lax.scan` drives it); the
-protocol constants (majority, lease length, round horizon, P) are
-compile-time closure constants, mirroring how kernels/flash_attention bakes
-its block geometry.
+Layout: the acceptor (A) and proposer-bitmask axes ride on sublanes, the
+cell axis N on the 128-wide lane axis. All state is int32, all updates are
+`jnp.where` selects — pure VPU work, no MXU. ``backend="pallas_tpu"``
+compiles for real TPUs (mind the sublane padding notes in docs/perf.md);
+``backend="pallas"`` runs the same kernel in interpret mode anywhere.
+
+The scan scalars (t0, total ticks) live in SMEM; protocol constants
+(majority, lease length, round horizon, P, window) are compile-time
+closure constants, mirroring how kernels/flash_attention bakes its block
+geometry.
 """
 from __future__ import annotations
 
@@ -34,248 +49,265 @@ except Exception:  # pragma: no cover
     pltpu = None
     _SMEM = None
 
-from .netplane import NetPlaneState, delayed_tick_math
-from .ref import flat_links
-from .state import NO_PROPOSER, QUARTERS, LeaseArrayState
+from .netplane import NetPlaneState, delayed_tick_math, legs_select
+from .ref import sync_tick_math
+from .state import PackedLeaseState
 
-N_LEASE = len(LeaseArrayState._fields)
+N_LEASE = len(PackedLeaseState._fields)
 N_NET = len(NetPlaneState._fields)
 
+#: index of own_id inside PackedLeaseState — the per-tick owner row
+_OWN_ID = PackedLeaseState._fields.index("owner_id")
 
-def _lease_tick_kernel(
-    t_ref,            # (1, 1) int32 in SMEM — current tick
-    promised_ref,     # (A, bn)
-    acc_ballot_ref,   # (A, bn)
-    acc_prop_ref,     # (A, bn)
-    acc_expiry_ref,   # (A, bn)
-    own_mask_ref,     # (P, bn)
-    own_expiry_ref,   # (P, bn)
-    own_ballot_ref,   # (P, bn)
-    attempt_ref,      # (1, bn)
-    release_ref,      # (1, bn)
-    up_ref,           # (A, bn) int32 0/1
-    # outputs
-    o_promised_ref, o_acc_ballot_ref, o_acc_prop_ref, o_acc_expiry_ref,
-    o_own_mask_ref, o_own_expiry_ref, o_own_ballot_ref, o_count_ref,
-    *, majority: int, lease_q4: int, n_proposers: int,
+# BlockSpecs for the packed lease plane ([A, bn] x2 then [1, bn] x2)
+_LEASE_ROWS = (None, None, 1, 1)  # None -> the plane keeps its A rows
+# NetPlaneState: 6 [A, bn] slot planes then 6 [1, bn] round rows
+_NET_ROWS = (None,) * 6 + (1,) * 6
+
+
+def _scalar_spec(n: int):
+    """Spec for the [n] int32 scan-scalar vector (SMEM on real TPUs)."""
+    if _SMEM is not None:
+        return pl.BlockSpec(memory_space=_SMEM)
+    return pl.BlockSpec((n,), lambda i, w: (0,))
+
+
+def _state_specs(rows, n_acceptors: int, block_n: int):
+    """One resident-block spec per state plane: index map ignores the
+    window axis, so the block stays in VMEM across all windows."""
+    return [
+        pl.BlockSpec(
+            ((n_acceptors if r is None else r), block_n), lambda i, w: (0, i)
+        )
+        for r in rows
+    ]
+
+
+def _cell_plane_spec(tw: int, rows: int, block_n: int):
+    """One streamed [W, tw, rows, block_n] scenario-plane slab per window
+    (the leading W axis is squeezed away inside the kernel)."""
+    return pl.BlockSpec((None, tw, rows, block_n), lambda i, w: (w, 0, 0, i))
+
+
+def _bcast_plane_spec(tw: int, rows: int, cols: int):
+    """A cell-independent plane (acc_up columns, link matrices): every cell
+    block streams the same [tw, rows, cols] slab."""
+    return pl.BlockSpec((None, tw, rows, cols), lambda i, w: (w, 0, 0, 0))
+
+
+def _init_resident(w, in_refs, out_refs):
+    """At the first window, seed the resident state blocks from the inputs
+    (afterwards the out blocks ARE the carried state)."""
+
+    @pl.when(w == 0)
+    def _():
+        for o, i in zip(out_refs, in_refs):
+            o[...] = i[...]
+
+
+def _window_bounds(sc_ref, tw: int):
+    w = pl.program_id(1)
+    base = w * tw
+    n_ticks = jnp.minimum(tw, sc_ref[1] - base)
+    return sc_ref[0] + base, n_ticks
+
+
+def _sync_window_kernel(
+    sc_ref,  # [2] int32 (t0, T) in SMEM
+    *refs,
+    majority: int, lease_q4: int, n_proposers: int, tw: int,
 ):
-    P = n_proposers
-    t = t_ref[0, 0]
-    t4 = QUARTERS * t
-    shape_p = own_mask_ref.shape
-    p_ids = jax.lax.broadcasted_iota(jnp.int32, shape_p, 0)   # [P, bn]
-    up = up_ref[...] > 0                                      # [A, bn]
+    ins, outs = refs[: N_LEASE + 3], refs[N_LEASE + 3:]
+    att_ref, rel_ref, up_ref = ins[N_LEASE:]
+    st_refs = outs[:N_LEASE]
+    own_ref, cnt_ref = outs[N_LEASE], outs[N_LEASE + 1]
+    _init_resident(pl.program_id(1), ins[:N_LEASE], st_refs)
+    t_base, n_ticks = _window_bounds(sc_ref, tw)
 
-    # -- 1. expiry
-    acc_live = (acc_ballot_ref[...] > 0) & (acc_expiry_ref[...] > t4)
-    acc_ballot = jnp.where(acc_live, acc_ballot_ref[...], 0)
-    acc_prop = jnp.where(acc_live, acc_prop_ref[...], NO_PROPOSER)
-    acc_expiry = jnp.where(acc_live, acc_expiry_ref[...], 0)
-    own_live = (own_mask_ref[...] > 0) & (own_expiry_ref[...] > t4)
-    own_mask = own_live.astype(jnp.int32)
-    own_expiry = jnp.where(own_live, own_expiry_ref[...], 0)
-    own_ballot = jnp.where(own_live, own_ballot_ref[...], 0)
+    def body(tau, lease):
+        lease, count = sync_tick_math(
+            lease, t_base + tau,
+            att_ref[tau], rel_ref[tau], up_ref[tau],
+            majority=majority, lease_q4=lease_q4, n_proposers=n_proposers,
+        )
+        own_ref[tau] = lease[_OWN_ID]
+        cnt_ref[tau] = count
+        return lease
 
-    # -- 2. release
-    rel = release_ref[...]                                    # [1, bn]
-    rel_owner = (p_ids == rel) & (own_mask > 0)               # [P, bn]
-    rel_ballot = jnp.sum(jnp.where(rel_owner, own_ballot, 0), axis=0, keepdims=True)
-    own_mask = jnp.where(rel_owner, 0, own_mask)
-    discard = up & (rel_ballot > 0) & (acc_ballot == rel_ballot)
-    acc_ballot = jnp.where(discard, 0, acc_ballot)
-    acc_prop = jnp.where(discard, NO_PROPOSER, acc_prop)
-    acc_expiry = jnp.where(discard, 0, acc_expiry)
-
-    # -- 3. prepare + quorum count
-    att = attempt_ref[...]                                    # [1, bn]
-    has_att = att >= 0
-    ballot = jnp.where(has_att, (t + 1) * P + att, 0)
-    att_owns = jnp.sum(
-        jnp.where((p_ids == att) & (own_mask > 0), 1, 0), axis=0, keepdims=True
-    ) > 0
-    grant = up & has_att & (ballot >= promised_ref[...])
-    is_open = grant & ((acc_ballot == 0) | ((acc_prop == att) & att_owns))
-    opens = jnp.sum(is_open.astype(jnp.int32), axis=0, keepdims=True)
-    won = opens >= majority
-    promised = jnp.where(grant, ballot, promised_ref[...])
-
-    # -- 4. propose + proposer update
-    accept = grant & won
-    acc_ballot = jnp.where(accept, ballot, acc_ballot)
-    acc_prop = jnp.where(accept, att, acc_prop)
-    acc_expiry = jnp.where(accept, t4 + lease_q4, acc_expiry)
-    new_owner = (p_ids == att) & won
-    own_mask = jnp.where(new_owner, 1, own_mask)
-    own_expiry = jnp.where(new_owner, t4 + lease_q4, own_expiry)
-    own_ballot = jnp.where(new_owner, ballot, own_ballot)
-
-    o_promised_ref[...] = promised
-    o_acc_ballot_ref[...] = acc_ballot
-    o_acc_prop_ref[...] = acc_prop
-    o_acc_expiry_ref[...] = acc_expiry
-    o_own_mask_ref[...] = own_mask
-    o_own_expiry_ref[...] = own_expiry
-    o_own_ballot_ref[...] = own_ballot
-    o_count_ref[...] = jnp.sum(own_mask, axis=0, keepdims=True)
-
-
-def lease_tick_pallas(
-    state: LeaseArrayState,
-    t,         # scalar int32
-    attempt,   # [N] int32
-    release,   # [N] int32
-    acc_up,    # [A] bool/int32
-    *,
-    majority: int,
-    lease_q4: int,
-    block_n: int = 512,
-    interpret: bool = True,  # False on real TPUs
-) -> tuple[LeaseArrayState, jax.Array]:
-    """One fused tick over all N cells; N must be a multiple of ``block_n``
-    (ops.py pads). Returns (new_state, owner_count[N])."""
-    A, N = state.highest_promised.shape
-    P = state.owner_mask.shape[0]
-    block_n = min(block_n, N)
-    assert N % block_n == 0, "pad the cell axis to a block multiple (ops.py)"
-    grid = (N // block_n,)
-
-    kernel = functools.partial(
-        _lease_tick_kernel, majority=majority, lease_q4=lease_q4, n_proposers=P,
+    lease = jax.lax.fori_loop(
+        0, n_ticks, body, tuple(r[...] for r in st_refs)
     )
-    arow = lambda r: jnp.asarray(r, jnp.int32).reshape(1, N)
-    up2d = jnp.broadcast_to(
-        jnp.asarray(acc_up).astype(jnp.int32)[:, None], (A, N)
-    )
-    t2d = jnp.asarray(t, jnp.int32).reshape(1, 1)
-
-    spec_a = pl.BlockSpec((A, block_n), lambda i: (0, i))
-    spec_p = pl.BlockSpec((P, block_n), lambda i: (0, i))
-    spec_r = pl.BlockSpec((1, block_n), lambda i: (0, i))
-    spec_t = (
-        pl.BlockSpec(memory_space=_SMEM)
-        if _SMEM is not None
-        else pl.BlockSpec((1, 1), lambda i: (0, 0))
-    )
-    sds = jax.ShapeDtypeStruct
-    outs = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            spec_t,
-            spec_a, spec_a, spec_a, spec_a,
-            spec_p, spec_p, spec_p,
-            spec_r, spec_r, spec_a,
-        ],
-        out_specs=[
-            spec_a, spec_a, spec_a, spec_a,
-            spec_p, spec_p, spec_p,
-            spec_r,
-        ],
-        out_shape=[
-            sds((A, N), jnp.int32), sds((A, N), jnp.int32),
-            sds((A, N), jnp.int32), sds((A, N), jnp.int32),
-            sds((P, N), jnp.int32), sds((P, N), jnp.int32),
-            sds((P, N), jnp.int32), sds((1, N), jnp.int32),
-        ],
-        interpret=interpret,
-    )(
-        t2d,
-        state.highest_promised, state.accepted_ballot,
-        state.accepted_proposer, state.lease_expiry,
-        state.owner_mask, state.owner_expiry, state.owner_ballot,
-        arow(attempt), arow(release), up2d,
-    )
-    new_state = LeaseArrayState(*outs[:7])
-    return new_state, outs[7].reshape(N)
-
-
-def _delayed_tick_kernel(t_ref, *refs, majority, lease_q4, round_q4):
-    """Fused delayed tick: loads every block, runs the shared netplane math,
-    stores every block. Inputs: lease + net planes + 5 per-tick blocks
-    (attempt/release rows, up columns, [P*A] link delay/drop matrices);
-    outputs: lease + net planes + count."""
-    n_in = N_LEASE + N_NET + 5
-    ins, outs = refs[:n_in], refs[n_in:]
-    lease = tuple(r[...] for r in ins[:N_LEASE])
-    net = tuple(r[...] for r in ins[N_LEASE:N_LEASE + N_NET])
-    attempt, release, up, delay, drop = (r[...] for r in ins[N_LEASE + N_NET:])
-    new_lease, new_net, count = delayed_tick_math(
-        lease, net, t_ref[0, 0], attempt, release, up, delay, drop,
-        majority=majority, lease_q4=lease_q4, round_q4=round_q4,
-    )
-    for r, v in zip(outs, (*new_lease, *new_net, count)):
+    for r, v in zip(st_refs, lease):
         r[...] = v
 
 
-def lease_tick_delayed_pallas(
-    state: LeaseArrayState,
-    net: NetPlaneState,
-    t,         # scalar int32
-    attempt,   # [N] int32
-    release,   # [N] int32
-    acc_up,    # [A] bool/int32
-    delay,     # [P, A] (or legacy [A]) int32 link delays (ticks)
-    drop,      # [P, A] (or legacy [A]) bool/int32 link drop masks
+def _delayed_window_kernel(
+    sc_ref,
+    *refs,
+    majority: int, lease_q4: int, round_q4: int, n_proposers: int, tw: int,
+):
+    n_state = N_LEASE + N_NET
+    ins, outs = refs[: n_state + 4], refs[n_state + 4:]
+    att_ref, rel_ref, up_ref, link_ref = ins[n_state:]
+    st_refs = outs[:n_state]
+    own_ref, cnt_ref = outs[n_state], outs[n_state + 1]
+    _init_resident(pl.program_id(1), ins[:n_state], st_refs)
+    t_base, n_ticks = _window_bounds(sc_ref, tw)
+
+    def body(tau, carry):
+        lease, net = carry[:N_LEASE], carry[N_LEASE:]
+        lease, net, count = delayed_tick_math(
+            lease, net, t_base + tau,
+            att_ref[tau], rel_ref[tau], up_ref[tau], link_ref[tau],
+            majority=majority, lease_q4=lease_q4, round_q4=round_q4,
+            n_proposers=n_proposers, legs=legs_select,
+        )
+        own_ref[tau] = lease[_OWN_ID]
+        cnt_ref[tau] = count
+        return (*lease, *net)
+
+    carry = jax.lax.fori_loop(
+        0, n_ticks, body, tuple(r[...] for r in st_refs)
+    )
+    for r, v in zip(st_refs, carry):
+        r[...] = v
+
+
+def _windowed(plane, n_windows: int, tw: int, rows: int, n: int):
+    """[T, rows(, n)] plane -> [W, tw, rows, n] slabs (zero tail padding —
+    the in-kernel dynamic trip count never reads the pad)."""
+    t = plane.shape[0]
+    plane = plane.reshape(t, rows, n)
+    pad = n_windows * tw - t
+    if pad:
+        plane = jnp.pad(plane, ((0, pad), (0, 0), (0, 0)))
+    return plane.reshape(n_windows, tw, rows, n)
+
+
+def lease_window_sync_pallas(
+    packed: PackedLeaseState,
+    t0,          # scalar int32 first tick
+    attempts,    # [T, N] int32
+    releases,    # [T, N] int32
+    acc_up,      # [T, A] bool/int32
     *,
     majority: int,
     lease_q4: int,
-    round_q4: int,
+    n_proposers: int,
     block_n: int = 512,
+    window: int = 16,
     interpret: bool = True,  # False on real TPUs
-) -> tuple[LeaseArrayState, NetPlaneState, jax.Array]:
-    """One fused delayed tick over all N cells; N must be a multiple of
-    ``block_n`` (ops.py pads). Returns (new_state, new_net, owner_count[N])."""
-    A, N = state.highest_promised.shape
-    P = state.owner_mask.shape[0]
+) -> tuple[PackedLeaseState, jax.Array, jax.Array]:
+    """Replay T synchronous ticks in ONE kernel launch; N must be a
+    multiple of ``block_n`` (ops.py pads). Returns
+    (packed_state', owners [T, N], counts [T, N])."""
+    A, N = packed.promised.shape
+    T = attempts.shape[0]
     block_n = min(block_n, N)
     assert N % block_n == 0, "pad the cell axis to a block multiple (ops.py)"
-    grid = (N // block_n,)
+    tw = max(1, min(window, T))
+    n_windows = -(-T // tw)
+    grid = (N // block_n, n_windows)
 
     kernel = functools.partial(
-        _delayed_tick_kernel,
-        majority=majority, lease_q4=lease_q4, round_q4=round_q4,
+        _sync_window_kernel,
+        majority=majority, lease_q4=lease_q4, n_proposers=n_proposers, tw=tw,
     )
-    arow = lambda r: jnp.asarray(r, jnp.int32).reshape(1, N)
-    acol = lambda c: jnp.broadcast_to(
-        jnp.asarray(c).astype(jnp.int32)[:, None], (A, N)
+    state_specs = _state_specs(_LEASE_ROWS, A, block_n)
+    row_plane = lambda p: _windowed(
+        jnp.asarray(p, jnp.int32), n_windows, tw, 1, N
     )
-    t2d = jnp.asarray(t, jnp.int32).reshape(1, 1)
-
-    spec_a = pl.BlockSpec((A, block_n), lambda i: (0, i))
-    spec_p = pl.BlockSpec((P, block_n), lambda i: (0, i))
-    spec_r = pl.BlockSpec((1, block_n), lambda i: (0, i))
-    spec_pa = pl.BlockSpec((P * A, block_n), lambda i: (0, i))
-    spec_t = (
-        pl.BlockSpec(memory_space=_SMEM)
-        if _SMEM is not None
-        else pl.BlockSpec((1, 1), lambda i: (0, 0))
-    )
-    lease_specs = [spec_a] * 4 + [spec_p] * 3
-    net_specs = [spec_a] * 11 + [spec_r] * 4 + [spec_a] * 2
     sds = jax.ShapeDtypeStruct
-    lease_shapes = [sds((A, N), jnp.int32)] * 4 + [sds((P, N), jnp.int32)] * 3
-    net_shapes = (
-        [sds((A, N), jnp.int32)] * 11
-        + [sds((1, N), jnp.int32)] * 4
-        + [sds((A, N), jnp.int32)] * 2
-    )
+    state_shapes = [sds(a.shape, jnp.int32) for a in packed]
     outs = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=(
-            [spec_t] + lease_specs + net_specs
-            + [spec_r] * 2 + [spec_a] + [spec_pa] * 2
+            [_scalar_spec(2)]
+            + state_specs
+            + [_cell_plane_spec(tw, 1, block_n)] * 2
+            + [_bcast_plane_spec(tw, A, 1)]
         ),
-        out_specs=lease_specs + net_specs + [spec_r],
-        out_shape=lease_shapes + net_shapes + [sds((1, N), jnp.int32)],
+        out_specs=state_specs + [_cell_plane_spec(tw, 1, block_n)] * 2,
+        out_shape=state_shapes + [sds((n_windows, tw, 1, N), jnp.int32)] * 2,
         interpret=interpret,
     )(
-        t2d,
-        *state,
-        *net,
-        arow(attempt), arow(release), acol(acc_up),
-        flat_links(delay, P, A, N), flat_links(drop, P, A, N),
+        jnp.stack([jnp.asarray(t0, jnp.int32), jnp.int32(T)]),
+        *packed,
+        row_plane(attempts), row_plane(releases),
+        _windowed(
+            jnp.asarray(acc_up).astype(jnp.int32), n_windows, tw, A, 1
+        ),
     )
-    new_state = LeaseArrayState(*outs[:N_LEASE])
-    new_net = NetPlaneState(*outs[N_LEASE:N_LEASE + N_NET])
-    return new_state, new_net, outs[-1].reshape(N)
+    new_packed = PackedLeaseState(*outs[:N_LEASE])
+    owners = outs[N_LEASE].reshape(n_windows * tw, N)[:T]
+    counts = outs[N_LEASE + 1].reshape(n_windows * tw, N)[:T]
+    return new_packed, owners, counts
+
+
+def lease_window_delayed_pallas(
+    packed: PackedLeaseState,
+    net: NetPlaneState,
+    t0,          # scalar int32 first tick
+    attempts,    # [T, N] int32
+    releases,    # [T, N] int32
+    acc_up,      # [T, A] bool/int32
+    link,        # [T, P, A] int32 fused link matrices (netplane.pack_link)
+    *,
+    majority: int,
+    lease_q4: int,
+    round_q4: int,
+    n_proposers: int,
+    block_n: int = 512,
+    window: int = 16,
+    interpret: bool = True,  # False on real TPUs
+) -> tuple[PackedLeaseState, NetPlaneState, jax.Array, jax.Array]:
+    """Replay T delayed-model ticks in ONE kernel launch (state AND the
+    in-flight netplane stay VMEM-resident across windows). Returns
+    (packed_state', net', owners [T, N], counts [T, N])."""
+    A, N = packed.promised.shape
+    P = n_proposers
+    T = attempts.shape[0]
+    block_n = min(block_n, N)
+    assert N % block_n == 0, "pad the cell axis to a block multiple (ops.py)"
+    tw = max(1, min(window, T))
+    n_windows = -(-T // tw)
+    grid = (N // block_n, n_windows)
+
+    kernel = functools.partial(
+        _delayed_window_kernel,
+        majority=majority, lease_q4=lease_q4, round_q4=round_q4,
+        n_proposers=P, tw=tw,
+    )
+    state_specs = _state_specs(_LEASE_ROWS + _NET_ROWS, A, block_n)
+    row_plane = lambda p: _windowed(
+        jnp.asarray(p, jnp.int32), n_windows, tw, 1, N
+    )
+    sds = jax.ShapeDtypeStruct
+    state_shapes = [sds(a.shape, jnp.int32) for a in (*packed, *net)]
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=(
+            [_scalar_spec(2)]
+            + state_specs
+            + [_cell_plane_spec(tw, 1, block_n)] * 2
+            + [_bcast_plane_spec(tw, A, 1), _bcast_plane_spec(tw, P, A)]
+        ),
+        out_specs=state_specs + [_cell_plane_spec(tw, 1, block_n)] * 2,
+        out_shape=state_shapes + [sds((n_windows, tw, 1, N), jnp.int32)] * 2,
+        interpret=interpret,
+    )(
+        jnp.stack([jnp.asarray(t0, jnp.int32), jnp.int32(T)]),
+        *packed,
+        *net,
+        row_plane(attempts), row_plane(releases),
+        _windowed(jnp.asarray(acc_up).astype(jnp.int32), n_windows, tw, A, 1),
+        _windowed(jnp.asarray(link, jnp.int32), n_windows, tw, P, A),
+    )
+    n_state = N_LEASE + N_NET
+    new_packed = PackedLeaseState(*outs[:N_LEASE])
+    new_net = NetPlaneState(*outs[N_LEASE:n_state])
+    owners = outs[n_state].reshape(n_windows * tw, N)[:T]
+    counts = outs[n_state + 1].reshape(n_windows * tw, N)[:T]
+    return new_packed, new_net, owners, counts

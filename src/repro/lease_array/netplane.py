@@ -7,17 +7,21 @@ whole prepare/propose round in one zero-delay instant, so none of those
 behaviors exist at array scale. This module adds them as *dense state*:
 
   - five in-flight planes, one per protocol phase plus §7 releases
-    (``prepare_req / prepare_resp / propose_req / propose_resp / rel``),
-    each a ``[A, N]`` slot array carrying the message's ballot and its delivery
-    quarter-tick (ballot 0 = empty slot). A slot holds at most one message
-    per (acceptor, cell) — the ``random_trace`` spacing construction
+    (``prepare / prepare-response / propose / propose-response / rel``),
+    each a ``[A, N]`` slot array. A slot packs the message's ballot and its
+    delivery quarter-tick into ONE int32 — ``deliver_q4 << PACK_SHIFT |
+    ballot`` (0 = empty slot) — so "is this slot due at t?" is two compares
+    on one plane (``0 < slot < (t4+1) << PACK_SHIFT``) and a delivery
+    clears it with a single select. A slot holds at most one message per
+    (acceptor, cell) — the ``random_trace`` spacing construction
     guarantees live messages never collide (see ``trace.py``);
-  - a proposer *round* plane: open ballot, phase (preparing/proposing),
-    the quarter-tick the proposer's own lease timer will expire (started
-    when a majority of opens is in hand — the §4 ordering), a
-    timeout-and-abandon deadline, and per-acceptor response masks so
+  - a proposer *round* plane, all ``[1, N]`` rows: open ballot, phase
+    (preparing/proposing), the quarter-tick the proposer's own lease timer
+    will expire (started when a majority of opens is in hand — the §4
+    ordering), a timeout-and-abandon deadline, and per-acceptor response
+    *bitmasks* (bit ``a`` set = acceptor ``a``'s vote counted) so
     duplicated deliveries can never double-count a quorum (the event
-    engine's ``set``-of-acceptors bookkeeping, vectorized).
+    engine's ``set``-of-acceptors bookkeeping, vectorized into one int).
 
 Per tick, messages *sent* at tick ``t`` on the link between proposer ``p``
 and acceptor ``a`` — request or response, either direction — take
@@ -25,19 +29,22 @@ and acceptor ``a`` — request or response, either direction — take
 per-(proposer, acceptor) link matrices (a straggler replica, a lossy rack
 uplink, a slow cross-zone pair), mirroring a deterministic per-message
 delay policy pinned onto the event-driven ``sim.network.Network`` (see
-``trace.replay_event_sim``). The link matrices arrive flattened as
-``[P*A, bn]`` blocks (row ``p*A + a``); each send leg gathers its row by
-the proposer id it involves (``_link_rows``) — the attempt row for
-prepare broadcasts, the in-flight ballot's proposer for response legs.
-Symmetric per-acceptor schedules are the P-broadcast special case.
-Reachability (``acc_up``) is checked when a *request* is delivered,
-exactly like the event transport checks ``set_down`` at delivery time;
-responses generated at that same tick see the same mask, like ``send``
-checking its source.
+``trace.replay_event_sim``). Both planes arrive fused into one tiny
+``[P, A]`` *link matrix* — ``delay << 1 | drop`` (``pack_link``) — that is
+indexed block-locally per leg by the proposer id the leg involves: the
+jnp oracle gathers rows with ``take_along_axis`` (``legs_gather``), the
+Pallas kernel selects them in a compile-time P-loop (``legs_select``) so
+no gather indices ever materialize in HBM. Both produce identical int32
+values; the flattened ``[P*A, N]`` per-cell broadcast of earlier
+revisions is gone. Symmetric per-acceptor schedules are the P-broadcast
+special case. Reachability (``acc_up``) is checked when a *request* is
+delivered, exactly like the event transport checks ``set_down`` at
+delivery time; responses generated at that same tick see the same mask,
+like ``send`` checking its source.
 
 §7 releases are routed through the same plane: a releasing proposer stops
 believing it owns immediately (a local action), but the discard messages
-to the acceptors ride the ``rel_*`` in-flight slots — delayed by their
+to the acceptors ride the ``rel`` in-flight slots — delayed by their
 link and droppable like any other leg. In the event sim they deliver at
 ``REL_EPS`` inside the drain window, before any phase message (see
 ``trace.py``).
@@ -59,162 +66,231 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .state import NO_PROPOSER, QUARTERS
+from .state import (
+    NO_PROPOSER,
+    PACK_MASK,
+    PACK_SHIFT,
+    QUARTERS,
+    ballot_proposer,
+    pack_pair,
+    packed_ballot,
+    packed_q4,
+)
 
 # round phases
 R_IDLE, R_PREPARING, R_PROPOSING = 0, 1, 2
+
+MAX_VOTE_ACCEPTORS = PACK_SHIFT  # vote bitmasks must stay positive int32
+
+
+def pack_slot(ballot, deliver_q4):
+    """One in-flight message as one int32 (0 = empty slot)."""
+    return pack_pair(deliver_q4, ballot)
+
+
+def pack_link(delay, drop):
+    """Fuse (delay ticks, drop mask) into the one-plane link matrix."""
+    return (jnp.asarray(delay, jnp.int32) << 1) | (
+        jnp.asarray(drop, jnp.int32) & 1
+    )
 
 
 class NetPlaneState(NamedTuple):
     """In-flight messages + open proposer rounds. All arrays int32.
 
-    Slot encoding: ``*_b`` is the message ballot (0 = empty slot), ``*_at``
-    the delivery quarter-tick (``4 * deliver_tick``). ``presp_pay`` is the
-    prepare response's payload: the acceptor's accepted proposer at grant
-    time (NO_PROPOSER = empty/open). Round rows are ``[1, N]``; response
-    masks ``[A, N]``.
+    Slot planes are ``[A, N]`` packed ``deliver_q4 << PACK_SHIFT | ballot``
+    ints (``pack_slot``; 0 = empty). ``presp_pay`` is the prepare
+    response's payload: the acceptor's accepted proposer at grant time
+    (NO_PROPOSER = empty/open). Round rows are ``[1, N]``; the vote sets
+    ``rnd_open_bits``/``rnd_acc_bits`` are per-acceptor bitmasks.
+
+    The unpacked views of earlier revisions remain as properties
+    (``preq_b``/``preq_at``/…, ``rnd_open``/``rnd_acc`` as [A, N] 0/1
+    masks) for tests and diagnostics.
     """
 
-    preq_b: jax.Array      # [A, N] prepare requests in flight
-    preq_at: jax.Array     # [A, N]
-    presp_b: jax.Array     # [A, N] prepare responses (grants only) in flight
-    presp_at: jax.Array    # [A, N]
-    presp_pay: jax.Array   # [A, N] accepted proposer payload (-1 = open)
-    poreq_b: jax.Array     # [A, N] propose requests in flight
-    poreq_at: jax.Array    # [A, N]
-    poresp_b: jax.Array    # [A, N] propose responses (accepts only) in flight
-    poresp_at: jax.Array   # [A, N]
-    rel_b: jax.Array       # [A, N] §7 release messages in flight
-    rel_at: jax.Array      # [A, N]
+    preq: jax.Array          # [A, N] prepare requests in flight (packed)
+    presp: jax.Array         # [A, N] prepare responses (grants only, packed)
+    presp_pay: jax.Array     # [A, N] accepted proposer payload (-1 = open)
+    poreq: jax.Array         # [A, N] propose requests in flight (packed)
+    poresp: jax.Array        # [A, N] propose responses (accepts only, packed)
+    rel: jax.Array           # [A, N] §7 release messages in flight (packed)
     rnd_ballot: jax.Array    # [1, N] open round's ballot (0 = no round)
     rnd_phase: jax.Array     # [1, N] R_IDLE / R_PREPARING / R_PROPOSING
     rnd_expiry: jax.Array    # [1, N] quarter-tick the proposer's timer expires
     rnd_deadline: jax.Array  # [1, N] quarter-tick the round is abandoned
-    rnd_open: jax.Array      # [A, N] acceptors whose open response counted
-    rnd_acc: jax.Array       # [A, N] acceptors whose accept counted
+    rnd_open_bits: jax.Array  # [1, N] bitmask of acceptors whose open counted
+    rnd_acc_bits: jax.Array   # [1, N] bitmask of acceptors whose accept counted
 
     @property
     def n_acceptors(self) -> int:
-        return self.preq_b.shape[0]
+        return self.preq.shape[0]
 
     @property
     def n_cells(self) -> int:
-        return self.preq_b.shape[1]
+        return self.preq.shape[1]
+
+    # ------------------------------------------------- unpacked views
+    def _bits_mask(self, bits: jax.Array) -> jax.Array:
+        a_ids = jax.lax.broadcasted_iota(jnp.int32, self.preq.shape, 0)
+        return (bits >> a_ids) & 1
+
+    @property
+    def rnd_open(self) -> jax.Array:
+        """[A, N] 0/1: acceptors whose open response counted."""
+        return self._bits_mask(self.rnd_open_bits)
+
+    @property
+    def rnd_acc(self) -> jax.Array:
+        """[A, N] 0/1: acceptors whose accept counted."""
+        return self._bits_mask(self.rnd_acc_bits)
+
+
+def _slot_views(name: str):
+    def ballot_view(self) -> jax.Array:
+        return packed_ballot(getattr(self, name))
+
+    def at_view(self) -> jax.Array:
+        return packed_q4(getattr(self, name))
+
+    return property(ballot_view), property(at_view)
+
+
+for _slot in ("preq", "presp", "poreq", "poresp", "rel"):
+    _b, _at = _slot_views(_slot)
+    setattr(NetPlaneState, f"{_slot}_b", _b)
+    setattr(NetPlaneState, f"{_slot}_at", _at)
 
 
 def init_netplane(n_cells: int, n_acceptors: int) -> NetPlaneState:
+    if n_acceptors > MAX_VOTE_ACCEPTORS:
+        raise ValueError(
+            f"netplane vote bitmasks support at most {MAX_VOTE_ACCEPTORS} "
+            f"acceptors; got {n_acceptors}"
+        )
     za = jnp.zeros((n_acceptors, n_cells), jnp.int32)
     zr = jnp.zeros((1, n_cells), jnp.int32)
     return NetPlaneState(
-        preq_b=za, preq_at=za,
-        presp_b=za, presp_at=za, presp_pay=jnp.full_like(za, NO_PROPOSER),
-        poreq_b=za, poreq_at=za,
-        poresp_b=za, poresp_at=za,
-        rel_b=za, rel_at=za,
+        preq=za,
+        presp=za, presp_pay=jnp.full_like(za, NO_PROPOSER),
+        poreq=za, poresp=za,
+        rel=za,
         rnd_ballot=zr, rnd_phase=zr, rnd_expiry=zr, rnd_deadline=zr,
-        rnd_open=za, rnd_acc=za,
+        rnd_open_bits=zr, rnd_acc_bits=zr,
     )
 
 
-def _link_rows(flat: jnp.ndarray, prop, n_acceptors: int) -> jnp.ndarray:
-    """Gather the [A, bn] link rows of a flattened ``[P*A, bn]`` matrix for
-    the proposer each column's leg involves.
-
-    ``prop`` is an int32 proposer-id array, either ``[1, bn]`` (one sender
-    per cell: attempts, open rounds, releases) or ``[A, bn]`` (per-slot:
-    the in-flight ballot's proposer on response legs). Ids outside
-    [0, P) — the no-attempt sentinel, empty slots — select zeros; every
-    such leg is gated off by its own send/due mask anyway. The P loop is
-    compile-time (P is tiny), keeping the math elementwise on 2D blocks —
-    Pallas-sublane friendly, no dynamic gather.
-    """
-    A = n_acceptors
-    P = flat.shape[0] // A
-    out = jnp.zeros((A,) + flat.shape[1:], flat.dtype)
+# ---------------------------------------------------------------------------
+# per-leg link indexing: [P, A] link matrix -> ([A, bn] delay_q4, drop) rows
+# for the proposer each column's leg involves. ``prop`` is an int32
+# proposer-id array, either [1, bn] (one sender per cell: attempts, open
+# rounds, releases) or [A, bn] (per-slot: the in-flight ballot's proposer
+# on response legs). Ids outside [0, P) — the no-attempt sentinel — pick
+# arbitrary rows; every such leg is gated off by its own send/due mask.
+# ---------------------------------------------------------------------------
+def legs_select(link, prop):
+    """Compile-time P-loop of selects — no dynamic gather, block-local:
+    the Pallas kernel's strategy (`link` is a VMEM-resident [P, A] block,
+    its rows broadcast against the lane axis)."""
+    P, A = link.shape
+    v = jnp.zeros((A,) + prop.shape[1:], link.dtype)
     for p in range(P):
-        out = jnp.where(prop == p, flat[p * A:(p + 1) * A], out)
-    return out
+        v = jnp.where(prop == p, link[p][:, None], v)
+    return QUARTERS * (v >> 1), (v & 1) > 0
+
+
+def legs_gather(link, prop):
+    """One `take_along_axis` row gather — the XLA-lowered strategy (the
+    jnp oracle / fused fallback). Bit-identical to `legs_select`."""
+    P, A = link.shape
+    idx = jnp.clip(prop, 0, P - 1)
+    if idx.shape[0] == 1:
+        idx = jnp.broadcast_to(idx, (A,) + idx.shape[1:])
+    v = jnp.take_along_axis(link.T, idx, axis=1)
+    return QUARTERS * (v >> 1), (v & 1) > 0
 
 
 def delayed_tick_math(
-    lease: tuple,      # LeaseArrayState fields, [A, bn] / [P, bn] blocks
+    lease: tuple,      # PackedLeaseState fields, [A, bn] / [1, bn] blocks
     net: tuple,        # NetPlaneState fields, [A, bn] / [1, bn] blocks
     t,                 # scalar int32 tick
     attempt,           # [1, bn] int32 proposer id attempting (-1 = none)
     release,           # [1, bn] int32 proposer id releasing (-1 = none)
-    up,                # [A, bn] int32 acceptor reachability this tick
-    delay,             # [P*A, bn] int32 link delays (ticks) for legs sent this tick
-    drop,              # [P*A, bn] int32 1 = lose legs sent this tick
+    up,                # [A, 1|bn] int32 acceptor reachability this tick
+    link,              # [P, A] int32 fused link matrix (delay << 1 | drop)
     *,
     majority: int,
     lease_q4: int,     # lease timespan in quarter-ticks
     round_q4: int,     # timeout-and-abandon horizon in quarter-ticks
+    n_proposers: int,
+    legs=legs_gather,  # per-leg link strategy (select inside Pallas)
 ) -> tuple[tuple, tuple, jnp.ndarray]:
-    """One tick of the delayed model. Returns (lease', net', owner_count).
+    """One tick of the delayed model on the packed layout. Returns
+    (lease', net', owner_count[1, bn]).
 
     Within-tick order mirrors the event scheduler's drain window exactly:
     expiries fired before the tick boundary, then releases/attempts issued
     at the boundary, then the round-abandon timer, then deliveries in
     causal phase order (a zero-delay message cascades through all four
-    phases inside this same tick).
+    phases inside this same tick). ``owner_count`` is 0/1 from the single
+    believed-owner row, plus 1 at any tick a win would overwrite a live
+    *other* belief — the §4 alarm survives the packed owner plane.
     """
-    (promised, acc_ballot, acc_prop, acc_expiry,
-     own_mask, own_expiry, own_ballot) = lease
-    (preq_b, preq_at, presp_b, presp_at, presp_pay,
-     poreq_b, poreq_at, poresp_b, poresp_at,
-     rel_b, rel_at,
+    promised, acc_lease, own_id, ownp = lease
+    (preq, presp, presp_pay, poreq, poresp, rel_s,
      rnd_ballot, rnd_phase, rnd_expiry, rnd_deadline,
-     rnd_open, rnd_acc) = net
+     rnd_open_bits, rnd_acc_bits) = net
 
-    A = up.shape[0]
-    P = own_mask.shape[0]
+    P = n_proposers
     t4 = QUARTERS * t
-    p_ids = jax.lax.broadcasted_iota(jnp.int32, own_mask.shape, 0)  # [P, bn]
+    live_min = (t4 + 1) << PACK_SHIFT  # packed live iff >= ; slot due iff <
+    a_ids = jax.lax.broadcasted_iota(jnp.int32, promised.shape, 0)
+    a_bit = 1 << a_ids                                             # [A, bn]
     up = up > 0
-    dq4 = QUARTERS * delay                                          # [P*A, bn]
-    # per-leg link gathers: [A, bn] delay/drop rows for a given sender id
-    leg_dq4 = lambda prop: _link_rows(dq4, prop, A)
-    leg_drop = lambda prop: _link_rows(drop, prop, A) > 0
+
+    def due(slot):
+        return (slot > 0) & (slot < live_min)
+
+    def votes(bits):  # popcount over the A vote bits (A is compile-time)
+        n = bits & 1
+        for a in range(1, promised.shape[0]):
+            n = n + ((bits >> a) & 1)
+        return n
 
     # -- 1. expiry ---------------------------------------------------------
-    acc_live = (acc_ballot > 0) & (acc_expiry > t4)
-    acc_ballot = jnp.where(acc_live, acc_ballot, 0)
-    acc_prop = jnp.where(acc_live, acc_prop, NO_PROPOSER)
-    acc_expiry = jnp.where(acc_live, acc_expiry, 0)
-    own_live = (own_mask > 0) & (own_expiry > t4)
-    own_mask = own_live.astype(jnp.int32)
-    own_expiry = jnp.where(own_live, own_expiry, 0)
-    own_ballot = jnp.where(own_live, own_ballot, 0)
+    acc_lease = jnp.where(acc_lease >= live_min, acc_lease, 0)
+    own_live = ownp >= live_min
+    ownp = jnp.where(own_live, ownp, 0)
+    own_id = jnp.where(own_live, own_id, NO_PROPOSER)
 
     # -- 2. release (§7, routed through the network) -----------------------
     # 2a. the local action: the releasing owner stops believing NOW (the
     #     §7 "switch to non-owner first" ordering) ...
     rel = release                                                   # [1, bn]
-    rel_owner = (p_ids == rel) & (own_mask > 0)                     # [P, bn]
-    rel_ballot = jnp.sum(jnp.where(rel_owner, own_ballot, 0), axis=0, keepdims=True)
-    own_mask = jnp.where(rel_owner, 0, own_mask)
+    has_rel = rel >= 0
+    rel_owner = has_rel & (own_id == rel)
+    rel_ballot = jnp.where(rel_owner, ownp & PACK_MASK, 0)
+    ownp = jnp.where(rel_owner, 0, ownp)
+    own_id = jnp.where(rel_owner, NO_PROPOSER, own_id)
     # 2b. ... then the discard messages ride the in-flight plane, delayed
     #     and droppable per (releasing proposer, acceptor) link
-    send_rel = (rel_ballot > 0) & ~leg_drop(rel)                    # [A, bn]
-    rel_b = jnp.where(send_rel, rel_ballot, rel_b)
-    rel_at = jnp.where(send_rel, t4 + leg_dq4(rel), rel_at)
+    dq4, lost = legs(link, rel)                                     # [A, bn]
+    send_rel = (rel_ballot > 0) & ~lost
+    rel_s = jnp.where(send_rel, pack_slot(rel_ballot, t4 + dq4), rel_s)
     # 2c. deliver due releases (a zero-delay one lands this same tick):
     #     discard iff still reachable and the accepted ballot matches
-    rel_due = (rel_b > 0) & (rel_at <= t4)
-    discard = rel_due & up & (acc_ballot == rel_b)                  # [A, bn]
-    acc_ballot = jnp.where(discard, 0, acc_ballot)
-    acc_prop = jnp.where(discard, NO_PROPOSER, acc_prop)
-    acc_expiry = jnp.where(discard, 0, acc_expiry)
-    rel_b = jnp.where(rel_due, 0, rel_b)
-    rel_at = jnp.where(rel_due, 0, rel_at)
+    rel_due = due(rel_s)
+    discard = rel_due & up & ((acc_lease & PACK_MASK) == (rel_s & PACK_MASK))
+    acc_lease = jnp.where(discard, 0, acc_lease)
+    rel_s = jnp.where(rel_due, 0, rel_s)
 
     # -- 3. round lifecycle ------------------------------------------------
     # a release wipes the releasing proposer's open round (Proposer.release
     # sets st.round = None); a timed-out round is abandoned (the event
     # round timer fires before this tick's deliveries); a new attempt
     # overwrites whatever round was open (Proposer._start_round).
-    rnd_prop = rnd_ballot % P                                       # [1, bn]
-    rel_kills = (rnd_ballot > 0) & (rel >= 0) & (rnd_prop == rel)
+    rnd_prop = ballot_proposer(rnd_ballot, P)                       # [1, bn]
+    rel_kills = (rnd_ballot > 0) & has_rel & (rnd_prop == rel)
     timed_out = (rnd_ballot > 0) & (t4 >= rnd_deadline)
     att = attempt                                                   # [1, bn]
     has_att = att >= 0
@@ -229,45 +305,47 @@ def delayed_tick_math(
         has_att, t4 + round_q4, jnp.where(keep, rnd_deadline, 0)
     )
     fresh = has_att | ~keep                                         # [1, bn]
-    rnd_open = jnp.where(fresh, 0, rnd_open)                        # [A, bn]
-    rnd_acc = jnp.where(fresh, 0, rnd_acc)
+    rnd_open_bits = jnp.where(fresh, 0, rnd_open_bits)
+    rnd_acc_bits = jnp.where(fresh, 0, rnd_acc_bits)
 
     # -- 4a. broadcast prepare requests for new attempts -------------------
-    send_preq = has_att & ~leg_drop(att)                            # [A, bn]
-    preq_b = jnp.where(send_preq, new_ballot, preq_b)
-    preq_at = jnp.where(send_preq, t4 + leg_dq4(att), preq_at)
+    dq4, lost = legs(link, att)
+    send_preq = has_att & ~lost                                     # [A, bn]
+    preq = jnp.where(send_preq, pack_slot(new_ballot, t4 + dq4), preq)
 
     # -- 4b. deliver prepare requests at acceptors (§3.2) ------------------
-    preq_due = (preq_b > 0) & (preq_at <= t4)
+    preq_due = due(preq)
+    preq_b = preq & PACK_MASK
     grant = preq_due & up & (preq_b >= promised)
     promised = jnp.where(grant, preq_b, promised)
     # the response leg belongs to the REQUESTER's link: each slot's ballot
     # names the proposer the grant travels back to
-    preq_prop = preq_b % P                                          # [A, bn]
-    send_presp = grant & ~leg_drop(preq_prop)
-    presp_b = jnp.where(send_presp, preq_b, presp_b)
-    presp_at = jnp.where(send_presp, t4 + leg_dq4(preq_prop), presp_at)
+    dq4, lost = legs(link, ballot_proposer(preq_b, P))
+    send_presp = grant & ~lost
+    acc_b = acc_lease & PACK_MASK                                   # [A, bn]
+    acc_prop = jnp.where(acc_b > 0, ballot_proposer(acc_b, P), NO_PROPOSER)
+    presp = jnp.where(send_presp, pack_slot(preq_b, t4 + dq4), presp)
     presp_pay = jnp.where(send_presp, acc_prop, presp_pay)
-    preq_b = jnp.where(preq_due, 0, preq_b)
-    preq_at = jnp.where(preq_due, 0, preq_at)
+    preq = jnp.where(preq_due, 0, preq)
 
     # -- 4c. deliver prepare responses at proposers (§3.3) -----------------
-    presp_due = (presp_b > 0) & (presp_at <= t4)
-    rnd_prop = rnd_ballot % P  # recompute: the round may have changed above
+    presp_due = due(presp)
+    rnd_prop = ballot_proposer(rnd_ballot, P)  # recompute: round changed above
     match_prep = (
-        presp_due & (presp_b == rnd_ballot) & (rnd_phase == R_PREPARING)
+        presp_due & ((presp & PACK_MASK) == rnd_ballot)
+        & (rnd_phase == R_PREPARING)
     )
     # §6 extend: a response carrying our own proposal counts as open only
     # while we still believe we own (checked at ARRIVAL, like st.owner)
-    rnd_prop_owns = jnp.sum(
-        jnp.where((p_ids == rnd_prop) & (own_mask > 0), 1, 0),
-        axis=0, keepdims=True,
-    ) > 0                                                           # [1, bn]
+    rnd_prop_owns = (own_id == rnd_prop) & (ownp > 0)               # [1, bn]
     is_open = match_prep & (
         (presp_pay == NO_PROPOSER) | ((presp_pay == rnd_prop) & rnd_prop_owns)
     )
-    rnd_open = jnp.where(is_open, 1, rnd_open)  # set-union: duplicate-proof
-    opens = jnp.sum(rnd_open, axis=0, keepdims=True)                # [1, bn]
+    # set-union via the vote bitmask: duplicate-proof
+    rnd_open_bits = rnd_open_bits | jnp.sum(
+        jnp.where(is_open, a_bit, 0), axis=0, keepdims=True
+    )
+    opens = votes(rnd_open_bits)                                    # [1, bn]
     to_propose = (
         (rnd_ballot > 0) & (rnd_phase == R_PREPARING) & (opens >= majority)
     )
@@ -275,58 +353,53 @@ def delayed_tick_math(
     # the ordering the §4 proof depends on
     rnd_phase = jnp.where(to_propose, R_PROPOSING, rnd_phase)
     rnd_expiry = jnp.where(to_propose, t4 + lease_q4, rnd_expiry)
-    send_poreq = to_propose & ~leg_drop(rnd_prop)                   # [A, bn]
-    poreq_b = jnp.where(send_poreq, rnd_ballot, poreq_b)
-    poreq_at = jnp.where(send_poreq, t4 + leg_dq4(rnd_prop), poreq_at)
-    presp_b = jnp.where(presp_due, 0, presp_b)
-    presp_at = jnp.where(presp_due, 0, presp_at)
+    dq4, lost = legs(link, rnd_prop)
+    send_poreq = to_propose & ~lost                                 # [A, bn]
+    poreq = jnp.where(send_poreq, pack_slot(rnd_ballot, t4 + dq4), poreq)
+    presp = jnp.where(presp_due, 0, presp)
     presp_pay = jnp.where(presp_due, NO_PROPOSER, presp_pay)
 
     # -- 4d. deliver propose requests at acceptors (§3.4) ------------------
-    poreq_due = (poreq_b > 0) & (poreq_at <= t4)
+    poreq_due = due(poreq)
+    poreq_b = poreq & PACK_MASK
     accept = poreq_due & up & (poreq_b >= promised)
-    poreq_prop = poreq_b % P                                        # [A, bn]
-    acc_ballot = jnp.where(accept, poreq_b, acc_ballot)
-    acc_prop = jnp.where(accept, poreq_prop, acc_prop)
-    acc_expiry = jnp.where(accept, t4 + lease_q4, acc_expiry)
-    send_poresp = accept & ~leg_drop(poreq_prop)
-    poresp_b = jnp.where(send_poresp, poreq_b, poresp_b)
-    poresp_at = jnp.where(send_poresp, t4 + leg_dq4(poreq_prop), poresp_at)
-    poreq_b = jnp.where(poreq_due, 0, poreq_b)
-    poreq_at = jnp.where(poreq_due, 0, poreq_at)
+    acc_lease = jnp.where(accept, pack_pair(t4 + lease_q4, poreq_b), acc_lease)
+    dq4, lost = legs(link, ballot_proposer(poreq_b, P))
+    send_poresp = accept & ~lost
+    poresp = jnp.where(send_poresp, pack_slot(poreq_b, t4 + dq4), poresp)
+    poreq = jnp.where(poreq_due, 0, poreq)
 
     # -- 4e. deliver propose responses at proposers (§3.5) -----------------
-    poresp_due = (poresp_b > 0) & (poresp_at <= t4)
+    poresp_due = due(poresp)
     match_prop = (
-        poresp_due & (poresp_b == rnd_ballot) & (rnd_phase == R_PROPOSING)
+        poresp_due & ((poresp & PACK_MASK) == rnd_ballot)
+        & (rnd_phase == R_PROPOSING)
     )
-    rnd_acc = jnp.where(match_prop, 1, rnd_acc)
-    accs = jnp.sum(rnd_acc, axis=0, keepdims=True)
+    rnd_acc_bits = rnd_acc_bits | jnp.sum(
+        jnp.where(match_prop, a_bit, 0), axis=0, keepdims=True
+    )
+    accs = votes(rnd_acc_bits)
     # the timer started in 4c bounds the claim (§3 step 5): accepts landing
     # after our own lease window elapsed must not make us owner
     win = (
         (rnd_ballot > 0) & (rnd_phase == R_PROPOSING)
         & (accs >= majority) & (rnd_expiry > t4)
     )
-    new_owner = (p_ids == (rnd_ballot % P)) & win                   # [P, bn]
-    own_mask = jnp.where(new_owner, 1, own_mask)
-    own_expiry = jnp.where(new_owner, rnd_expiry, own_expiry)  # timer from 4c
-    own_ballot = jnp.where(new_owner, rnd_ballot, own_ballot)
+    # a win that would overwrite a live OTHER belief is the §4 alarm
+    viol = win & (ownp > 0) & (own_id != rnd_prop)
+    own_id = jnp.where(win, rnd_prop, own_id)
+    ownp = jnp.where(win, pack_pair(rnd_expiry, rnd_ballot), ownp)  # 4c timer
     rnd_ballot = jnp.where(win, 0, rnd_ballot)
     rnd_phase = jnp.where(win, R_IDLE, rnd_phase)
     rnd_expiry = jnp.where(win, 0, rnd_expiry)
     rnd_deadline = jnp.where(win, 0, rnd_deadline)
-    rnd_open = jnp.where(win, 0, rnd_open)
-    rnd_acc = jnp.where(win, 0, rnd_acc)
-    poresp_b = jnp.where(poresp_due, 0, poresp_b)
-    poresp_at = jnp.where(poresp_due, 0, poresp_at)
+    rnd_open_bits = jnp.where(win, 0, rnd_open_bits)
+    rnd_acc_bits = jnp.where(win, 0, rnd_acc_bits)
+    poresp = jnp.where(poresp_due, 0, poresp)
 
-    lease_out = (promised, acc_ballot, acc_prop, acc_expiry,
-                 own_mask, own_expiry, own_ballot)
-    net_out = (preq_b, preq_at, presp_b, presp_at, presp_pay,
-               poreq_b, poreq_at, poresp_b, poresp_at,
-               rel_b, rel_at,
+    lease_out = (promised, acc_lease, own_id, ownp)
+    net_out = (preq, presp, presp_pay, poreq, poresp, rel_s,
                rnd_ballot, rnd_phase, rnd_expiry, rnd_deadline,
-               rnd_open, rnd_acc)
-    owner_count = jnp.sum(own_mask, axis=0, keepdims=True)          # [1, bn]
+               rnd_open_bits, rnd_acc_bits)
+    owner_count = (ownp > 0).astype(jnp.int32) + viol.astype(jnp.int32)
     return lease_out, net_out, owner_count

@@ -1,13 +1,25 @@
 """jit'd public entry points for the lease plane: backend dispatch
-(pure-jnp oracle vs fused Pallas kernel) plus cell-axis padding so callers
-can use any N. Mirrors the kernels/flash_attention kernel/ops/ref layout.
+(pure-jnp fallback vs fused Pallas window kernel) plus cell-axis padding so
+callers can use any N. Mirrors the kernels/flash_attention kernel/ops/ref
+layout.
 
-One step: ``lease_plane_tick`` advances every cell one tick of either
-network model — the synchronous zero-delay tick (``sync=True``, PR 1) or
-the delayed in-flight message plane (multi-tick rounds, asymmetric
-per-(proposer, acceptor) link delay/drop — see ``netplane.py``). Its
-per-tick inputs are a :class:`~repro.lease_array.scenario.TickInputs`
-pytree, so registering a new fault plane never changes this signature.
+The bulk path is :func:`lease_window_scan`: a whole ``[T, …]`` scenario in
+ONE dispatch. All backends run the identical packed tick math
+(``ref.sync_tick_math`` / ``netplane.delayed_tick_math``), so they agree
+bit-for-bit:
+
+  - ``"jnp"``        — `lax.scan` over the packed planes (the XLA-lowered
+                       fallback; also the oracle every kernel is tested
+                       against);
+  - ``"pallas"``     — the time-resident window kernel, interpret mode
+                       (runs anywhere; correctness CI);
+  - ``"pallas_tpu"`` — the same kernel compiled for real TPUs.
+
+One step: :func:`lease_plane_tick` advances every cell one tick of either
+network model — the synchronous zero-delay tick (``sync=True``) or the
+delayed in-flight message plane (see ``netplane.py``). Its per-tick inputs
+are a :class:`~repro.lease_array.scenario.TickInputs` pytree, so
+registering a new fault plane never changes this signature.
 
 ``lease_plane_step`` / ``lease_plane_step_delayed`` are deprecation shims
 for the old one-positional-argument-per-fault-dimension API.
@@ -19,28 +31,48 @@ import warnings
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .kernel import lease_tick_delayed_pallas, lease_tick_pallas
-from .netplane import NetPlaneState
-from .ref import lease_step_delayed_ref, lease_step_ref, link_matrix
+from .kernel import lease_window_delayed_pallas, lease_window_sync_pallas
+from .netplane import NetPlaneState, delayed_tick_math, pack_link
+from .ref import link_matrix, sync_tick_math
 from .scenario import TickInputs, make_tick
-from .state import NO_PROPOSER, LeaseArrayState
+from .state import (
+    NO_PROPOSER,
+    LeaseArrayState,
+    PackedLeaseState,
+    check_pack_budget,
+    pack_state,
+    unpack_state,
+)
 
 BACKENDS = ("jnp", "pallas", "pallas_tpu")
 
 
-def _pad_cells(state: LeaseArrayState, attempt, release, multiple: int):
-    n = state.n_cells
+def _pad_cells(arrays, multiple: int, pad_values):
+    """Pad the trailing cell axis of each array to a block multiple."""
+    n = arrays[0].shape[-1]
     pad = (-n) % multiple
     if pad == 0:
-        return state, attempt, release, n
-    state = LeaseArrayState(*(
-        jnp.pad(arr, ((0, 0), (0, pad))) for arr in state
-    ))
-    # padded cells never attempt, never release, never own anything
-    attempt = jnp.pad(attempt, (0, pad), constant_values=NO_PROPOSER)
-    release = jnp.pad(release, (0, pad), constant_values=NO_PROPOSER)
-    return state, attempt, release, n
+        return arrays, n
+    width = [(0, 0)] * (arrays[0].ndim - 1) + [(0, pad)]
+    return [
+        jnp.pad(a, width, constant_values=v)
+        for a, v in zip(arrays, pad_values)
+    ], n
+
+
+def _pad_packed(packed: PackedLeaseState, multiple: int):
+    # padded cells never attempt or own anything (owner_id's empty
+    # sentinel is NO_PROPOSER; every other plane's is 0)
+    arrays, n = _pad_cells(
+        list(packed), multiple,
+        tuple(
+            NO_PROPOSER if f == "owner_id" else 0
+            for f in PackedLeaseState._fields
+        ),
+    )
+    return PackedLeaseState(*arrays), n
 
 
 def _pad_net(net: NetPlaneState, multiple: int) -> NetPlaneState:
@@ -58,12 +90,155 @@ def _pad_net(net: NetPlaneState, multiple: int) -> NetPlaneState:
     ))
 
 
-@functools.partial(
+def _window_scan_impl(
+    state: LeaseArrayState,
+    net,
+    t0,
+    planes: dict,
+    *,
+    majority: int,
+    lease_q4: int,
+    round_q4: int,
+    backend: str,
+    sync: bool,
+    block_n: int,
+    window: int,
+):
+    """Shared unjitted body of the fused scan (also vmapped by
+    ``engine.sweep``). ``planes`` is the Scenario plane dict ([T, ...]
+    arrays). Returns (state', net', owners [T, N], counts [T, N])."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown lease-plane backend {backend!r}")
+    P = state.n_proposers
+    A, N = state.highest_promised.shape
+    t0 = jnp.asarray(t0, jnp.int32)
+    attempts = jnp.asarray(planes["attempts"], jnp.int32)
+    releases = jnp.asarray(planes["releases"], jnp.int32)
+    acc_up = jnp.asarray(planes["acc_up"], jnp.int32)
+    T = attempts.shape[0]
+    packed = pack_state(state)
+    if not sync:
+        link = pack_link(planes["delay"], planes["drop"])  # [T, P, A]
+
+    if backend == "jnp":
+        if sync:
+            def body(carry, xs):
+                lease, t = carry
+                a, r, u = xs
+                lease, count = sync_tick_math(
+                    lease, t, a[None, :], r[None, :], u[:, None],
+                    majority=majority, lease_q4=lease_q4, n_proposers=P,
+                )
+                return (lease, t + 1), (lease[2], count)
+
+            (lease, _), (owners, counts) = jax.lax.scan(
+                body, (tuple(packed), t0), (attempts, releases, acc_up)
+            )
+            new_net = net
+        else:
+            def body(carry, xs):
+                lease, netc, t = carry
+                a, r, u, lk = xs
+                lease, netc, count = delayed_tick_math(
+                    lease, netc, t, a[None, :], r[None, :], u[:, None], lk,
+                    majority=majority, lease_q4=lease_q4, round_q4=round_q4,
+                    n_proposers=P,
+                )
+                return (lease, netc, t + 1), (lease[2], count)
+
+            (lease, netc, _), (owners, counts) = jax.lax.scan(
+                body, (tuple(packed), tuple(net), t0),
+                (attempts, releases, acc_up, link),
+            )
+            new_net = NetPlaneState(*netc)
+        new_state = unpack_state(PackedLeaseState(*lease), P)
+        return new_state, new_net, owners.reshape(T, N), counts.reshape(T, N)
+
+    interpret = backend == "pallas"
+    padded, n = _pad_packed(packed, block_n)
+    (attempts_p, releases_p), _ = _pad_cells(
+        [attempts, releases], block_n, (NO_PROPOSER, NO_PROPOSER)
+    )
+    if sync:
+        padded, owners, counts = lease_window_sync_pallas(
+            padded, t0, attempts_p, releases_p, acc_up,
+            majority=majority, lease_q4=lease_q4, n_proposers=P,
+            block_n=block_n, window=window, interpret=interpret,
+        )
+        new_net = net
+    else:
+        net_p = _pad_net(net, block_n)
+        padded, net_p, owners, counts = lease_window_delayed_pallas(
+            padded, net_p, t0, attempts_p, releases_p, acc_up, link,
+            majority=majority, lease_q4=lease_q4, round_q4=round_q4,
+            n_proposers=P, block_n=block_n, window=window,
+            interpret=interpret,
+        )
+        new_net = NetPlaneState(*(a[:, :n] for a in net_p))
+    new_state = unpack_state(
+        PackedLeaseState(*(a[:, :n] for a in padded)), P
+    )
+    return new_state, new_net, owners[:, :n], counts[:, :n]
+
+
+_window_scan_jit = functools.partial(
     jax.jit,
     static_argnames=(
-        "majority", "lease_q4", "round_q4", "backend", "block_n", "sync",
+        "majority", "lease_q4", "round_q4", "backend", "sync", "block_n",
+        "window",
     ),
-)
+)(_window_scan_impl)
+
+
+def _guard_pack_budget(t0, n_ticks, planes, *, n_proposers, lease_q4, sync):
+    """Best-effort host-side overflow guard for the public entry points:
+    a tick past ``state.max_pack_tick`` would silently corrupt the packed
+    (deadline, ballot) fields, so refuse it here. Skipped when ``t0`` or
+    the delay plane is a tracer (a caller jitting over time owns the
+    check, like ``engine.step`` does)."""
+    delay = None if sync else planes.get("delay")
+    if isinstance(t0, jax.core.Tracer) or isinstance(delay, jax.core.Tracer):
+        return
+    max_delay = 0 if delay is None else int(np.asarray(delay).max(initial=0))
+    check_pack_budget(
+        int(np.asarray(t0)) + n_ticks, n_proposers, lease_q4, max_delay
+    )
+
+
+def lease_window_scan(
+    state: LeaseArrayState,
+    net,
+    t0,
+    planes: dict,
+    *,
+    majority: int,
+    lease_q4: int,
+    round_q4: int,
+    backend: str = "jnp",
+    sync: bool = False,
+    block_n: int = 512,
+    window: int = 16,
+) -> tuple[LeaseArrayState, NetPlaneState, jax.Array, jax.Array]:
+    """Replay a whole [T]-tick scenario-plane dict in ONE dispatch.
+
+    ``sync=True`` runs the zero-delay synchronous model (``net`` passes
+    through untouched; the planes' delay/drop entries are ignored);
+    ``sync=False`` runs the delayed in-flight model. ``window`` is the
+    number of ticks each Pallas kernel window keeps VMEM-resident per
+    streamed plane slab (jnp ignores it). Returns
+    (new_state, new_net, owners [T, N], owner_counts [T, N]).
+    """
+    _guard_pack_budget(
+        t0, int(jnp.shape(planes["attempts"])[0]), planes,
+        n_proposers=state.n_proposers, lease_q4=lease_q4, sync=sync,
+    )
+    return _window_scan_jit(
+        state, net, t0, planes,
+        majority=majority, lease_q4=lease_q4, round_q4=round_q4,
+        backend=backend, sync=sync, block_n=block_n, window=window,
+    )
+
+
 def lease_plane_tick(
     state: LeaseArrayState,
     net: NetPlaneState,
@@ -76,6 +251,7 @@ def lease_plane_tick(
     backend: str = "jnp",
     block_n: int = 512,
     sync: bool = False,
+    window: int = 16,
 ) -> tuple[LeaseArrayState, NetPlaneState, jax.Array]:
     """Advance all cells one tick.
 
@@ -88,50 +264,19 @@ def lease_plane_tick(
     owner_count is the per-cell number of proposers who believe they own
     it (>1 would be a §4 violation).
     """
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown lease-plane backend {backend!r}")
-    t = jnp.asarray(t, jnp.int32)
-    attempt = jnp.asarray(tick.attempts, jnp.int32)
-    release = jnp.asarray(tick.releases, jnp.int32)
-    acc_up = jnp.asarray(tick.acc_up, jnp.int32)
-    if sync:
-        if backend == "jnp":
-            new_state, count = lease_step_ref(
-                state, t, attempt, release, acc_up,
-                majority=majority, lease_q4=lease_q4,
-            )
-            return new_state, net, count
-        padded, attempt, release, n = _pad_cells(
-            state, attempt, release, block_n
-        )
-        new_state, count = lease_tick_pallas(
-            padded, t, attempt, release, acc_up,
-            majority=majority, lease_q4=lease_q4,
-            block_n=block_n, interpret=(backend == "pallas"),
-        )
-        if new_state.n_cells != n:
-            new_state = LeaseArrayState(*(a[:, :n] for a in new_state))
-            count = count[:n]
-        return new_state, net, count
-    delay = jnp.asarray(tick.delay, jnp.int32)
-    drop = jnp.asarray(tick.drop, jnp.int32)
-    if backend == "jnp":
-        return lease_step_delayed_ref(
-            state, net, t, attempt, release, acc_up, delay, drop,
-            majority=majority, lease_q4=lease_q4, round_q4=round_q4,
-        )
-    padded, attempt, release, n = _pad_cells(state, attempt, release, block_n)
-    net_p = _pad_net(net, block_n)
-    new_state, new_net, count = lease_tick_delayed_pallas(
-        padded, net_p, t, attempt, release, acc_up, delay, drop,
-        majority=majority, lease_q4=lease_q4, round_q4=round_q4,
-        block_n=block_n, interpret=(backend == "pallas"),
+    planes = {
+        k: jnp.asarray(v)[None, ...] for k, v in tick.planes.items()
+    }
+    _guard_pack_budget(
+        t, 1, tick.planes,
+        n_proposers=state.n_proposers, lease_q4=lease_q4, sync=sync,
     )
-    if new_state.n_cells != n:
-        new_state = LeaseArrayState(*(a[:, :n] for a in new_state))
-        new_net = NetPlaneState(*(a[:, :n] for a in new_net))
-        count = count[:n]
-    return new_state, new_net, count
+    new_state, new_net, _, counts = _window_scan_jit(
+        state, net, t, planes,
+        majority=majority, lease_q4=lease_q4, round_q4=round_q4,
+        backend=backend, sync=sync, block_n=block_n, window=window,
+    )
+    return new_state, new_net, counts[0]
 
 
 # --------------------------------------------------------------------------

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for one synchronous tick of the vectorized lease plane.
+"""Pure-jnp oracle for one tick of the vectorized lease plane.
 
 Semantics of a tick (all N cells in lockstep, mirroring the event engine on
 a zero-delay network — `trace.replay_event_sim` is the bit-for-bit referee):
@@ -23,8 +23,15 @@ a zero-delay network — `trace.replay_event_sim` is the bit-for-bit referee):
                   timer and becomes owner. No majority -> nothing changes
                   beyond the raised promises.
 
-All of it is branch-free elementwise/sublane-reduction work — the Pallas
-kernel (`kernel.py`) fuses the same dataflow into one VMEM pass.
+The tick body (`sync_tick_math`) runs on the PACKED layout
+(`state.PackedLeaseState`): one int32 per (expiry, ballot) pair, a single
+believed-owner row instead of the [P, N] owner planes (§4 makes that
+lossless for legal histories; an illegal second belief surfaces as an
+owner count of 2 at the tick it would appear). It is branch-free
+elementwise/sublane-reduction work shared verbatim by the jnp scan driver
+and the fused Pallas window kernel (`kernel.py`) — the backends agree
+bit-for-bit by construction. `lease_step_ref` wraps it in the public
+`LeaseArrayState` format for per-tick callers and older tests.
 
 This synchronous step is the zero-delay special case. The *delayed* model
 (`lease_step_delayed_ref`) threads the same protocol through the in-flight
@@ -33,10 +40,86 @@ late, get lost, or land after the proposer abandoned the round.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
-from .netplane import NetPlaneState, delayed_tick_math
-from .state import NO_PROPOSER, QUARTERS, LeaseArrayState
+from .netplane import NetPlaneState, delayed_tick_math, pack_link
+from .state import (
+    NO_PROPOSER,
+    PACK_MASK,
+    PACK_SHIFT,
+    QUARTERS,
+    LeaseArrayState,
+    PackedLeaseState,
+    ballot_proposer,
+    pack_pair,
+    pack_state,
+    unpack_state,
+)
+
+
+def sync_tick_math(
+    lease: tuple,     # PackedLeaseState fields, [A, bn] / [1, bn] blocks
+    t,                # scalar int32 tick
+    attempt,          # [1, bn] int32 proposer id attempting (-1 = none)
+    release,          # [1, bn] int32 proposer id releasing (-1 = none)
+    up,               # [A, 1|bn] int32 acceptor reachability this tick
+    *,
+    majority: int,
+    lease_q4: int,
+    n_proposers: int,
+) -> tuple[tuple, jnp.ndarray]:
+    """One synchronous tick on the packed layout; returns
+    (lease', owner_count[1, bn]). Shared by the jnp scan and the Pallas
+    window kernel. ``owner_count`` is 0/1 plus 1 at any tick a win would
+    overwrite a live *other* belief — the §4 alarm (see netplane docs)."""
+    promised, acc_lease, own_id, ownp = lease
+    P = n_proposers
+    t4 = QUARTERS * t
+    live_min = (t4 + 1) << PACK_SHIFT
+    up = up > 0
+
+    # -- 1. expiry ---------------------------------------------------------
+    acc_lease = jnp.where(acc_lease >= live_min, acc_lease, 0)
+    own_live = ownp >= live_min
+    ownp = jnp.where(own_live, ownp, 0)
+    own_id = jnp.where(own_live, own_id, NO_PROPOSER)
+
+    # -- 2. release (§7) ---------------------------------------------------
+    rel = release
+    rel_owner = (rel >= 0) & (own_id == rel)
+    rel_ballot = jnp.where(rel_owner, ownp & PACK_MASK, 0)         # [1, bn]
+    ownp = jnp.where(rel_owner, 0, ownp)
+    own_id = jnp.where(rel_owner, NO_PROPOSER, own_id)
+    acc_b = acc_lease & PACK_MASK                                  # [A, bn]
+    discard = up & (rel_ballot > 0) & (acc_b == rel_ballot)
+    acc_lease = jnp.where(discard, 0, acc_lease)
+    acc_b = jnp.where(discard, 0, acc_b)
+
+    # -- 3. prepare (§3.2) -------------------------------------------------
+    att = attempt
+    has_att = att >= 0
+    ballot = jnp.where(has_att, (t + 1) * P + att, 0)              # [1, bn]
+    att_owns = has_att & (own_id == att)
+    grant = up & has_att & (ballot >= promised)
+    is_open = grant & (
+        (acc_b == 0) | ((ballot_proposer(acc_b, P) == att) & att_owns)
+    )
+    opens = jnp.sum(is_open.astype(jnp.int32), axis=0, keepdims=True)
+    won = opens >= majority
+    promised = jnp.where(grant, ballot, promised)
+
+    # -- 4. propose (§3.4) + proposer update -------------------------------
+    accept = grant & won
+    newpack = pack_pair(t4 + lease_q4, ballot)
+    acc_lease = jnp.where(accept, newpack, acc_lease)
+    viol = won & (ownp > 0) & (own_id != att)  # would-be second believer
+    own_id = jnp.where(won, att, own_id)
+    ownp = jnp.where(won, newpack, ownp)
+
+    lease_out = (promised, acc_lease, own_id, ownp)
+    owner_count = (ownp > 0).astype(jnp.int32) + viol.astype(jnp.int32)
+    return lease_out, owner_count
 
 
 def lease_step_ref(
@@ -49,66 +132,18 @@ def lease_step_ref(
     majority: int,
     lease_q4: int,    # lease timespan in quarter-ticks
 ) -> tuple[LeaseArrayState, jnp.ndarray]:
-    """Advance every cell one tick; returns (new_state, owner_count[N])."""
+    """Advance every cell one tick; returns (new_state, owner_count[N]).
+    Public-format wrapper over `sync_tick_math` (packs, ticks, unpacks)."""
     P = state.n_proposers
-    t4 = QUARTERS * t
-    p_ids = jnp.arange(P, dtype=jnp.int32)[:, None]         # [P, 1]
-    up = jnp.asarray(acc_up).astype(jnp.bool_)[:, None]     # [A, 1]
-
-    # -- 1. expiry ---------------------------------------------------------
-    acc_live = (state.accepted_ballot > 0) & (state.lease_expiry > t4)
-    accepted_ballot = jnp.where(acc_live, state.accepted_ballot, 0)
-    accepted_proposer = jnp.where(acc_live, state.accepted_proposer, NO_PROPOSER)
-    lease_expiry = jnp.where(acc_live, state.lease_expiry, 0)
-    own_live = (state.owner_mask > 0) & (state.owner_expiry > t4)
-    owner_mask = own_live.astype(jnp.int32)
-    owner_expiry = jnp.where(own_live, state.owner_expiry, 0)
-    owner_ballot = jnp.where(own_live, state.owner_ballot, 0)
-
-    # -- 2. release (§7) ---------------------------------------------------
-    rel = jnp.asarray(release, jnp.int32)[None, :]           # [1, N]
-    rel_owner = (p_ids == rel) & (owner_mask > 0)            # [P, N]
-    rel_ballot = jnp.sum(jnp.where(rel_owner, owner_ballot, 0), axis=0, keepdims=True)
-    owner_mask = jnp.where(rel_owner, 0, owner_mask)
-    discard = up & (rel_ballot > 0) & (accepted_ballot == rel_ballot)  # [A, N]
-    accepted_ballot = jnp.where(discard, 0, accepted_ballot)
-    accepted_proposer = jnp.where(discard, NO_PROPOSER, accepted_proposer)
-    lease_expiry = jnp.where(discard, 0, lease_expiry)
-
-    # -- 3. prepare (§3.2) -------------------------------------------------
-    att = jnp.asarray(attempt, jnp.int32)[None, :]           # [1, N]
-    has_att = att >= 0
-    ballot = jnp.where(has_att, (t + 1) * P + att, 0)        # [1, N]
-    att_owns = jnp.any((p_ids == att) & (owner_mask > 0), axis=0, keepdims=True)
-    grant = up & has_att & (ballot >= state.highest_promised)
-    is_open = grant & (
-        (accepted_ballot == 0) | ((accepted_proposer == att) & att_owns)
+    lease, count = sync_tick_math(
+        tuple(pack_state(state)),
+        t,
+        jnp.asarray(attempt, jnp.int32)[None, :],
+        jnp.asarray(release, jnp.int32)[None, :],
+        jnp.asarray(acc_up).astype(jnp.int32)[:, None],
+        majority=majority, lease_q4=lease_q4, n_proposers=P,
     )
-    opens = jnp.sum(is_open.astype(jnp.int32), axis=0, keepdims=True)  # [1, N]
-    won = opens >= majority
-    highest_promised = jnp.where(grant, ballot, state.highest_promised)
-
-    # -- 4. propose (§3.4) + proposer update -------------------------------
-    accept = grant & won
-    accepted_ballot = jnp.where(accept, ballot, accepted_ballot)
-    accepted_proposer = jnp.where(accept, att, accepted_proposer)
-    lease_expiry = jnp.where(accept, t4 + lease_q4, lease_expiry)
-    new_owner = (p_ids == att) & won                          # [P, N]
-    owner_mask = jnp.where(new_owner, 1, owner_mask)
-    owner_expiry = jnp.where(new_owner, t4 + lease_q4, owner_expiry)
-    owner_ballot = jnp.where(new_owner, ballot, owner_ballot)
-
-    new_state = LeaseArrayState(
-        highest_promised=highest_promised,
-        accepted_ballot=accepted_ballot,
-        accepted_proposer=accepted_proposer,
-        lease_expiry=lease_expiry,
-        owner_mask=owner_mask,
-        owner_expiry=owner_expiry,
-        owner_ballot=owner_ballot,
-    )
-    owner_count = jnp.sum(owner_mask, axis=0)                 # [N]
-    return new_state, owner_count
+    return unpack_state(PackedLeaseState(*lease), P), count.reshape(-1)
 
 
 def link_matrix(m, n_proposers: int, n_acceptors: int) -> jnp.ndarray:
@@ -125,17 +160,6 @@ def link_matrix(m, n_proposers: int, n_acceptors: int) -> jnp.ndarray:
             f"[P, A]=({n_proposers}, {n_acceptors}); got {m.shape}"
         )
     return m
-
-
-def flat_links(m, n_proposers: int, n_acceptors: int, n_cells: int) -> jnp.ndarray:
-    """A link matrix as the ``[P*A, N]`` blocks ``netplane._link_rows``
-    gathers from: row ``p*A + a``, broadcast along cells. The one encoding
-    of the flattened-link layout, shared by the jnp oracle and the Pallas
-    kernel wrapper."""
-    return jnp.broadcast_to(
-        link_matrix(m, n_proposers, n_acceptors).reshape(n_proposers * n_acceptors, 1),
-        (n_proposers * n_acceptors, n_cells),
-    )
 
 
 def lease_step_delayed_ref(
@@ -159,17 +183,20 @@ def lease_step_delayed_ref(
     """
     A, N = state.highest_promised.shape
     P = state.n_proposers
-    row = lambda r: jnp.asarray(r, jnp.int32).reshape(1, N)
-    col = lambda c: jnp.broadcast_to(
-        jnp.asarray(c).astype(jnp.int32)[:, None], (A, N)
-    )
     lease, netp, count = delayed_tick_math(
-        tuple(state), tuple(net), t,
-        row(attempt), row(release), col(acc_up),
-        flat_links(delay, P, A, N), flat_links(drop, P, A, N),
+        tuple(pack_state(state)), tuple(net), t,
+        jnp.asarray(attempt, jnp.int32).reshape(1, N),
+        jnp.asarray(release, jnp.int32).reshape(1, N),
+        jnp.asarray(acc_up).astype(jnp.int32)[:, None],
+        pack_link(link_matrix(delay, P, A), link_matrix(drop, P, A)),
         majority=majority, lease_q4=lease_q4, round_q4=round_q4,
+        n_proposers=P,
     )
-    return LeaseArrayState(*lease), NetPlaneState(*netp), count.reshape(N)
+    return (
+        unpack_state(PackedLeaseState(*lease), P),
+        NetPlaneState(*netp),
+        count.reshape(N),
+    )
 
 
 def owner_row(state: LeaseArrayState) -> jnp.ndarray:

@@ -377,8 +377,22 @@ class Scenario(_PlaneBundle):
     @classmethod
     def stack(cls, scenarios: Iterable["Scenario"]):
         """Stack same-shape scenarios on a new leading batch axis — the
-        ``jax.vmap`` batching form. Returns a Scenario-shaped pytree whose
-        leaves are [B, T, ...] (its per-tick properties no longer apply);
-        feed it to a vmapped scanner with ``in_axes=0``."""
+        ``jax.vmap`` batching form (``engine.sweep``'s currency). Returns a
+        Scenario-shaped pytree whose leaves are [B, T, ...] (its per-tick
+        properties no longer apply); feed it to a vmapped scanner with
+        ``in_axes=0``."""
         scenarios = list(scenarios)
+        if not scenarios:
+            raise ValueError("Scenario.stack needs at least one scenario")
+        first = scenarios[0]
+        for i, sc in enumerate(scenarios[1:], 1):
+            for name in PLANES:
+                a = np.asarray(first.planes[name])
+                b = np.asarray(sc.planes[name])
+                if a.shape != b.shape:
+                    raise ValueError(
+                        f"cannot stack: scenario 0 plane {name!r} has shape "
+                        f"{a.shape} but scenario {i} has {b.shape} "
+                        f"(same tick count and geometry required)"
+                    )
         return jax.tree.map(lambda *xs: np.stack(xs), *scenarios)

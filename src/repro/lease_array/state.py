@@ -15,6 +15,18 @@ event-driven ``core/`` engine reproduces the exact same schedule with
 Ballot numbers are globally unique and totally ordered by (tick, proposer):
 ``ballot(t, p) = (t+1)*P + p`` — the array-plane analogue of the paper's
 (run counter | proposer id) composition. 0 means "no ballot".
+
+Packed compute layout (PR 4): every hot path runs on a *packed* view of
+this state in which each (deadline-quarter-tick, ballot) pair lives in ONE
+int32 — ``packed = q4 << PACK_SHIFT | ballot`` — so liveness is a single
+compare (``packed >= (t4+1) << PACK_SHIFT``) on a single plane, and the
+at-most-one-owner §4 invariant lets the three ``[P, N]`` owner planes
+collapse to an ``owner_id``/``owner_lease`` pair of ``[1, N]`` rows (a
+would-be second believer is surfaced as an owner-count of 2 at the tick it
+appears — see ``ref.sync_tick_math``). ``LeaseArrayState`` stays the
+public at-rest format; ``pack_state``/``unpack_state`` convert at the
+boundary of every jitted driver. The packing budget bounds the clock:
+``ballot <= PACK_MASK`` and ``q4 <= MAX_PACK_Q4`` (see ``max_pack_tick``).
 """
 from __future__ import annotations
 
@@ -25,6 +37,10 @@ import jax.numpy as jnp
 
 NO_PROPOSER = -1  # "no owner / no attempt" sentinel in proposer-id arrays
 QUARTERS = 4  # quarter-ticks per tick
+
+PACK_SHIFT = 15  # low bits: ballot; high bits: a quarter-tick deadline
+PACK_MASK = (1 << PACK_SHIFT) - 1  # max packable ballot (32767)
+MAX_PACK_Q4 = (2**31 - 1) >> PACK_SHIFT  # max packable quarter-tick (65535)
 
 
 class LeaseArrayState(NamedTuple):
@@ -73,3 +89,113 @@ def lease_quarters(lease_ticks: int) -> int:
 def ballot_of(t, proposer, n_proposers: int):
     """Globally unique ballot for an attempt by ``proposer`` at tick ``t``."""
     return (t + 1) * n_proposers + proposer
+
+
+# ---------------------------------------------------------------------------
+# packed compute layout
+# ---------------------------------------------------------------------------
+def pack_pair(q4, ballot):
+    """One int32 carrying (deadline quarter-tick, ballot); 0 = empty."""
+    return (q4 << PACK_SHIFT) | ballot
+
+
+def ballot_proposer(ballot, n_proposers: int):
+    """The proposer a ballot belongs to (``ballot % P``, strength-reduced
+    to a mask when P is a power of two — ballots are nonnegative)."""
+    if n_proposers & (n_proposers - 1) == 0:
+        return ballot & (n_proposers - 1)
+    return ballot % n_proposers
+
+
+def packed_ballot(packed):
+    return packed & PACK_MASK
+
+
+def packed_q4(packed):
+    return packed >> PACK_SHIFT
+
+
+def max_pack_tick(n_proposers: int, lease_q4: int, max_delay_ticks: int = 0) -> int:
+    """Highest tick the packed layout can represent: the last attempt's
+    ballot must fit in PACK_SHIFT bits and the latest deadline any tick can
+    mint (send at t4 + delay, then a full lease) in the remaining bits."""
+    by_ballot = (PACK_MASK - (n_proposers - 1)) // n_proposers - 1
+    by_q4 = (MAX_PACK_Q4 - lease_q4 - QUARTERS * max_delay_ticks) // QUARTERS
+    return min(by_ballot, by_q4)
+
+
+def check_pack_budget(
+    t_end: int, n_proposers: int, lease_q4: int, max_delay_ticks: int = 0
+) -> None:
+    """Raise if ticking through ``t_end`` would overflow the packed layout
+    (a ballot or deadline minted past :func:`max_pack_tick` silently
+    corrupts neighbouring fields — never let one form)."""
+    limit = max_pack_tick(n_proposers, lease_q4, max_delay_ticks)
+    if t_end > limit:
+        raise ValueError(
+            f"tick {t_end} exceeds the packed int32 layout's budget "
+            f"({limit} ticks at P={n_proposers}, lease_q4={lease_q4}, "
+            f"max delay {max_delay_ticks}); split the workload across "
+            f"engines or shorten the trace"
+        )
+
+
+class PackedLeaseState(NamedTuple):
+    """The compute-format lease plane (see module docstring). All int32.
+
+    ``acc_lease`` packs the accepted (expiry, ballot) pair; the accepted
+    proposer is derived (``ballot % P``), not stored. The owner plane is a
+    single believed-owner row — legal PaxosLease histories never hold two
+    concurrent beliefs (§4), and the tick math flags the overwrite if an
+    illegal history ever would.
+    """
+
+    promised: jax.Array     # [A, N] highest promised ballot (0 = none)
+    acc_lease: jax.Array    # [A, N] expiry_q4 << PACK_SHIFT | ballot (0 = none)
+    owner_id: jax.Array     # [1, N] believed owner (-1 = none)
+    owner_lease: jax.Array  # [1, N] expiry_q4 << PACK_SHIFT | ballot (0 = none)
+
+
+def pack_state(state: LeaseArrayState) -> PackedLeaseState:
+    """Public -> compute format. With >1 owner bit per cell (an illegal
+    state) the highest proposer id wins, like ``ref.owner_row``."""
+    acc_on = state.accepted_ballot > 0
+    acc_lease = jnp.where(
+        acc_on, pack_pair(state.lease_expiry, state.accepted_ballot), 0
+    )
+    p_ids = jax.lax.broadcasted_iota(jnp.int32, state.owner_mask.shape, 0)
+    own = state.owner_mask > 0
+    owner_id = jnp.max(
+        jnp.where(own, p_ids, NO_PROPOSER), axis=0, keepdims=True
+    )
+    top = own & (p_ids == owner_id)
+    owner_lease = jnp.sum(
+        jnp.where(top, pack_pair(state.owner_expiry, state.owner_ballot), 0),
+        axis=0, keepdims=True,
+    )
+    return PackedLeaseState(
+        promised=state.highest_promised,
+        acc_lease=acc_lease.astype(jnp.int32),
+        owner_id=owner_id.astype(jnp.int32),
+        owner_lease=owner_lease.astype(jnp.int32),
+    )
+
+
+def unpack_state(packed: PackedLeaseState, n_proposers: int) -> LeaseArrayState:
+    """Compute -> public format (acc_prop rederived as ``ballot % P``)."""
+    acc_b = packed_ballot(packed.acc_lease)
+    acc_on = acc_b > 0
+    shape_p = (n_proposers, packed.promised.shape[1])
+    p_ids = jax.lax.broadcasted_iota(jnp.int32, shape_p, 0)
+    own = (p_ids == packed.owner_id) & (packed.owner_lease > 0)
+    return LeaseArrayState(
+        highest_promised=packed.promised,
+        accepted_ballot=acc_b,
+        accepted_proposer=jnp.where(
+            acc_on, ballot_proposer(acc_b, n_proposers), NO_PROPOSER
+        ),
+        lease_expiry=jnp.where(acc_on, packed_q4(packed.acc_lease), 0),
+        owner_mask=own.astype(jnp.int32),
+        owner_expiry=jnp.where(own, packed_q4(packed.owner_lease), 0),
+        owner_ballot=jnp.where(own, packed_ballot(packed.owner_lease), 0),
+    )

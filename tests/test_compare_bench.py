@@ -1,0 +1,90 @@
+"""The bench-regression gate: benchmarks/compare_bench.py row diffing."""
+import json
+
+from benchmarks.compare_bench import compare
+
+MACHINE = {
+    "platform": "Linux-x", "device_kind": "cpu", "n_devices": 2,
+    "jax_backend": "cpu",
+}
+
+
+def _write(tmp_path, name, rows, **hdr):
+    doc = {
+        "benchmark": "lease_array",
+        "git_rev": "abc123",
+        **MACHINE,
+        "rows": [
+            {"name": n, "us_per_cell_tick": us, "detail": "d"}
+            for n, us in rows.items()
+        ],
+        **hdr,
+    }
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return p
+
+
+def test_improvements_and_new_rows_pass(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", {"a": 1.0, "b": 2.0, "gone": 3.0})
+    cand = _write(tmp_path, "cand.json", {"a": 0.5, "b": 2.1, "new": 9.9})
+    assert compare(base, cand, 0.25) == 0
+    out = capsys.readouterr().out
+    assert "-50.0%" in out and "gone" in out and "new" in out
+
+
+def test_regression_beyond_threshold_fails(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", {"a": 1.0, "b": 1.0})
+    cand = _write(tmp_path, "cand.json", {"a": 1.0, "b": 1.3})
+    assert compare(base, cand, 0.25) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+    # a looser threshold tolerates the same delta
+    assert compare(base, cand, 0.40) == 0
+
+
+def test_regression_exactly_at_threshold_passes(tmp_path):
+    base = _write(tmp_path, "base.json", {"a": 1.0})
+    cand = _write(tmp_path, "cand.json", {"a": 1.25})
+    assert compare(base, cand, 0.25) == 0
+
+
+def test_cross_machine_gates_catastrophic_only(tmp_path, capsys):
+    """Different machine stamps (and no shared reference row) relax the
+    gate to the catastrophic threshold: hardware variance warns, a real
+    cliff still fails."""
+    base = _write(tmp_path, "base.json", {"a": 1.0, "b": 1.0})
+    cand = _write(
+        tmp_path, "cand.json", {"a": 1.6, "b": 1.0}, n_devices=4,
+    )
+    assert compare(base, cand, 0.25) == 0  # +60% across machines: warn only
+    out = capsys.readouterr().out
+    assert "cross-machine" in out
+    cand2 = _write(
+        tmp_path, "cand2.json", {"a": 5.0, "b": 1.0}, n_devices=4,
+    )
+    assert compare(base, cand2, 0.25) == 1  # 5x cliff fails anywhere
+    # --strict restores the same-machine gate across machines
+    assert compare(base, cand, 0.25, strict=True) == 1
+
+
+def test_cross_machine_relative_gate(tmp_path, capsys):
+    """With the reference row in both files, a cross-machine run still
+    applies the strict threshold — to each row's ratio against the
+    reference, which cancels machine speed."""
+    ref = "lease_array_scan"
+    base = _write(tmp_path, "base.json", {ref: 1.0, "a": 1.0, "b": 1.0})
+    # candidate machine is uniformly 2x slower: ratios unchanged, passes
+    # despite every raw delta being +100%
+    cand = _write(
+        tmp_path, "cand.json", {ref: 2.0, "a": 2.0, "b": 2.0}, n_devices=4,
+    )
+    assert compare(base, cand, 0.25) == 0
+    assert "relative" in capsys.readouterr().out
+    # same 2x machine, but row "a" also regressed 1.5x vs the reference —
+    # invisible to the catastrophic raw gate (+200% < 300%), caught by the
+    # relative one
+    cand2 = _write(
+        tmp_path, "cand2.json", {ref: 2.0, "a": 3.0, "b": 2.0}, n_devices=4,
+    )
+    assert compare(base, cand2, 0.25) == 1
+    assert "REGRESSION (relative)" in capsys.readouterr().out

@@ -1,0 +1,221 @@
+"""The time-resident fused window scan: window-boundary correctness.
+
+The Pallas window kernel replays ``window`` ticks per grid step with all
+state VMEM-resident; an in-flight message whose deliver-at falls in a LATER
+window than its send must ride the resident slot across the boundary and
+land bit-identically to the unwindowed jnp oracle. These tests split
+windows adversarially (prime window sizes, windows shorter than the delay,
+window=1 = the old per-tick regime) at delay depths 0/1/4, symmetric and
+asymmetric, and also pin the fused jnp fallback to the legacy per-tick
+scanner and the packed layout to its public round-trip.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.lease_array import (
+    LeaseArrayEngine,
+    NO_PROPOSER,
+    Scenario,
+    init_netplane,
+    init_state,
+    lease_quarters,
+    max_pack_tick,
+    pack_state,
+    random_trace,
+    unpack_state,
+)
+from repro.lease_array.engine import _scenario_scanner
+from repro.lease_array.ops import lease_window_scan
+from repro.lease_array.state import QUARTERS
+
+GEOM = dict(n_cells=6, n_acceptors=3, n_proposers=4)
+
+
+def _delayed_trace(seed, depth, asym, n_ticks=48):
+    return random_trace(
+        seed, n_ticks=n_ticks, lease_ticks=3,
+        p_attempt=0.6, p_release=0.08, p_down_flip=0.03,
+        max_delay_ticks=depth, p_drop=0.15 if depth else 0.0,
+        asymmetric=asym, round_ticks=depth + 1, **GEOM,
+    )
+
+
+def _run(trace, *, backend, window, netplane):
+    eng = LeaseArrayEngine(
+        backend=backend, window=window, lease_ticks=trace.lease_ticks,
+        round_ticks=trace.round_ticks, **GEOM,
+    )
+    owners, counts = eng.run_trace(trace.scenario(), netplane=netplane)
+    return owners, counts, eng.state, eng.net
+
+
+@pytest.mark.parametrize("depth,asym", [
+    (0, False), (1, False), (1, True), (4, False), (4, True),
+])
+@pytest.mark.parametrize("window", [1, 3, 5, 64])
+def test_window_boundaries_bit_exact_vs_unwindowed_oracle(depth, asym, window):
+    """Deliver-ats split across window boundaries (window < 4*delay splits
+    every round; window=64 > T never splits): every partition must equal
+    the unwindowed jnp oracle bit-for-bit — owners, §4 counts, final
+    state, and the in-flight netplane slots."""
+    trace = _delayed_trace(17 + depth, depth, asym)
+    ow_ref, cn_ref, st_ref, net_ref = _run(
+        trace, backend="jnp", window=window, netplane=True
+    )
+    ow, cn, st, net = _run(
+        trace, backend="pallas", window=window, netplane=True
+    )
+    assert np.array_equal(ow, ow_ref)
+    assert np.array_equal(cn, cn_ref)
+    assert cn.max() <= 1
+    for a, b in zip(st, st_ref):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(net, net_ref):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_message_in_flight_across_window_boundary():
+    """A hand-built round whose request is sent in window 0 (tick 3) and
+    delivered in window 1 (tick 6, delay 3): the fused kernel with
+    window=4 must carry the slot across the boundary."""
+    T, N = 12, GEOM["n_cells"]
+    attempts = np.full((T, N), NO_PROPOSER, np.int32)
+    attempts[3, 0] = 1
+    delay = np.zeros((T, GEOM["n_acceptors"]), np.int32)
+    delay[3] = 3   # requests land t=6; responses (sent t=6) land t=9
+    delay[6] = 3
+    sc = Scenario.build(
+        T, attempts=attempts, delay=delay, **GEOM,
+    )
+    ow_ref, _, _, _ = _run_scenario(sc, backend="jnp", window=4)
+    ow, _, _, _ = _run_scenario(sc, backend="pallas", window=4)
+    assert np.array_equal(ow, ow_ref)
+    assert (ow[:9, 0] == NO_PROPOSER).all()
+    assert ow[9, 0] == 1, "round completes at t=9, across two boundaries"
+
+
+def _run_scenario(sc, *, backend, window):
+    eng = LeaseArrayEngine(
+        backend=backend, window=window, lease_ticks=3, round_ticks=8, **GEOM,
+    )
+    owners, counts = eng.run_trace(sc, netplane=True)
+    return owners, counts, eng.state, eng.net
+
+
+def test_fused_scan_matches_legacy_pertick_scanner():
+    """run_trace's fused path and the pre-PR-4 per-tick scanner are the
+    same math in different drivers — bit-identical outputs."""
+    trace = _delayed_trace(23, 2, True)
+    sc = trace.scenario()
+    ow, cn, st, net = _run(trace, backend="jnp", window=16, netplane=True)
+    scanner = _scenario_scanner(
+        GEOM["n_acceptors"] // 2 + 1, lease_quarters(trace.lease_ticks),
+        QUARTERS * trace.round_ticks, "jnp", False,
+    )
+    st0 = init_state(**GEOM)
+    net0 = init_netplane(GEOM["n_cells"], GEOM["n_acceptors"])
+    planes = {k: jnp.asarray(v) for k, v in sc.planes.items()}
+    st1, net1, ow1, cn1 = scanner(st0, net0, jnp.int32(0), planes)
+    assert np.array_equal(ow, np.asarray(ow1))
+    assert np.array_equal(cn, np.asarray(cn1))
+    for a, b in zip(st, st1):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(net, net1):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_split_trace_equals_one_trace():
+    """Two run_trace calls (state carried between dispatches, messages
+    still in flight at the cut) equal one call over the full scenario."""
+    trace = _delayed_trace(31, 2, False, n_ticks=40)
+    sc = trace.scenario()
+    whole = LeaseArrayEngine(
+        lease_ticks=3, round_ticks=3, window=7, **GEOM,
+    )
+    ow_full, _ = whole.run_trace(sc, netplane=True)
+    split = LeaseArrayEngine(
+        lease_ticks=3, round_ticks=3, window=7, **GEOM,
+    )
+    ow_a, _ = split.run_trace(sc[:13], netplane=True)
+    ow_b, _ = split.run_trace(sc[13:], netplane=True)
+    assert np.array_equal(np.vstack([ow_a, ow_b]), ow_full)
+    for a, b in zip(split.state, whole.state):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_non_multiple_block_and_window_padding():
+    """Cell counts that don't divide the Pallas block and tick counts that
+    don't divide the window exercise both padding paths."""
+    n_cells = 5
+    trace = random_trace(
+        41, n_ticks=13, n_cells=n_cells, n_acceptors=3, n_proposers=4,
+        lease_ticks=2, p_attempt=0.7, max_delay_ticks=1, p_drop=0.1,
+        round_ticks=2,
+    )
+    e1 = LeaseArrayEngine(n_cells, n_acceptors=3, n_proposers=4,
+                          lease_ticks=2, round_ticks=2, backend="jnp")
+    ow_ref, cn_ref = e1.run_trace(trace.scenario(), netplane=True)
+    e2 = LeaseArrayEngine(n_cells, n_acceptors=3, n_proposers=4,
+                          lease_ticks=2, round_ticks=2, backend="pallas",
+                          window=4)
+    ow, cn = e2.run_trace(trace.scenario(), netplane=True)
+    assert np.array_equal(ow, ow_ref)
+    assert np.array_equal(cn, cn_ref)
+
+
+def test_packed_state_roundtrip():
+    """pack_state/unpack_state is lossless on evolved public states."""
+    trace = _delayed_trace(5, 1, False, n_ticks=20)
+    eng = LeaseArrayEngine(lease_ticks=3, round_ticks=2, **GEOM)
+    eng.run_trace(trace.scenario(), netplane=True)
+    back = unpack_state(pack_state(eng.state), GEOM["n_proposers"])
+    for a, b in zip(back, eng.state):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pack_budget_guard():
+    """Traces that would overflow the 15-bit ballot field raise instead of
+    silently corrupting packed planes."""
+    eng = LeaseArrayEngine(2, n_acceptors=3, n_proposers=4, lease_ticks=2)
+    limit = max_pack_tick(4, lease_quarters(2))
+    eng.t = limit  # pretend the engine already ran to the edge
+    with pytest.raises(ValueError, match="packed int32"):
+        eng.run_trace(np.full((2, 2), NO_PROPOSER, np.int32))
+    eng.t = limit - 2
+    eng.run_trace(np.full((2, 2), NO_PROPOSER, np.int32))  # inside: fine
+
+
+def test_window_scan_direct_api():
+    """ops.lease_window_scan is usable standalone (the engine-free path)."""
+    sc = Scenario.build(
+        8, attempts=np.zeros((8, 6), np.int32), **GEOM,
+    )
+    st = init_state(**GEOM)
+    net = init_netplane(GEOM["n_cells"], GEOM["n_acceptors"])
+    planes = {k: jnp.asarray(v) for k, v in sc.planes.items()}
+    st1, net1, owners, counts = lease_window_scan(
+        st, net, jnp.int32(0), planes,
+        majority=2, lease_q4=lease_quarters(3), round_q4=4 * QUARTERS,
+        sync=True,
+    )
+    assert owners.shape == (8, 6)
+    assert (np.asarray(owners)[0] == 0).all(), "proposer 0 wins everywhere"
+    assert int(np.asarray(counts).max()) <= 1
+
+
+def test_window_scan_direct_api_refuses_pack_overflow():
+    """The engine-free entry points guard the packed layout too: a t0 past
+    max_pack_tick would silently corrupt (deadline, ballot) fields, so the
+    standalone API must refuse it rather than mint garbage ballots."""
+    sc = Scenario.build(4, attempts=np.zeros((4, 6), np.int32), **GEOM)
+    st = init_state(**GEOM)
+    net = init_netplane(GEOM["n_cells"], GEOM["n_acceptors"])
+    planes = {k: jnp.asarray(v) for k, v in sc.planes.items()}
+    lease_q4 = lease_quarters(3)
+    t0 = max_pack_tick(GEOM["n_proposers"], lease_q4)  # t0 + 4 overflows
+    with pytest.raises(ValueError, match="packed int32"):
+        lease_window_scan(
+            st, net, jnp.int32(t0), planes,
+            majority=2, lease_q4=lease_q4, round_q4=4 * QUARTERS, sync=True,
+        )

@@ -5,7 +5,7 @@ LeaseArrayEngine.step with explicit per-tick delay/drop schedules."""
 import jax.numpy as jnp
 import numpy as np
 
-from repro.lease_array import LeaseArrayEngine, NO_PROPOSER
+from repro.lease_array import LeaseArrayEngine, NO_PROPOSER, pack_slot
 from repro.lease_array.netplane import R_IDLE, R_PREPARING, R_PROPOSING
 
 A = np.array
@@ -49,10 +49,11 @@ def test_duplicate_prepare_response_cannot_double_count_quorum():
     assert int(e.net.rnd_open[0, 0]) == 1
     assert int(np.asarray(e.net.rnd_open).sum()) == 1
     # adversarial transport: duplicate acc0's open response, delivered t=2
-    dup_b = e.net.presp_b.at[0, 0].set(int(e.net.rnd_ballot[0, 0]))
-    dup_at = e.net.presp_at.at[0, 0].set(4 * 2)
+    dup = e.net.presp.at[0, 0].set(
+        int(pack_slot(int(e.net.rnd_ballot[0, 0]), 4 * 2))
+    )
     dup_pay = e.net.presp_pay.at[0, 0].set(NO_PROPOSER)
-    e.net = e.net._replace(presp_b=dup_b, presp_at=dup_at, presp_pay=dup_pay)
+    e.net = e.net._replace(presp=dup, presp_pay=dup_pay)
     own = e.step()  # t=2: duplicate delivered
     assert own.tolist() == [NO_PROPOSER]
     assert int(np.asarray(e.net.rnd_open).sum()) == 1, "no double count"
