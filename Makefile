@@ -2,7 +2,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-all test-fast bench-smoke bench-delay bench-json bench-compare bench dev-deps
+.PHONY: test test-all test-fast bench-smoke bench-delay bench-drift bench-json bench-compare bench dev-deps
 
 test:  ## fast default: skip the long @slow differential replays
 	python -m pytest -x -q -m "not slow"
@@ -20,6 +20,10 @@ bench-smoke:  ## quick end-to-end signal: the vectorized lease-plane bench
 bench-delay:  ## netplane smoke: delay-depth sweep of the in-flight plane
 	python -c "from benchmarks.bench_lease_array import run_delayed; \
 	  [print(f'{n},{u:.2f},\"{d}\"') for n, u, d in run_delayed()]"
+
+bench-drift:  ## drifted-clock smoke: the eps=0.25 netplane scan row
+	python -c "from benchmarks.bench_lease_array import run_drift; \
+	  [print(f'{n},{u:.2f},\"{d}\"') for n, u, d in run_drift()]"
 
 bench-json:  ## all lease-plane modes -> machine-readable BENCH_lease_array.json
 	python -m benchmarks.bench_lease_array

@@ -299,9 +299,12 @@ def lease_plane_roofline(
     # packed planes: lease = 2x[A,N] + 2x[1,N]; netplane = 6x[A,N] + 6x[1,N]
     state_planes = (2 * a + 2) + ((6 * a + 6) if delayed else 0)
     streamed = 2 + 2  # attempt+release rows in, owner+count rows out
-    # cell-independent per-tick streams: acc_up [A] + the fused [P, A]
+    # cell-independent per-tick streams: acc_up [A], the local-clock
+    # columns pclk [P] / aclk [A] (drift, PR 5), and the fused [P, A]
     # link matrix (delayed model only) — O(1) in N but P-proportional
-    bcast_bytes = b * (a + (n_proposers * a if delayed else 0))
+    bcast_bytes = b * (
+        a + n_proposers + a + (n_proposers * a if delayed else 0)
+    )
     resident_bytes = streamed * b * n_cells + bcast_bytes
     dispatch_bytes = (2 * state_planes + streamed) * b * n_cells + bcast_bytes
     # VPU work: ~110 [A, N]-sized int ops per delayed tick (~25 sync)

@@ -5,9 +5,14 @@ arrays, advanced in lockstep one tick at a time.
 
 Every fault dimension is a named plane in one declarative **Scenario**
 pytree (``scenario.py``): proposer attempts/releases ``[T, N]``, acceptor
-reachability ``[T, A]``, and asymmetric per-(proposer, acceptor) link
+reachability ``[T, A]``, asymmetric per-(proposer, acceptor) link
 delay/drop matrices ``[T, P, A]`` (the symmetric ``[T, A]`` form
-broadcasts). The engine consumes a ``Scenario`` whole (``run_trace``) or
+broadcasts), and per-node clock-rate planes ``prop_rate [T, P]`` /
+``acc_rate [T, A]`` — §4's "no synchronized clocks" as data: every
+node-side timer runs in that node's accumulated local time, proposers
+discount their own timer by T·(1-ε)/(1+ε) (``drift_eps``), and the
+differential referee replays drifted traces bit-exactly against the
+event sim's ``NodeClock``. The engine consumes a ``Scenario`` whole (``run_trace``) or
 one ``TickInputs`` slice at a time (``step``); registering a new fault
 plane (``register_plane``) extends the schema without changing any
 signature — the §1 failure model ("delayed, reordered, lost, crash and
@@ -58,10 +63,12 @@ from .scenario import (
     register_plane,
 )
 from .state import (
+    DEFAULT_RATE,
     NO_PROPOSER,
     LeaseArrayState,
     PackedLeaseState,
     ballot_of,
+    guarded_lease_q4,
     init_state,
     lease_quarters,
     max_pack_tick,
@@ -71,6 +78,7 @@ from .state import (
 from .trace import Trace, random_trace, replay_array, replay_event_sim
 
 __all__ = [
+    "DEFAULT_RATE",
     "LeaseArrayEngine",
     "LeaseArrayState",
     "NO_PROPOSER",
@@ -83,6 +91,7 @@ __all__ = [
     "TickInputs",
     "Trace",
     "ballot_of",
+    "guarded_lease_q4",
     "init_netplane",
     "init_state",
     "lease_plane_step",

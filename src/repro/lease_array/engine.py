@@ -15,9 +15,17 @@ Three modes:
 
 Inputs are declarative **Scenario planes** (``scenario.py``): one pytree
 carries every fault dimension — attempts, releases, acceptor reachability,
-and asymmetric per-(proposer, acceptor) link delay/drop matrices — so new
-fault planes register into the schema instead of growing new arguments.
-The legacy per-plane kwargs still work as thin shims that build the pytree.
+asymmetric per-(proposer, acceptor) link delay/drop matrices, and per-node
+clock-rate planes — so new fault planes register into the schema instead
+of growing new arguments. The legacy per-plane kwargs still work as thin
+shims that build the pytree.
+
+Clock drift (§4): the engine carries each node's accumulated local clock
+(``prop_clk``/``acc_clk``, local quarter-ticks) across dispatches, so a
+drifted trace split over many ``run_trace``/``step`` calls replays
+bit-identically to one call. ``drift_eps`` is the ε the proposers' guard
+discount assumes (``guard_q4 = ⌊lease_q4·(1-ε)/(1+ε)⌋``); rate planes
+beyond that bound can — by design — trip the §4 owner-count alarm.
 
 Two network models share the machinery: the synchronous zero-delay tick
 (every round resolves in one tick) and the delayed in-flight message plane
@@ -44,39 +52,63 @@ from .ops import _window_scan_impl, lease_plane_tick
 from .ref import owner_row
 from .scenario import Scenario, TickInputs, make_tick
 from .state import (
+    DEFAULT_RATE,
+    NO_PROPOSER,
     QUARTERS,
     check_pack_budget,
+    guarded_lease_q4,
     init_state,
     lease_quarters,
+    rate1_clock,
 )
 
 
 @functools.lru_cache(maxsize=None)
 def _scenario_scanner(
-    majority: int, lease_q4: int, round_q4: int, backend: str, sync: bool
+    majority: int, lease_q4: int, round_q4: int, backend: str, sync: bool,
+    guard_q4: int = None,
 ):
-    """Jitted (state, net, t0, planes) -> (state, net, owners, counts).
+    """Jitted (state, net, t0, clk0, planes) -> (state, net, owners, counts).
 
     The pre-PR 4 per-tick scanner: ``lax.scan`` whose body is ONE
     ``lease_plane_tick`` — every plane crosses the scan boundary every
     tick. Kept as the dispatch-overhead baseline (benchmarks) and the
     cross-check that the fused window scan (``ops.lease_window_scan``,
     what ``run_trace`` uses) changes nothing but speed; both run the same
-    packed tick math, so they agree bit-for-bit.
+    packed tick math, so they agree bit-for-bit. The local-clock columns
+    ``clk0 = (prop [P], acc [A])`` ride the scan carry here (the fused
+    path precomputes them as prefix-sum planes instead) — bit-identical
+    accumulation either way, since everything is int32.
     """
+    if guard_q4 is None:
+        guard_q4 = lease_q4
 
-    def scan_fn(state, net, t0, planes):
+    def scan_fn(state, net, t0, clk0, planes):
+        if clk0 is None:  # the rate-1 reading at t0, like ops' default
+            clk0 = (
+                rate1_clock(t0, state.n_proposers),
+                rate1_clock(t0, state.n_acceptors),
+            )
+
         def body(carry, xs):
-            st, nt, t = carry
+            st, nt, t, pc, ac = carry
             st, nt, count = lease_plane_tick(
                 st, nt, t, TickInputs(xs),
                 majority=majority, lease_q4=lease_q4, round_q4=round_q4,
+                guard_q4=guard_q4, clk0=(pc, ac),
                 backend=backend, sync=sync,
             )
-            return (st, nt, t + 1), (owner_row(st), count)
+            # a rate plane missing from a hand-rolled dict means the
+            # drift-free step, like ops._local_clock_planes' contract
+            carry = (
+                st, nt, t + 1,
+                pc + xs.get("prop_rate", DEFAULT_RATE),
+                ac + xs.get("acc_rate", DEFAULT_RATE),
+            )
+            return carry, (owner_row(st), count)
 
-        (state, net, _), (owners, counts) = jax.lax.scan(
-            body, (state, net, t0), planes
+        (state, net, _, _, _), (owners, counts) = jax.lax.scan(
+            body, (state, net, t0, clk0[0], clk0[1]), planes
         )
         return state, net, owners, counts
 
@@ -98,10 +130,11 @@ class SweepResult(NamedTuple):
 
 
 def _cell_sharding_specs(planes_keys):
-    """shard_map PartitionSpecs for a (state, net, t0, planes) call: every
-    state/output plane splits on its trailing cell axis; scenario planes
-    split iff their registered dims carry the cell axis "N" (acc_up and the
-    [T, P, A] link matrices are replicated)."""
+    """shard_map PartitionSpecs for a (state, net, t0, clk0, planes) call:
+    every state/output plane splits on its trailing cell axis; scenario
+    planes split iff their registered dims carry the cell axis "N" (acc_up,
+    the [T, P, A] link matrices and the clock-rate planes are replicated,
+    as are the [P]/[A] clock offsets)."""
     from jax.sharding import PartitionSpec as P
 
     from .scenario import PLANES
@@ -111,23 +144,29 @@ def _cell_sharding_specs(planes_keys):
         k: (P(None, "cells") if "N" in PLANES[k].dims else P())
         for k in planes_keys
     }
-    return (cells, cells, P(), plane_specs), (cells, cells, cells, cells)
+    # the clk0 slot takes a bare prefix spec: it covers both the (prop,
+    # acc) offset tuple and the None fast path (no leaves) identically
+    return (
+        (cells, cells, P(), P(), plane_specs),
+        (cells, cells, cells, cells),
+    )
 
 
 @functools.lru_cache(maxsize=None)
 def _trace_fn(
-    majority: int, lease_q4: int, round_q4: int, backend: str, sync: bool,
-    block_n: int, window: int, n_devices: int, planes_keys: tuple,
+    majority: int, lease_q4: int, round_q4: int, guard_q4: int, backend: str,
+    sync: bool, block_n: int, window: int, n_devices: int, planes_keys: tuple,
 ):
     """The fused scenario replay, jitted; with >1 device the cell axis is
     shard_map-ed across a 1-D device mesh (cells are independent — the
     tick math never reduces across N), so a trace uses every device."""
 
-    def run(state, net, t0, planes):
+    def run(state, net, t0, clk0, planes):
         return _window_scan_impl(
-            state, net, t0, planes,
+            state, net, t0, clk0, planes,
             majority=majority, lease_q4=lease_q4, round_q4=round_q4,
-            backend=backend, sync=sync, block_n=block_n, window=window,
+            guard_q4=guard_q4, backend=backend, sync=sync, block_n=block_n,
+            window=window,
         )
 
     if n_devices > 1:
@@ -145,8 +184,8 @@ def _trace_fn(
 
 @functools.lru_cache(maxsize=None)
 def _sweep_fn(
-    majority: int, lease_q4: int, round_q4: int, backend: str, sync: bool,
-    block_n: int, window: int, collect: str, n_devices: int,
+    majority: int, lease_q4: int, round_q4: int, guard_q4: int, backend: str,
+    sync: bool, block_n: int, window: int, collect: str, n_devices: int,
 ):
     """One-dispatch batched scenario replay: vmap over the stacked planes
     (state broadcast), reductions inside the jit so a summary sweep never
@@ -157,11 +196,12 @@ def _sweep_fn(
     the owners/counts cubes; a summary sweep's outputs are [B]-shaped, so
     nothing could reuse any plane and donating would only warn."""
 
-    def one(state, net, t0, cell_planes, rest_planes):
+    def one(state, net, t0, clk0, cell_planes, rest_planes):
         _, _, owners, counts = _window_scan_impl(
-            state, net, t0, {**cell_planes, **rest_planes},
+            state, net, t0, clk0, {**cell_planes, **rest_planes},
             majority=majority, lease_q4=lease_q4, round_q4=round_q4,
-            backend=backend, sync=sync, block_n=block_n, window=window,
+            guard_q4=guard_q4, backend=backend, sync=sync, block_n=block_n,
+            window=window,
         )
         out = {
             "max_owner_count": counts.max(),
@@ -173,7 +213,7 @@ def _sweep_fn(
             out["counts"] = counts
         return out
 
-    batched = jax.vmap(one, in_axes=(None, None, None, 0, 0))
+    batched = jax.vmap(one, in_axes=(None, None, None, None, 0, 0))
     if n_devices > 1:
         from jax.experimental.shard_map import shard_map
         from jax.sharding import Mesh, PartitionSpec as P
@@ -181,11 +221,11 @@ def _sweep_fn(
         mesh = Mesh(np.array(jax.devices()[:n_devices]), ("b",))
         batched = shard_map(
             batched, mesh=mesh,
-            in_specs=(P(), P(), P(), P("b"), P("b")),
+            in_specs=(P(), P(), P(), P(), P("b"), P("b")),
             out_specs=P("b"),
             check_rep=False,
         )
-    donate = (3,) if collect == "owners" else ()
+    donate = (4,) if collect == "owners" else ()
     return jax.jit(batched, donate_argnums=donate)
 
 
@@ -198,6 +238,7 @@ class LeaseArrayEngine:
         n_proposers: int = 8,
         lease_ticks: int = 3,
         round_ticks: int = 1,
+        drift_eps: float = 0.0,
         backend: str = "jnp",
         window: int = 16,
     ) -> None:
@@ -211,19 +252,61 @@ class LeaseArrayEngine:
         self.lease_q4 = lease_quarters(lease_ticks)
         self.round_ticks = round_ticks
         self.round_q4 = QUARTERS * int(round_ticks)
+        #: ε, the assumed clock-drift bound (§4): proposers discount their
+        #: own lease timer to T·(1-ε)/(1+ε) so a slow believer never
+        #: outlives a fast acceptor's timer. ε=0 = the exact rate-1 engine.
+        self.drift_eps = float(drift_eps)
+        self.guard_q4 = guarded_lease_q4(self.lease_q4, self.drift_eps)
         self.backend = backend
         self.window = int(window)
         self.state = init_state(n_cells, n_acceptors, n_proposers)
         self.net: NetPlaneState = init_netplane(n_cells, n_acceptors)
         self.t = 0
+        # accumulated local clocks (local quarter-ticks at global tick t);
+        # advanced by the scenario's prop_rate/acc_rate planes each tick
+        self.prop_clk = np.zeros(n_proposers, np.int32)
+        self.acc_clk = np.zeros(n_acceptors, np.int32)
         self.last_owner_count = jnp.zeros(n_cells, jnp.int32)
         # flips True on the first delayed step; once messages may be in
         # flight, every later tick must run the delayed model too
         self._netplane_active = False
 
     # -------------------------------------------------------- packing budget
-    def _check_pack_budget(self, t_end: int, max_delay: int = 0) -> None:
-        check_pack_budget(t_end, self.n_proposers, self.lease_q4, max_delay)
+    def _check_pack_budget(
+        self, t_end: int, max_delay: int = 0, max_rate: int = QUARTERS
+    ) -> None:
+        max_rate = max(int(max_rate), QUARTERS)
+        clk_max = int(max(self.prop_clk.max(), self.acc_clk.max(), 0))
+        check_pack_budget(
+            t_end, self.n_proposers, self.lease_q4, max_delay,
+            max_rate=max_rate,
+            clk_slack=max(0, clk_max - max_rate * self.t),
+        )
+
+    def _clk0(self):
+        """The engine's local-clock offsets for a dispatch — or None while
+        every clock still equals the rate-1 reading ``4t`` (an engine that
+        never saw a drifted plane), so the jitted scan derives the default
+        clocks in-graph and the host-driven step path pays no per-tick
+        clock uploads."""
+        t4 = QUARTERS * self.t
+        if (self.prop_clk == t4).all() and (self.acc_clk == t4).all():
+            return None
+        return jnp.asarray(self.prop_clk), jnp.asarray(self.acc_clk)
+
+    def _advance_clocks(self, prop_rate, acc_rate) -> None:
+        """Accumulate the scenario's rate planes ([T, P]/[T, A] or one
+        tick's [P]/[A] rows) into the engine's local clocks."""
+        self.prop_clk = (
+            self.prop_clk
+            + np.asarray(prop_rate, np.int64).reshape(-1, self.n_proposers)
+            .sum(axis=0)
+        ).astype(np.int32)
+        self.acc_clk = (
+            self.acc_clk
+            + np.asarray(acc_rate, np.int64).reshape(-1, self.n_acceptors)
+            .sum(axis=0)
+        ).astype(np.int32)
 
     # ------------------------------------------------------------ one tick
     def step(
@@ -277,15 +360,22 @@ class LeaseArrayEngine:
             if np.asarray(tick.delay).any() or np.asarray(tick.drop).any():
                 self._netplane_active = True
         self._check_pack_budget(
-            self.t + 1, int(np.asarray(tick.delay).max(initial=0))
+            self.t + 1,
+            int(np.asarray(tick.delay).max(initial=0)),
+            max(
+                int(np.asarray(tick.prop_rate).max(initial=0)),
+                int(np.asarray(tick.acc_rate).max(initial=0)),
+            ),
         )
         self.state, self.net, self.last_owner_count = lease_plane_tick(
             self.state, self.net, self.t, tick,
             majority=self.majority, lease_q4=self.lease_q4,
-            round_q4=self.round_q4, backend=self.backend,
+            round_q4=self.round_q4, guard_q4=self.guard_q4,
+            clk0=self._clk0(), backend=self.backend,
             sync=not self._netplane_active, window=self.window,
         )
         self.t += 1
+        self._advance_clocks(tick.prop_rate, tick.acc_rate)
         return np.asarray(owner_row(self.state))
 
     # ---------------------------------------------------------- validation
@@ -358,20 +448,26 @@ class LeaseArrayEngine:
             empty = np.zeros((0, self.n_cells), np.int32)
             return empty, empty.copy()
         self._check_pack_budget(
-            self.t + T, int(np.asarray(scenario.delay).max(initial=0))
+            self.t + T,
+            int(np.asarray(scenario.delay).max(initial=0)),
+            max(
+                int(np.asarray(scenario.prop_rate).max(initial=0)),
+                int(np.asarray(scenario.acc_rate).max(initial=0)),
+            ),
         )
         planes = {k: jnp.asarray(v) for k, v in scenario.planes.items()}
         n_dev = len(jax.devices())
         if n_dev > 1 and self.n_cells % n_dev != 0:
             n_dev = 1  # uneven cell split: stay on one device
         fn = _trace_fn(
-            self.majority, self.lease_q4, self.round_q4, self.backend, sync,
-            512, self.window, n_dev, tuple(planes),
+            self.majority, self.lease_q4, self.round_q4, self.guard_q4,
+            self.backend, sync, 512, self.window, n_dev, tuple(planes),
         )
         self.state, self.net, owners, counts = fn(
-            self.state, self.net, jnp.int32(self.t), planes
+            self.state, self.net, jnp.int32(self.t), self._clk0(), planes
         )
         self.t += int(T)
+        self._advance_clocks(scenario.prop_rate, scenario.acc_rate)
         self.last_owner_count = counts[-1]
         return np.asarray(owners), np.asarray(counts)
 
@@ -418,6 +514,17 @@ class LeaseArrayEngine:
         # model choice and the pack-budget check; don't pull it twice)
         dmax = int(np.asarray(stacked.planes["delay"]).max(initial=0))
         delayed = dmax > 0 or bool(np.asarray(stacked.planes["drop"]).any())
+        # all-DEFAULT_RATE rate planes are the in-graph default clock:
+        # don't ship [B, T, P]/[B, T, A] constants into the dispatch
+        # (ops._local_clock_planes derives the same readings bit-for-bit)
+        drop_rates = []
+        rmax = QUARTERS
+        for k in ("prop_rate", "acc_rate"):
+            plane = np.asarray(stacked.planes[k])
+            if plane.size == 0 or (plane == DEFAULT_RATE).all():
+                drop_rates.append(k)
+            else:
+                rmax = max(rmax, int(plane.max()))
         # in collect="owners" mode the [B, T, N] attempts/releases planes
         # are DONATED to the dispatch (XLA reuses their buffers for the
         # output cubes); copy those leaves when they are already device
@@ -425,6 +532,8 @@ class LeaseArrayEngine:
         donating = collect == "owners"
         cell_planes, rest_planes = {}, {}
         for k, v in stacked.planes.items():
+            if k in drop_rates:
+                continue
             arr = jnp.asarray(v)
             if k in ("attempts", "releases"):
                 cell_planes[k] = (
@@ -437,17 +546,17 @@ class LeaseArrayEngine:
             raise ValueError("sweep scenarios must have at least one tick")
         # a sweep is read-only: pick the model without flipping the engine
         sync = self._pick_model(netplane, delayed, mutate=False)
-        self._check_pack_budget(self.t + T, dmax)
+        self._check_pack_budget(self.t + T, dmax, rmax)
         n_dev = len(jax.devices())
         if n_dev > 1 and B % n_dev != 0:
             n_dev = 1  # uneven batch: fall back to single-device vmap
         fn = _sweep_fn(
-            self.majority, self.lease_q4, self.round_q4,
+            self.majority, self.lease_q4, self.round_q4, self.guard_q4,
             backend or self.backend, sync, 512, self.window, collect, n_dev,
         )
         out = fn(
-            self.state, self.net, jnp.int32(self.t), cell_planes,
-            rest_planes,
+            self.state, self.net, jnp.int32(self.t), self._clk0(),
+            cell_planes, rest_planes,
         )
         result = SweepResult(
             max_owner_count=np.asarray(out["max_owner_count"]),
@@ -473,11 +582,19 @@ class LeaseArrayEngine:
         return np.asarray(owner_row(self.state))
 
     def ticks_left(self) -> np.ndarray:
-        """Per cell: whole ticks of ownership remaining (0 if unowned)."""
+        """Per cell: whole LOCAL ticks of ownership remaining as the owner
+        sees it (0 if unowned). Owner expiries live in the owning
+        proposer's local time, so remaining time is measured against that
+        proposer's accumulated clock (= ``4t`` when nothing drifts)."""
         expiry = np.asarray(
             jnp.max(
                 jnp.where(self.state.owner_mask > 0, self.state.owner_expiry, 0),
                 axis=0,
             )
         )
-        return np.maximum(expiry - QUARTERS * self.t, 0) // QUARTERS
+        owners = np.asarray(owner_row(self.state))
+        clk = np.where(
+            owners == NO_PROPOSER, 0,
+            self.prop_clk[np.clip(owners, 0, self.n_proposers - 1)],
+        )
+        return np.maximum(expiry - clk, 0) // QUARTERS

@@ -22,6 +22,15 @@ block-locally (`netplane.legs_select`): the tiny ``[P, A]`` link matrix of
 the current tick is selected row-by-row in a compile-time P loop, so no
 gather indices (and no flattened ``[P*A, N]`` planes) ever touch HBM.
 
+Drifting clocks (§4) stream the same way: the per-tick ``[P, 1]``/
+``[A, 1]`` *absolute local-clock* columns (exclusive prefix sums of the
+scenario's rate planes, computed once in ops.py) ride the broadcast plane
+specs like ``acc_up``, so drifted node time needs NO extra carry — the
+deadline fields already resident in VMEM are simply minted from and
+compared against these columns (per-cell owner clocks via the
+compile-time P-loop ``state.clock_select``, the proposer discount
+``guard_q4`` a closure constant like ``lease_q4``).
+
 Layout: the acceptor (A) and proposer-bitmask axes ride on sublanes, the
 cell axis N on the 128-wide lane axis. All state is int32, all updates are
 `jnp.where` selects — pure VPU work, no MXU. ``backend="pallas_tpu"``
@@ -115,10 +124,10 @@ def _window_bounds(sc_ref, tw: int):
 def _sync_window_kernel(
     sc_ref,  # [2] int32 (t0, T) in SMEM
     *refs,
-    majority: int, lease_q4: int, n_proposers: int, tw: int,
+    majority: int, lease_q4: int, guard_q4: int, n_proposers: int, tw: int,
 ):
-    ins, outs = refs[: N_LEASE + 3], refs[N_LEASE + 3:]
-    att_ref, rel_ref, up_ref = ins[N_LEASE:]
+    ins, outs = refs[: N_LEASE + 5], refs[N_LEASE + 5:]
+    att_ref, rel_ref, up_ref, pclk_ref, aclk_ref = ins[N_LEASE:]
     st_refs = outs[:N_LEASE]
     own_ref, cnt_ref = outs[N_LEASE], outs[N_LEASE + 1]
     _init_resident(pl.program_id(1), ins[:N_LEASE], st_refs)
@@ -128,7 +137,9 @@ def _sync_window_kernel(
         lease, count = sync_tick_math(
             lease, t_base + tau,
             att_ref[tau], rel_ref[tau], up_ref[tau],
+            pclk_ref[tau], aclk_ref[tau],
             majority=majority, lease_q4=lease_q4, n_proposers=n_proposers,
+            guard_q4=guard_q4,
         )
         own_ref[tau] = lease[_OWN_ID]
         cnt_ref[tau] = count
@@ -144,11 +155,12 @@ def _sync_window_kernel(
 def _delayed_window_kernel(
     sc_ref,
     *refs,
-    majority: int, lease_q4: int, round_q4: int, n_proposers: int, tw: int,
+    majority: int, lease_q4: int, round_q4: int, guard_q4: int,
+    n_proposers: int, tw: int,
 ):
     n_state = N_LEASE + N_NET
-    ins, outs = refs[: n_state + 4], refs[n_state + 4:]
-    att_ref, rel_ref, up_ref, link_ref = ins[n_state:]
+    ins, outs = refs[: n_state + 6], refs[n_state + 6:]
+    att_ref, rel_ref, up_ref, pclk_ref, aclk_ref, link_ref = ins[n_state:]
     st_refs = outs[:n_state]
     own_ref, cnt_ref = outs[n_state], outs[n_state + 1]
     _init_resident(pl.program_id(1), ins[:n_state], st_refs)
@@ -158,9 +170,10 @@ def _delayed_window_kernel(
         lease, net = carry[:N_LEASE], carry[N_LEASE:]
         lease, net, count = delayed_tick_math(
             lease, net, t_base + tau,
-            att_ref[tau], rel_ref[tau], up_ref[tau], link_ref[tau],
+            att_ref[tau], rel_ref[tau], up_ref[tau],
+            pclk_ref[tau], aclk_ref[tau], link_ref[tau],
             majority=majority, lease_q4=lease_q4, round_q4=round_q4,
-            n_proposers=n_proposers, legs=legs_select,
+            n_proposers=n_proposers, guard_q4=guard_q4, legs=legs_select,
         )
         own_ref[tau] = lease[_OWN_ID]
         cnt_ref[tau] = count
@@ -190,10 +203,13 @@ def lease_window_sync_pallas(
     attempts,    # [T, N] int32
     releases,    # [T, N] int32
     acc_up,      # [T, A] bool/int32
+    pclk,        # [T, P] int32 proposer local clocks per tick
+    aclk,        # [T, A] int32 acceptor local clocks per tick
     *,
     majority: int,
     lease_q4: int,
     n_proposers: int,
+    guard_q4: int = None,
     block_n: int = 512,
     window: int = 16,
     interpret: bool = True,  # False on real TPUs
@@ -202,6 +218,7 @@ def lease_window_sync_pallas(
     multiple of ``block_n`` (ops.py pads). Returns
     (packed_state', owners [T, N], counts [T, N])."""
     A, N = packed.promised.shape
+    P = n_proposers
     T = attempts.shape[0]
     block_n = min(block_n, N)
     assert N % block_n == 0, "pad the cell axis to a block multiple (ops.py)"
@@ -211,11 +228,16 @@ def lease_window_sync_pallas(
 
     kernel = functools.partial(
         _sync_window_kernel,
-        majority=majority, lease_q4=lease_q4, n_proposers=n_proposers, tw=tw,
+        majority=majority, lease_q4=lease_q4,
+        guard_q4=lease_q4 if guard_q4 is None else guard_q4,
+        n_proposers=P, tw=tw,
     )
     state_specs = _state_specs(_LEASE_ROWS, A, block_n)
     row_plane = lambda p: _windowed(
         jnp.asarray(p, jnp.int32), n_windows, tw, 1, N
+    )
+    col_plane = lambda p, rows: _windowed(
+        jnp.asarray(p, jnp.int32), n_windows, tw, rows, 1
     )
     sds = jax.ShapeDtypeStruct
     state_shapes = [sds(a.shape, jnp.int32) for a in packed]
@@ -226,7 +248,11 @@ def lease_window_sync_pallas(
             [_scalar_spec(2)]
             + state_specs
             + [_cell_plane_spec(tw, 1, block_n)] * 2
-            + [_bcast_plane_spec(tw, A, 1)]
+            + [
+                _bcast_plane_spec(tw, A, 1),
+                _bcast_plane_spec(tw, P, 1),
+                _bcast_plane_spec(tw, A, 1),
+            ]
         ),
         out_specs=state_specs + [_cell_plane_spec(tw, 1, block_n)] * 2,
         out_shape=state_shapes + [sds((n_windows, tw, 1, N), jnp.int32)] * 2,
@@ -235,9 +261,8 @@ def lease_window_sync_pallas(
         jnp.stack([jnp.asarray(t0, jnp.int32), jnp.int32(T)]),
         *packed,
         row_plane(attempts), row_plane(releases),
-        _windowed(
-            jnp.asarray(acc_up).astype(jnp.int32), n_windows, tw, A, 1
-        ),
+        col_plane(jnp.asarray(acc_up).astype(jnp.int32), A),
+        col_plane(pclk, P), col_plane(aclk, A),
     )
     new_packed = PackedLeaseState(*outs[:N_LEASE])
     owners = outs[N_LEASE].reshape(n_windows * tw, N)[:T]
@@ -252,12 +277,15 @@ def lease_window_delayed_pallas(
     attempts,    # [T, N] int32
     releases,    # [T, N] int32
     acc_up,      # [T, A] bool/int32
+    pclk,        # [T, P] int32 proposer local clocks per tick
+    aclk,        # [T, A] int32 acceptor local clocks per tick
     link,        # [T, P, A] int32 fused link matrices (netplane.pack_link)
     *,
     majority: int,
     lease_q4: int,
     round_q4: int,
     n_proposers: int,
+    guard_q4: int = None,
     block_n: int = 512,
     window: int = 16,
     interpret: bool = True,  # False on real TPUs
@@ -277,11 +305,15 @@ def lease_window_delayed_pallas(
     kernel = functools.partial(
         _delayed_window_kernel,
         majority=majority, lease_q4=lease_q4, round_q4=round_q4,
+        guard_q4=lease_q4 if guard_q4 is None else guard_q4,
         n_proposers=P, tw=tw,
     )
     state_specs = _state_specs(_LEASE_ROWS + _NET_ROWS, A, block_n)
     row_plane = lambda p: _windowed(
         jnp.asarray(p, jnp.int32), n_windows, tw, 1, N
+    )
+    col_plane = lambda p, rows: _windowed(
+        jnp.asarray(p, jnp.int32), n_windows, tw, rows, 1
     )
     sds = jax.ShapeDtypeStruct
     state_shapes = [sds(a.shape, jnp.int32) for a in (*packed, *net)]
@@ -292,7 +324,12 @@ def lease_window_delayed_pallas(
             [_scalar_spec(2)]
             + state_specs
             + [_cell_plane_spec(tw, 1, block_n)] * 2
-            + [_bcast_plane_spec(tw, A, 1), _bcast_plane_spec(tw, P, A)]
+            + [
+                _bcast_plane_spec(tw, A, 1),
+                _bcast_plane_spec(tw, P, 1),
+                _bcast_plane_spec(tw, A, 1),
+                _bcast_plane_spec(tw, P, A),
+            ]
         ),
         out_specs=state_specs + [_cell_plane_spec(tw, 1, block_n)] * 2,
         out_shape=state_shapes + [sds((n_windows, tw, 1, N), jnp.int32)] * 2,
@@ -302,7 +339,8 @@ def lease_window_delayed_pallas(
         *packed,
         *net,
         row_plane(attempts), row_plane(releases),
-        _windowed(jnp.asarray(acc_up).astype(jnp.int32), n_windows, tw, A, 1),
+        col_plane(jnp.asarray(acc_up).astype(jnp.int32), A),
+        col_plane(pclk, P), col_plane(aclk, A),
         _windowed(jnp.asarray(link, jnp.int32), n_windows, tw, P, A),
     )
     n_state = N_LEASE + N_NET

@@ -72,6 +72,7 @@ from .state import (
     PACK_SHIFT,
     QUARTERS,
     ballot_proposer,
+    clock_select,
     pack_pair,
     packed_ballot,
     packed_q4,
@@ -117,8 +118,8 @@ class NetPlaneState(NamedTuple):
     rel: jax.Array           # [A, N] §7 release messages in flight (packed)
     rnd_ballot: jax.Array    # [1, N] open round's ballot (0 = no round)
     rnd_phase: jax.Array     # [1, N] R_IDLE / R_PREPARING / R_PROPOSING
-    rnd_expiry: jax.Array    # [1, N] quarter-tick the proposer's timer expires
-    rnd_deadline: jax.Array  # [1, N] quarter-tick the round is abandoned
+    rnd_expiry: jax.Array    # [1, N] LOCAL quarter-tick (round owner's clock) its guarded timer expires
+    rnd_deadline: jax.Array  # [1, N] LOCAL quarter-tick (round owner's clock) the round is abandoned
     rnd_open_bits: jax.Array  # [1, N] bitmask of acceptors whose open counted
     rnd_acc_bits: jax.Array   # [1, N] bitmask of acceptors whose accept counted
 
@@ -217,12 +218,15 @@ def delayed_tick_math(
     attempt,           # [1, bn] int32 proposer id attempting (-1 = none)
     release,           # [1, bn] int32 proposer id releasing (-1 = none)
     up,                # [A, 1|bn] int32 acceptor reachability this tick
+    pclk,              # [P, 1|bn] int32 proposer local clocks (quarter-ticks)
+    aclk,              # [A, 1|bn] int32 acceptor local clocks (quarter-ticks)
     link,              # [P, A] int32 fused link matrix (delay << 1 | drop)
     *,
     majority: int,
     lease_q4: int,     # lease timespan in quarter-ticks
     round_q4: int,     # timeout-and-abandon horizon in quarter-ticks
     n_proposers: int,
+    guard_q4: int = None,  # proposer's guarded own timer (default: no drift)
     legs=legs_gather,  # per-leg link strategy (select inside Pallas)
 ) -> tuple[tuple, tuple, jnp.ndarray]:
     """One tick of the delayed model on the packed layout. Returns
@@ -235,6 +239,15 @@ def delayed_tick_math(
     phases inside this same tick). ``owner_count`` is 0/1 from the single
     believed-owner row, plus 1 at any tick a win would overwrite a live
     *other* belief — the §4 alarm survives the packed owner plane.
+
+    Two time bases coexist (§4: no clock synchrony): message deliver-ats
+    are GLOBAL quarter-ticks (the network has no clock), while every
+    node-side timer — acceptor lease expiry, the proposer's guarded own
+    timer (``guard_q4``), the round-abandon horizon — is minted from and
+    compared against that node's LOCAL clock (``pclk``/``aclk``,
+    accumulated local quarter-ticks; per-cell owner/round rows read the
+    relevant proposer's entry via `state.clock_select`). All-``4t`` clock
+    planes reproduce the rate-1 engine bit-for-bit.
     """
     promised, acc_lease, own_id, ownp = lease
     (preq, presp, presp_pay, poreq, poresp, rel_s,
@@ -242,8 +255,10 @@ def delayed_tick_math(
      rnd_open_bits, rnd_acc_bits) = net
 
     P = n_proposers
+    if guard_q4 is None:
+        guard_q4 = lease_q4
     t4 = QUARTERS * t
-    live_min = (t4 + 1) << PACK_SHIFT  # packed live iff >= ; slot due iff <
+    live_min = (t4 + 1) << PACK_SHIFT  # GLOBAL time base: slot due iff <
     a_ids = jax.lax.broadcasted_iota(jnp.int32, promised.shape, 0)
     a_bit = 1 << a_ids                                             # [A, bn]
     up = up > 0
@@ -257,9 +272,10 @@ def delayed_tick_math(
             n = n + ((bits >> a) & 1)
         return n
 
-    # -- 1. expiry ---------------------------------------------------------
-    acc_lease = jnp.where(acc_lease >= live_min, acc_lease, 0)
-    own_live = ownp >= live_min
+    # -- 1. expiry (each node's own local clock) ---------------------------
+    acc_lease = jnp.where(acc_lease >= ((aclk + 1) << PACK_SHIFT), acc_lease, 0)
+    own_clk = clock_select(pclk, own_id)                           # [1, bn]
+    own_live = ownp >= ((own_clk + 1) << PACK_SHIFT)
     ownp = jnp.where(own_live, ownp, 0)
     own_id = jnp.where(own_live, own_id, NO_PROPOSER)
 
@@ -291,9 +307,13 @@ def delayed_tick_math(
     # overwrites whatever round was open (Proposer._start_round).
     rnd_prop = ballot_proposer(rnd_ballot, P)                       # [1, bn]
     rel_kills = (rnd_ballot > 0) & has_rel & (rnd_prop == rel)
-    timed_out = (rnd_ballot > 0) & (t4 >= rnd_deadline)
+    # the abandon timer is a LOCAL timer: it fires once the round OWNER's
+    # clock has advanced round_q4 local quarters past the attempt
+    rnd_clk = clock_select(pclk, rnd_prop)                          # [1, bn]
+    timed_out = (rnd_ballot > 0) & (rnd_clk >= rnd_deadline)
     att = attempt                                                   # [1, bn]
     has_att = att >= 0
+    att_clk = clock_select(pclk, att)                               # [1, bn]
     new_ballot = jnp.where(has_att, (t + 1) * P + att, 0)
     keep = (rnd_ballot > 0) & ~timed_out & ~rel_kills & ~has_att
     rnd_ballot = jnp.where(has_att, new_ballot, jnp.where(keep, rnd_ballot, 0))
@@ -302,7 +322,7 @@ def delayed_tick_math(
     )
     rnd_expiry = jnp.where(keep, rnd_expiry, 0)
     rnd_deadline = jnp.where(
-        has_att, t4 + round_q4, jnp.where(keep, rnd_deadline, 0)
+        has_att, att_clk + round_q4, jnp.where(keep, rnd_deadline, 0)
     )
     fresh = has_att | ~keep                                         # [1, bn]
     rnd_open_bits = jnp.where(fresh, 0, rnd_open_bits)
@@ -331,6 +351,7 @@ def delayed_tick_math(
     # -- 4c. deliver prepare responses at proposers (§3.3) -----------------
     presp_due = due(presp)
     rnd_prop = ballot_proposer(rnd_ballot, P)  # recompute: round changed above
+    rnd_clk = clock_select(pclk, rnd_prop)     # the round owner's clock
     match_prep = (
         presp_due & ((presp & PACK_MASK) == rnd_ballot)
         & (rnd_phase == R_PREPARING)
@@ -350,9 +371,10 @@ def delayed_tick_math(
         (rnd_ballot > 0) & (rnd_phase == R_PREPARING) & (opens >= majority)
     )
     # majority open: start OUR timer first, then broadcast the proposal —
-    # the ordering the §4 proof depends on
+    # the ordering the §4 proof depends on. The timer is the proposer's
+    # LOCAL guarded timespan (the T·(1-ε)/(1+ε) drift discount)
     rnd_phase = jnp.where(to_propose, R_PROPOSING, rnd_phase)
-    rnd_expiry = jnp.where(to_propose, t4 + lease_q4, rnd_expiry)
+    rnd_expiry = jnp.where(to_propose, rnd_clk + guard_q4, rnd_expiry)
     dq4, lost = legs(link, rnd_prop)
     send_poreq = to_propose & ~lost                                 # [A, bn]
     poreq = jnp.where(send_poreq, pack_slot(rnd_ballot, t4 + dq4), poreq)
@@ -363,7 +385,8 @@ def delayed_tick_math(
     poreq_due = due(poreq)
     poreq_b = poreq & PACK_MASK
     accept = poreq_due & up & (poreq_b >= promised)
-    acc_lease = jnp.where(accept, pack_pair(t4 + lease_q4, poreq_b), acc_lease)
+    # each accepting acceptor restarts the full-length timer on ITS clock
+    acc_lease = jnp.where(accept, pack_pair(aclk + lease_q4, poreq_b), acc_lease)
     dq4, lost = legs(link, ballot_proposer(poreq_b, P))
     send_poresp = accept & ~lost
     poresp = jnp.where(send_poresp, pack_slot(poreq_b, t4 + dq4), poresp)
@@ -380,10 +403,11 @@ def delayed_tick_math(
     )
     accs = votes(rnd_acc_bits)
     # the timer started in 4c bounds the claim (§3 step 5): accepts landing
-    # after our own lease window elapsed must not make us owner
+    # after our own (local, guarded) lease window elapsed must not make us
+    # owner — compared on the round owner's clock
     win = (
         (rnd_ballot > 0) & (rnd_phase == R_PROPOSING)
-        & (accs >= majority) & (rnd_expiry > t4)
+        & (accs >= majority) & (rnd_expiry > rnd_clk)
     )
     # a win that would overwrite a live OTHER belief is the §4 alarm
     viol = win & (ownp > 0) & (own_id != rnd_prop)

@@ -39,14 +39,47 @@ from .ref import link_matrix, sync_tick_math
 from .scenario import TickInputs, make_tick
 from .state import (
     NO_PROPOSER,
+    QUARTERS,
     LeaseArrayState,
     PackedLeaseState,
     check_pack_budget,
     pack_state,
+    rate1_clock,
     unpack_state,
 )
 
 BACKENDS = ("jnp", "pallas", "pallas_tpu")
+
+
+def _local_clock_planes(t0, T: int, clk0, planes: dict, n_proposers: int,
+                        n_acceptors: int):
+    """Absolute per-tick local-clock planes ``(pclk [T, P], aclk [T, A])``:
+    ``clk0`` (each node's accumulated local quarter-ticks at ``t0``) plus
+    the exclusive prefix sum of the scenario's rate planes. Clock readings
+    are a pure function of the rate planes, so drifted node time needs no
+    scan carry — the planes stream into the kernel like ``acc_up``.
+
+    ``clk0=None`` is the no-history default (``4·t0`` on every node: the
+    rate-1 reading, so legacy rate-free callers reproduce the old global
+    time base bit-for-bit); a rate plane missing from a hand-rolled dict
+    means the drift-free DEFAULT_RATE step."""
+    t0 = jnp.asarray(t0, jnp.int32)
+
+    def one(rate, rows: int, c0):
+        if c0 is None:
+            c0 = rate1_clock(t0, rows)
+        c0 = jnp.asarray(c0, jnp.int32)
+        if rate is None:
+            steps = QUARTERS * jnp.arange(T, dtype=jnp.int32)
+            return c0[None, :] + steps[:, None]
+        rate = jnp.asarray(rate, jnp.int32)
+        return c0[None, :] + jnp.cumsum(rate, axis=0) - rate
+
+    pc0, ac0 = (None, None) if clk0 is None else clk0
+    return (
+        one(planes.get("prop_rate"), n_proposers, pc0),
+        one(planes.get("acc_rate"), n_acceptors, ac0),
+    )
 
 
 def _pad_cells(arrays, multiple: int, pad_values):
@@ -94,11 +127,13 @@ def _window_scan_impl(
     state: LeaseArrayState,
     net,
     t0,
+    clk0,
     planes: dict,
     *,
     majority: int,
     lease_q4: int,
     round_q4: int,
+    guard_q4: int,
     backend: str,
     sync: bool,
     block_n: int,
@@ -106,7 +141,9 @@ def _window_scan_impl(
 ):
     """Shared unjitted body of the fused scan (also vmapped by
     ``engine.sweep``). ``planes`` is the Scenario plane dict ([T, ...]
-    arrays). Returns (state', net', owners [T, N], counts [T, N])."""
+    arrays); ``clk0`` the (prop [P], acc [A]) local-clock offsets at
+    ``t0`` (None = the rate-1 reading ``4·t0``). Returns
+    (state', net', owners [T, N], counts [T, N])."""
     if backend not in BACKENDS:
         raise ValueError(f"unknown lease-plane backend {backend!r}")
     P = state.n_proposers
@@ -116,6 +153,7 @@ def _window_scan_impl(
     releases = jnp.asarray(planes["releases"], jnp.int32)
     acc_up = jnp.asarray(planes["acc_up"], jnp.int32)
     T = attempts.shape[0]
+    pclk, aclk = _local_clock_planes(t0, T, clk0, planes, P, A)
     packed = pack_state(state)
     if not sync:
         link = pack_link(planes["delay"], planes["drop"])  # [T, P, A]
@@ -124,31 +162,35 @@ def _window_scan_impl(
         if sync:
             def body(carry, xs):
                 lease, t = carry
-                a, r, u = xs
+                a, r, u, pc, ac = xs
                 lease, count = sync_tick_math(
                     lease, t, a[None, :], r[None, :], u[:, None],
+                    pc[:, None], ac[:, None],
                     majority=majority, lease_q4=lease_q4, n_proposers=P,
+                    guard_q4=guard_q4,
                 )
                 return (lease, t + 1), (lease[2], count)
 
             (lease, _), (owners, counts) = jax.lax.scan(
-                body, (tuple(packed), t0), (attempts, releases, acc_up)
+                body, (tuple(packed), t0),
+                (attempts, releases, acc_up, pclk, aclk),
             )
             new_net = net
         else:
             def body(carry, xs):
                 lease, netc, t = carry
-                a, r, u, lk = xs
+                a, r, u, pc, ac, lk = xs
                 lease, netc, count = delayed_tick_math(
-                    lease, netc, t, a[None, :], r[None, :], u[:, None], lk,
+                    lease, netc, t, a[None, :], r[None, :], u[:, None],
+                    pc[:, None], ac[:, None], lk,
                     majority=majority, lease_q4=lease_q4, round_q4=round_q4,
-                    n_proposers=P,
+                    n_proposers=P, guard_q4=guard_q4,
                 )
                 return (lease, netc, t + 1), (lease[2], count)
 
             (lease, netc, _), (owners, counts) = jax.lax.scan(
                 body, (tuple(packed), tuple(net), t0),
-                (attempts, releases, acc_up, link),
+                (attempts, releases, acc_up, pclk, aclk, link),
             )
             new_net = NetPlaneState(*netc)
         new_state = unpack_state(PackedLeaseState(*lease), P)
@@ -161,18 +203,20 @@ def _window_scan_impl(
     )
     if sync:
         padded, owners, counts = lease_window_sync_pallas(
-            padded, t0, attempts_p, releases_p, acc_up,
+            padded, t0, attempts_p, releases_p, acc_up, pclk, aclk,
             majority=majority, lease_q4=lease_q4, n_proposers=P,
-            block_n=block_n, window=window, interpret=interpret,
+            guard_q4=guard_q4, block_n=block_n, window=window,
+            interpret=interpret,
         )
         new_net = net
     else:
         net_p = _pad_net(net, block_n)
         padded, net_p, owners, counts = lease_window_delayed_pallas(
-            padded, net_p, t0, attempts_p, releases_p, acc_up, link,
+            padded, net_p, t0, attempts_p, releases_p, acc_up, pclk, aclk,
+            link,
             majority=majority, lease_q4=lease_q4, round_q4=round_q4,
-            n_proposers=P, block_n=block_n, window=window,
-            interpret=interpret,
+            n_proposers=P, guard_q4=guard_q4, block_n=block_n,
+            window=window, interpret=interpret,
         )
         new_net = NetPlaneState(*(a[:, :n] for a in net_p))
     new_state = unpack_state(
@@ -184,24 +228,45 @@ def _window_scan_impl(
 _window_scan_jit = functools.partial(
     jax.jit,
     static_argnames=(
-        "majority", "lease_q4", "round_q4", "backend", "sync", "block_n",
-        "window",
+        "majority", "lease_q4", "round_q4", "guard_q4", "backend", "sync",
+        "block_n", "window",
     ),
 )(_window_scan_impl)
 
 
-def _guard_pack_budget(t0, n_ticks, planes, *, n_proposers, lease_q4, sync):
+def _guard_pack_budget(
+    t0, n_ticks, planes, *, n_proposers, lease_q4, sync, clk0=None
+):
     """Best-effort host-side overflow guard for the public entry points:
     a tick past ``state.max_pack_tick`` would silently corrupt the packed
     (deadline, ballot) fields, so refuse it here. Skipped when ``t0`` or
-    the delay plane is a tracer (a caller jitting over time owns the
-    check, like ``engine.step`` does)."""
+    any consulted plane is a tracer (a caller jitting over time owns the
+    check, like ``engine.step`` does). Fast clocks shrink the budget: the
+    rate planes' maximum step and any clock offsets already ahead of the
+    rate-1 reading are both charged."""
     delay = None if sync else planes.get("delay")
-    if isinstance(t0, jax.core.Tracer) or isinstance(delay, jax.core.Tracer):
+    consulted = (t0, delay, planes.get("prop_rate"), planes.get("acc_rate"))
+    if clk0 is not None:
+        consulted += tuple(clk0)
+    if any(isinstance(x, jax.core.Tracer) for x in consulted):
         return
+    t0 = int(np.asarray(t0))
     max_delay = 0 if delay is None else int(np.asarray(delay).max(initial=0))
+    max_rate = max(
+        (
+            int(np.asarray(planes[k]).max(initial=0))
+            for k in ("prop_rate", "acc_rate") if planes.get(k) is not None
+        ),
+        default=QUARTERS,
+    )
+    max_rate = max(max_rate, QUARTERS)
+    clk_slack = 0
+    if clk0 is not None:
+        clk_max = max(int(np.asarray(c).max(initial=0)) for c in clk0)
+        clk_slack = max(0, clk_max - max_rate * t0)
     check_pack_budget(
-        int(np.asarray(t0)) + n_ticks, n_proposers, lease_q4, max_delay
+        t0 + n_ticks, n_proposers, lease_q4, max_delay,
+        max_rate=max_rate, clk_slack=clk_slack,
     )
 
 
@@ -214,6 +279,8 @@ def lease_window_scan(
     majority: int,
     lease_q4: int,
     round_q4: int,
+    guard_q4: int = None,
+    clk0=None,
     backend: str = "jnp",
     sync: bool = False,
     block_n: int = 512,
@@ -225,17 +292,25 @@ def lease_window_scan(
     through untouched; the planes' delay/drop entries are ignored);
     ``sync=False`` runs the delayed in-flight model. ``window`` is the
     number of ticks each Pallas kernel window keeps VMEM-resident per
-    streamed plane slab (jnp ignores it). Returns
+    streamed plane slab (jnp ignores it). ``guard_q4`` is the proposer's
+    drift-guarded own timespan (`state.guarded_lease_q4`; default: the
+    full ``lease_q4``, the ε=0 case) and ``clk0`` the (prop [P], acc [A])
+    accumulated local-clock offsets at ``t0`` (default: the rate-1
+    reading ``4·t0`` on every node). Returns
     (new_state, new_net, owners [T, N], owner_counts [T, N]).
     """
+    if guard_q4 is None:
+        guard_q4 = lease_q4
     _guard_pack_budget(
         t0, int(jnp.shape(planes["attempts"])[0]), planes,
         n_proposers=state.n_proposers, lease_q4=lease_q4, sync=sync,
+        clk0=clk0,
     )
     return _window_scan_jit(
-        state, net, t0, planes,
+        state, net, t0, clk0, planes,
         majority=majority, lease_q4=lease_q4, round_q4=round_q4,
-        backend=backend, sync=sync, block_n=block_n, window=window,
+        guard_q4=guard_q4, backend=backend, sync=sync, block_n=block_n,
+        window=window,
     )
 
 
@@ -248,6 +323,8 @@ def lease_plane_tick(
     majority: int,
     lease_q4: int,
     round_q4: int,
+    guard_q4: int = None,
+    clk0=None,
     backend: str = "jnp",
     block_n: int = 512,
     sync: bool = False,
@@ -258,23 +335,44 @@ def lease_plane_tick(
     ``sync=True`` runs the zero-delay synchronous model (``net`` passes
     through untouched; the tick's delay/drop planes are ignored);
     ``sync=False`` runs the delayed in-flight model with the tick's
-    ``[P, A]`` link matrices. backend: "jnp" (reference), "pallas"
-    (kernel, interpret mode — runs anywhere), "pallas_tpu" (compiled
-    kernel, real TPUs). Returns (new_state, new_net, owner_count[N]) —
-    owner_count is the per-cell number of proposers who believe they own
-    it (>1 would be a §4 violation).
+    ``[P, A]`` link matrices. ``guard_q4``/``clk0`` are the drift
+    parameters (see :func:`lease_window_scan`); the tick's
+    ``prop_rate``/``acc_rate`` planes advance the clocks *after* this
+    tick's deadlines are evaluated, so a stateful caller carries
+    ``clk0 + rate`` into the next tick (``engine.step`` does). backend:
+    "jnp" (reference), "pallas" (kernel, interpret mode — runs anywhere),
+    "pallas_tpu" (compiled kernel, real TPUs). Returns
+    (new_state, new_net, owner_count[N]) — owner_count is the per-cell
+    number of proposers who believe they own it (>1 would be a §4
+    violation).
     """
+    if guard_q4 is None:
+        guard_q4 = lease_q4
+
+    def _default_rate(k, v):
+        # an all-DEFAULT_RATE rate plane is the in-graph default clock:
+        # omit it from the dispatch dict (one fewer host->device upload
+        # per step; the scan derives the same readings bit-for-bit)
+        return (
+            k in ("prop_rate", "acc_rate")
+            and not isinstance(v, jax.core.Tracer)
+            and bool((np.asarray(v) == QUARTERS).all())
+        )
+
     planes = {
         k: jnp.asarray(v)[None, ...] for k, v in tick.planes.items()
+        if not _default_rate(k, v)
     }
     _guard_pack_budget(
         t, 1, tick.planes,
         n_proposers=state.n_proposers, lease_q4=lease_q4, sync=sync,
+        clk0=clk0,
     )
     new_state, new_net, _, counts = _window_scan_jit(
-        state, net, t, planes,
+        state, net, t, clk0, planes,
         majority=majority, lease_q4=lease_q4, round_q4=round_q4,
-        backend=backend, sync=sync, block_n=block_n, window=window,
+        guard_q4=guard_q4, backend=backend, sync=sync, block_n=block_n,
+        window=window,
     )
     return new_state, new_net, counts[0]
 

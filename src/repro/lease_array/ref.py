@@ -37,6 +37,15 @@ This synchronous step is the zero-delay special case. The *delayed* model
 (`lease_step_delayed_ref`) threads the same protocol through the in-flight
 message plane (`netplane.py`): rounds span multiple ticks, responses arrive
 late, get lost, or land after the proposer abandoned the round.
+
+Clock drift (§4): every node-side deadline is minted from and compared
+against that node's LOCAL clock — the ``pclk``/``aclk`` columns fed per
+tick from the scenario's ``prop_rate``/``acc_rate`` planes (accumulated
+local quarter-ticks; `scenario.py`) — and the proposer's own timer runs
+the discounted ``guard_q4 = lease_q4·(1-ε)/(1+ε)`` (`state.
+guarded_lease_q4`), so at most one node believes it owns even when clocks
+tick at different (ε-bounded) rates. All-DEFAULT_RATE planes make every
+clock read ``4t`` and reproduce the rate-1 engine bit-for-bit.
 """
 from __future__ import annotations
 
@@ -48,12 +57,13 @@ from .state import (
     NO_PROPOSER,
     PACK_MASK,
     PACK_SHIFT,
-    QUARTERS,
     LeaseArrayState,
     PackedLeaseState,
     ballot_proposer,
+    clock_select,
     pack_pair,
     pack_state,
+    rate1_clock,
     unpack_state,
 )
 
@@ -64,24 +74,36 @@ def sync_tick_math(
     attempt,          # [1, bn] int32 proposer id attempting (-1 = none)
     release,          # [1, bn] int32 proposer id releasing (-1 = none)
     up,               # [A, 1|bn] int32 acceptor reachability this tick
+    pclk,             # [P, 1|bn] int32 proposer local clocks (quarter-ticks)
+    aclk,             # [A, 1|bn] int32 acceptor local clocks (quarter-ticks)
     *,
     majority: int,
     lease_q4: int,
     n_proposers: int,
+    guard_q4: int = None,  # proposer's guarded own timer (default: no drift)
 ) -> tuple[tuple, jnp.ndarray]:
     """One synchronous tick on the packed layout; returns
     (lease', owner_count[1, bn]). Shared by the jnp scan and the Pallas
     window kernel. ``owner_count`` is 0/1 plus 1 at any tick a win would
-    overwrite a live *other* belief — the §4 alarm (see netplane docs)."""
+    overwrite a live *other* belief — the §4 alarm (see netplane docs).
+
+    Node timers live in each node's LOCAL quarter-ticks (§4: clocks may
+    drift): an acceptor row's deadlines are minted from and compared
+    against ``aclk``'s row, the single owner row against the *owner's*
+    entry of ``pclk`` (`state.clock_select`). With every clock at the
+    drift-free DEFAULT_RATE the clock planes equal ``4t`` and the math is
+    bit-identical to the rate-1 engine. The proposer's own timer is the
+    drift-guard discount ``guard_q4`` (`state.guarded_lease_q4`)."""
     promised, acc_lease, own_id, ownp = lease
     P = n_proposers
-    t4 = QUARTERS * t
-    live_min = (t4 + 1) << PACK_SHIFT
+    if guard_q4 is None:
+        guard_q4 = lease_q4
     up = up > 0
 
-    # -- 1. expiry ---------------------------------------------------------
-    acc_lease = jnp.where(acc_lease >= live_min, acc_lease, 0)
-    own_live = ownp >= live_min
+    # -- 1. expiry (each node's own local clock) ---------------------------
+    acc_lease = jnp.where(acc_lease >= ((aclk + 1) << PACK_SHIFT), acc_lease, 0)
+    own_clk = clock_select(pclk, own_id)                           # [1, bn]
+    own_live = ownp >= ((own_clk + 1) << PACK_SHIFT)
     ownp = jnp.where(own_live, ownp, 0)
     own_id = jnp.where(own_live, own_id, NO_PROPOSER)
 
@@ -110,16 +132,27 @@ def sync_tick_math(
     promised = jnp.where(grant, ballot, promised)
 
     # -- 4. propose (§3.4) + proposer update -------------------------------
+    # acceptor timers restart on THEIR clocks; the winner's own belief runs
+    # the guarded (discounted) timespan on ITS clock — the §4 drift guard
     accept = grant & won
-    newpack = pack_pair(t4 + lease_q4, ballot)
-    acc_lease = jnp.where(accept, newpack, acc_lease)
+    acc_lease = jnp.where(accept, pack_pair(aclk + lease_q4, ballot), acc_lease)
+    att_clk = clock_select(pclk, att)                              # [1, bn]
     viol = won & (ownp > 0) & (own_id != att)  # would-be second believer
     own_id = jnp.where(won, att, own_id)
-    ownp = jnp.where(won, newpack, ownp)
+    ownp = jnp.where(won, pack_pair(att_clk + guard_q4, ballot), ownp)
 
     lease_out = (promised, acc_lease, own_id, ownp)
     owner_count = (ownp > 0).astype(jnp.int32) + viol.astype(jnp.int32)
     return lease_out, owner_count
+
+
+def _default_clocks(t, n_proposers: int, n_acceptors: int):
+    """Drift-free local-clock columns at tick ``t``: every node reads
+    ``4t`` local quarter-ticks — the rate-1 special case."""
+    return (
+        rate1_clock(t, n_proposers)[:, None],
+        rate1_clock(t, n_acceptors)[:, None],
+    )
 
 
 def lease_step_ref(
@@ -131,17 +164,25 @@ def lease_step_ref(
     *,
     majority: int,
     lease_q4: int,    # lease timespan in quarter-ticks
+    guard_q4: int = None,  # drift-guarded proposer timespan (default lease_q4)
+    pclk=None,        # [P] int32 proposer local clocks (default: 4t, no drift)
+    aclk=None,        # [A] int32 acceptor local clocks (default: 4t, no drift)
 ) -> tuple[LeaseArrayState, jnp.ndarray]:
     """Advance every cell one tick; returns (new_state, owner_count[N]).
     Public-format wrapper over `sync_tick_math` (packs, ticks, unpacks)."""
     P = state.n_proposers
+    dp, da = _default_clocks(t, P, state.n_acceptors)
     lease, count = sync_tick_math(
         tuple(pack_state(state)),
         t,
         jnp.asarray(attempt, jnp.int32)[None, :],
         jnp.asarray(release, jnp.int32)[None, :],
         jnp.asarray(acc_up).astype(jnp.int32)[:, None],
+        dp if pclk is None else jnp.asarray(pclk, jnp.int32).reshape(P, 1),
+        da if aclk is None else
+        jnp.asarray(aclk, jnp.int32).reshape(state.n_acceptors, 1),
         majority=majority, lease_q4=lease_q4, n_proposers=P,
+        guard_q4=guard_q4,
     )
     return unpack_state(PackedLeaseState(*lease), P), count.reshape(-1)
 
@@ -175,6 +216,9 @@ def lease_step_delayed_ref(
     majority: int,
     lease_q4: int,
     round_q4: int,    # timeout-and-abandon horizon in quarter-ticks
+    guard_q4: int = None,  # drift-guarded proposer timespan (default lease_q4)
+    pclk=None,        # [P] int32 proposer local clocks (default: 4t, no drift)
+    aclk=None,        # [A] int32 acceptor local clocks (default: 4t, no drift)
 ) -> tuple[LeaseArrayState, NetPlaneState, jnp.ndarray]:
     """One tick of the delayed (in-flight message) model; pure-jnp oracle.
 
@@ -183,14 +227,17 @@ def lease_step_delayed_ref(
     """
     A, N = state.highest_promised.shape
     P = state.n_proposers
+    dp, da = _default_clocks(t, P, A)
     lease, netp, count = delayed_tick_math(
         tuple(pack_state(state)), tuple(net), t,
         jnp.asarray(attempt, jnp.int32).reshape(1, N),
         jnp.asarray(release, jnp.int32).reshape(1, N),
         jnp.asarray(acc_up).astype(jnp.int32)[:, None],
+        dp if pclk is None else jnp.asarray(pclk, jnp.int32).reshape(P, 1),
+        da if aclk is None else jnp.asarray(aclk, jnp.int32).reshape(A, 1),
         pack_link(link_matrix(delay, P, A), link_matrix(drop, P, A)),
         majority=majority, lease_q4=lease_q4, round_q4=round_q4,
-        n_proposers=P,
+        n_proposers=P, guard_q4=guard_q4,
     )
     return (
         unpack_state(PackedLeaseState(*lease), P),

@@ -11,6 +11,8 @@ leading tick axis:
   acc_up    [T, A]     acceptor reachability (1 = reachable)
   delay     [T, P, A]  per-(proposer, acceptor) link delay in whole ticks
   drop      [T, P, A]  per-(proposer, acceptor) link loss mask
+  prop_rate [T, P]     proposer local-clock step (local quarter-ticks/tick)
+  acc_rate  [T, A]     acceptor local-clock step (local quarter-ticks/tick)
 
 ``delay``/``drop`` are *asymmetric link matrices*: every message leg sent
 at tick ``t`` on the link between proposer ``p`` and acceptor ``a`` —
@@ -18,6 +20,17 @@ request or response, either direction — takes ``delay[t, p, a]`` ticks
 and is lost iff ``drop[t, p, a]``. The symmetric per-acceptor ``[T, A]``
 schedules of earlier revisions are the P-broadcast special case and are
 accepted everywhere a plane is (see each spec's ``alts``).
+
+``prop_rate``/``acc_rate`` are the §4 clock-drift planes — the first
+planes added through ``register_plane`` after the registry shipped (the
+worked example in docs/scenario_api.md): each node's local clock advances
+by its rate-plane entry in *local quarter-ticks per global tick*
+(``state.DEFAULT_RATE`` = 4 = a drift-free rate-1.0 clock; 3 and 5 bound
+ε = 0.25). Node-side deadlines — acceptor lease timers, the proposer's
+guarded own timer, round-abandon horizons — are minted and compared in
+each node's accumulated local time; message deliver-ats stay global (the
+network has no clock). Rates are validated ≥ 1 (``min_value``): a rate-0
+clock would freeze every timer it owns.
 
 Adding a failure dimension (restart planes, clock-rate planes, …) is now
 "register a plane": ``register_plane`` extends the schema, ``Scenario``
@@ -35,7 +48,7 @@ from typing import Iterable, NamedTuple, Optional
 import jax
 import numpy as np
 
-from .state import NO_PROPOSER
+from .state import DEFAULT_RATE, NO_PROPOSER
 
 __all__ = [
     "PlaneSpec",
@@ -61,6 +74,8 @@ class PlaneSpec(NamedTuple):
     alts: tuple[tuple[str, ...], ...] = ()
     #: validated as proposer-id rows (-1 sentinel .. n_proposers - 1)
     proposer_ids: bool = False
+    #: entries below this raise at build/validate time (None = unchecked)
+    min_value: Optional[int] = None
 
 
 #: the plane registry — insertion order is the canonical plane order
@@ -75,11 +90,13 @@ def register_plane(
     *,
     alts: Iterable[Iterable[str]] = (),
     proposer_ids: bool = False,
+    min_value: Optional[int] = None,
 ) -> PlaneSpec:
     """Extend the scenario schema with a new named plane."""
     spec = PlaneSpec(
         name, tuple(dims), int(default), doc,
         tuple(tuple(a) for a in alts), proposer_ids,
+        None if min_value is None else int(min_value),
     )
     PLANES[name] = spec
     return spec
@@ -103,11 +120,22 @@ register_plane(
     "delay", ("P", "A"), 0,
     "per-(proposer, acceptor) link delay (whole ticks) for legs sent this tick",
     alts=(("A",),),
+    min_value=0,
 )
 register_plane(
     "drop", ("P", "A"), 0,
     "per-(proposer, acceptor) link loss mask for legs sent this tick",
     alts=(("A",),),
+)
+register_plane(
+    "prop_rate", ("P",), DEFAULT_RATE,
+    "proposer local-clock step this tick (local quarter-ticks; 4 = rate 1.0)",
+    min_value=1,
+)
+register_plane(
+    "acc_rate", ("A",), DEFAULT_RATE,
+    "acceptor local-clock step this tick (local quarter-ticks; 4 = rate 1.0)",
+    min_value=1,
 )
 
 
@@ -133,6 +161,23 @@ def validate_proposer_ids(arr, n_proposers: int) -> None:
 
 def _dim_sizes(n_cells: int, n_acceptors: int, n_proposers: int) -> dict[str, int]:
     return {"N": int(n_cells), "A": int(n_acceptors), "P": int(n_proposers)}
+
+
+def _check_min_value(spec: PlaneSpec, arr: np.ndarray, what: str) -> None:
+    """Registry-driven range floor: delays must be >= 0 (legs cannot land
+    in the past), clock rates >= 1 (a rate-0 clock freezes its timers)."""
+    if spec.min_value is None or arr.size == 0:
+        return
+    lo = int(arr.min())
+    if lo < spec.min_value:
+        kind = (
+            "negative entries" if spec.min_value == 0
+            else f"entries below {spec.min_value}"
+        )
+        raise ValueError(
+            f"{what} plane {spec.name!r} has {kind} (min {lo}); "
+            f"valid entries are >= {spec.min_value}"
+        )
 
 
 def _coerce_plane(
@@ -162,11 +207,7 @@ def _coerce_plane(
                 arr = np.broadcast_to(arr, shape).copy()
             if spec.proposer_ids:
                 validate_proposer_ids(arr, sizes["P"])
-            if spec.name == "delay" and arr.size and int(arr.min()) < 0:
-                raise ValueError(
-                    f"{what} plane 'delay' has negative entries "
-                    f"(min {int(arr.min())}); delays are whole ticks >= 0"
-                )
+            _check_min_value(spec, arr, what)
             return arr
     accepted = " or ".join(
         str(lead + tuple(sizes[d] for d in dims)) for dims in forms
@@ -227,6 +268,15 @@ class _PlaneBundle:
             or np.asarray(self.planes["drop"]).any()
         )
 
+    @property
+    def drifted(self) -> bool:
+        """True iff any clock-rate plane departs from the drift-free
+        DEFAULT_RATE step. Host-side only — not traceable."""
+        return bool(
+            (np.asarray(self.planes["prop_rate"]) != DEFAULT_RATE).any()
+            or (np.asarray(self.planes["acc_rate"]) != DEFAULT_RATE).any()
+        )
+
     def validate_for(
         self, *, n_cells: int, n_acceptors: int, n_proposers: int
     ) -> None:
@@ -251,11 +301,7 @@ class _PlaneBundle:
                 )
             if spec.proposer_ids:
                 validate_proposer_ids(arr, sizes["P"])
-            if name == "delay" and arr.size and int(arr.min()) < 0:
-                raise ValueError(
-                    f"{what} plane 'delay' has negative entries "
-                    f"(min {int(arr.min())}); delays are whole ticks >= 0"
-                )
+            _check_min_value(spec, arr, what)
 
     def __repr__(self) -> str:
         inner = ", ".join(

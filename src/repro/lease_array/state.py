@@ -38,6 +38,10 @@ import jax.numpy as jnp
 NO_PROPOSER = -1  # "no owner / no attempt" sentinel in proposer-id arrays
 QUARTERS = 4  # quarter-ticks per tick
 
+#: a drift-free local clock advances QUARTERS local quarter-ticks per global
+#: tick; a drifted node's rate plane holds its own integer step instead
+DEFAULT_RATE = QUARTERS
+
 PACK_SHIFT = 15  # low bits: ballot; high bits: a quarter-tick deadline
 PACK_MASK = (1 << PACK_SHIFT) - 1  # max packable ballot (32767)
 MAX_PACK_Q4 = (2**31 - 1) >> PACK_SHIFT  # max packable quarter-tick (65535)
@@ -49,9 +53,9 @@ class LeaseArrayState(NamedTuple):
     highest_promised: jax.Array  # [A, N] highest promised ballot (0 = none)
     accepted_ballot: jax.Array   # [A, N] ballot of the accepted proposal (0 = none)
     accepted_proposer: jax.Array  # [A, N] proposer id of the accepted lease (-1 = none)
-    lease_expiry: jax.Array      # [A, N] quarter-tick at which the accepted lease expires
+    lease_expiry: jax.Array      # [A, N] LOCAL quarter-tick (on acceptor a's clock) at which the accepted lease expires
     owner_mask: jax.Array        # [P, N] 1 where proposer p believes it owns cell n
-    owner_expiry: jax.Array      # [P, N] quarter-tick at which that belief expires
+    owner_expiry: jax.Array      # [P, N] LOCAL quarter-tick (on proposer p's clock) at which that belief expires
     owner_ballot: jax.Array      # [P, N] ballot the ownership was won under
 
     @property
@@ -86,6 +90,54 @@ def lease_quarters(lease_ticks: int) -> int:
     return QUARTERS * int(lease_ticks) + 1
 
 
+def guarded_lease_q4(lease_q4: int, drift_eps: float) -> int:
+    """The §4 drift guard on the packed time base: the proposer's own lease
+    timer, discounted to T·(1-ε)/(1+ε) (DESIGN.md; `core.proposer.
+    Proposer._guarded_timespan` is the float original) and floored to a
+    whole local quarter-tick. Flooring only ever *shortens* the proposer's
+    belief, so the discount stays safe after quantization: with every
+    clock rate within [1-ε, 1+ε], a slow proposer's guarded timer still
+    ends (in global time) before a fast acceptor's full timer does.
+    ε = 0 is the exact no-drift degenerate case (no discount at all)."""
+    if not 0.0 <= drift_eps < 1.0:
+        raise ValueError(f"drift_eps must be in [0, 1); got {drift_eps}")
+    if drift_eps == 0.0:
+        return int(lease_q4)
+    guarded = int(lease_q4 * (1.0 - drift_eps) / (1.0 + drift_eps))
+    if guarded < 1:
+        raise ValueError(
+            f"the drift discount collapses a {lease_q4}-quarter lease to "
+            f"{guarded} quarter-ticks at eps={drift_eps}: the proposer "
+            f"could never believe it owns; lengthen the lease or lower eps"
+        )
+    return guarded
+
+
+def rate1_clock(t, rows: int) -> jax.Array:
+    """``[rows]`` int32: the drift-free local-clock reading ``4t`` on
+    every node — THE default-clock definition, shared by the fused scan's
+    clk0 fallback (ops), the per-tick scanner's carry seed (engine) and
+    the public per-tick wrappers (ref)."""
+    t4 = QUARTERS * jnp.asarray(t, jnp.int32)
+    return jnp.broadcast_to(t4, (rows,))
+
+
+def clock_select(clk, ids):
+    """Per-cell local-clock gather: ``clk`` is a per-proposer clock column
+    ``[P, 1]`` (local quarter-ticks), ``ids`` a proposer-id row ``[1, bn]``;
+    returns each cell's named proposer's clock reading ``[1, bn]``.
+
+    A compile-time P-loop of selects — block-local, no dynamic gather, so
+    the SAME code runs inside the Pallas window kernel and under XLA (cf.
+    ``netplane.legs_select``). Out-of-range ids (the NO_PROPOSER sentinel)
+    read 0; every use is gated by its own ballot/owner mask."""
+    P = clk.shape[0]
+    v = jnp.zeros(ids.shape, clk.dtype)
+    for p in range(P):
+        v = jnp.where(ids == p, clk[p], v)
+    return v
+
+
 def ballot_of(t, proposer, n_proposers: int):
     """Globally unique ballot for an attempt by ``proposer`` at tick ``t``."""
     return (t + 1) * n_proposers + proposer
@@ -115,28 +167,49 @@ def packed_q4(packed):
     return packed >> PACK_SHIFT
 
 
-def max_pack_tick(n_proposers: int, lease_q4: int, max_delay_ticks: int = 0) -> int:
+def max_pack_tick(
+    n_proposers: int,
+    lease_q4: int,
+    max_delay_ticks: int = 0,
+    max_rate: int = QUARTERS,
+    clk_slack: int = 0,
+) -> int:
     """Highest tick the packed layout can represent: the last attempt's
     ballot must fit in PACK_SHIFT bits and the latest deadline any tick can
-    mint (send at t4 + delay, then a full lease) in the remaining bits."""
+    mint (send at t4 + delay, then a full lease) in the remaining bits.
+
+    With drifting clocks node deadlines live in *local* quarter-ticks,
+    which a fast clock mints at up to ``max_rate`` per tick; ``clk_slack``
+    is how far ahead of ``max_rate * t`` an engine's accumulated clocks
+    already run (0 for a fresh engine)."""
     by_ballot = (PACK_MASK - (n_proposers - 1)) // n_proposers - 1
-    by_q4 = (MAX_PACK_Q4 - lease_q4 - QUARTERS * max_delay_ticks) // QUARTERS
+    rate = max(int(max_rate), QUARTERS)  # deliver-at slots tick at QUARTERS
+    by_q4 = (
+        MAX_PACK_Q4 - lease_q4 - QUARTERS * max_delay_ticks - int(clk_slack)
+    ) // rate
     return min(by_ballot, by_q4)
 
 
 def check_pack_budget(
-    t_end: int, n_proposers: int, lease_q4: int, max_delay_ticks: int = 0
+    t_end: int,
+    n_proposers: int,
+    lease_q4: int,
+    max_delay_ticks: int = 0,
+    max_rate: int = QUARTERS,
+    clk_slack: int = 0,
 ) -> None:
     """Raise if ticking through ``t_end`` would overflow the packed layout
     (a ballot or deadline minted past :func:`max_pack_tick` silently
     corrupts neighbouring fields — never let one form)."""
-    limit = max_pack_tick(n_proposers, lease_q4, max_delay_ticks)
+    limit = max_pack_tick(
+        n_proposers, lease_q4, max_delay_ticks, max_rate, clk_slack
+    )
     if t_end > limit:
         raise ValueError(
             f"tick {t_end} exceeds the packed int32 layout's budget "
             f"({limit} ticks at P={n_proposers}, lease_q4={lease_q4}, "
-            f"max delay {max_delay_ticks}); split the workload across "
-            f"engines or shorten the trace"
+            f"max delay {max_delay_ticks}, max clock rate {max_rate}/4); "
+            f"split the workload across engines or shorten the trace"
         )
 
 

@@ -49,7 +49,21 @@ Exact-match construction (why this works, not just approximately):
   - acceptor downtime is *network* unreachability: messages drop, local
     expiry timers keep running — in both engines. Down acceptors drop
     requests at *delivery* time (a request in flight toward an acceptor
-    that goes down is lost), exactly like ``Network.set_down``.
+    that goes down is lost), exactly like ``Network.set_down``;
+  - clock drift (§4) is pinned the same way: a trace's constant per-node
+    ``prop_rate``/``acc_rate`` vectors (integer local quarter-ticks per
+    global tick; 4 = rate 1.0) become the event sim's ``NodeClock`` rates
+    ``r/4``, so a node's T-local-second timer spans ``4T/r`` global
+    seconds — exactly the tick at which the array plane's accumulated
+    local clock passes the same local deadline. Every drifted timer lands
+    at a fraction ``m/r`` into a tick: with ``r <= MAX_REFEREE_RATE`` a
+    nonzero fraction clears every sampling epsilon, and the ``m = 0``
+    tie (timer at the exact delivery instant) fires first by scheduler
+    insertion order — matching the array tick's expiries-first step
+    order. The proposer's §4 drift-guard discount is pinned to the array
+    plane's floor-quantized ``guarded_lease_q4`` (the two engines'
+    discounts agree to the quarter-tick; a float-exact dyadic local
+    timespan), so both believe for identical local spans.
 """
 from __future__ import annotations
 
@@ -69,7 +83,15 @@ from ..core.messages import (
 )
 from ..sim.network import NetConfig
 from .scenario import PLANES, Scenario, _coerce_plane, _dim_sizes
-from .state import NO_PROPOSER
+from .state import DEFAULT_RATE, NO_PROPOSER, guarded_lease_q4, lease_quarters
+
+#: drifted clock-rate steps the referee can replay exactly: a node at rate
+#: ``r`` quarter-ticks per tick places every timer landing at a fraction
+#: ``m/r`` into a tick; with r <= 9 any nonzero fraction is >= 1/9, clear
+#: of the DELIVER_EPS/TICK_EPS sampling offsets below (m/r == 0 ties are
+#: resolved by the scheduler's insertion-order heap exactly like the array
+#: step's expiries-before-deliveries order). See the drift notes below.
+MAX_REFEREE_RATE = 9
 
 TICK_EPS = 0.1  # sample offset into a tick; < 0.25 so no expiry slips in
 DELIVER_EPS = 0.05  # phase messages land here within their delivery tick
@@ -100,6 +122,13 @@ class Trace:
     delay: Optional[np.ndarray] = None
     drop: Optional[np.ndarray] = None   # [T, P, A] or [T, A] bool: per-leg loss
     round_ticks: int = 1  # proposer abandons a round after this many ticks
+    #: constant per-node clock-rate steps (local quarter-ticks per global
+    #: tick; 4 = rate 1.0). Constant-in-time because the event sim's
+    #: NodeClock has one rate per node; the array plane itself accepts
+    #: per-tick [T, P]/[T, A] rate planes (property tests use them).
+    prop_rate: Optional[np.ndarray] = None  # [P] int
+    acc_rate: Optional[np.ndarray] = None   # [A] int
+    drift_eps: float = 0.0  # ε the proposers' drift guard assumes
 
     @property
     def n_ticks(self) -> int:
@@ -113,9 +142,38 @@ class Trace:
             or (self.drop is not None and self.drop.any())
         )
 
+    @property
+    def drifted(self) -> bool:
+        """True if any node's clock departs from the drift-free rate."""
+        return bool(
+            (self.prop_rate is not None
+             and (self.prop_rate != DEFAULT_RATE).any())
+            or (self.acc_rate is not None
+                and (self.acc_rate != DEFAULT_RATE).any())
+        )
+
+    def rate_planes(self) -> tuple[np.ndarray, np.ndarray]:
+        """The constant per-node rates as [T, P]/[T, A] scenario planes."""
+        T = self.n_ticks
+        pr = (
+            np.full(self.n_proposers, DEFAULT_RATE, np.int32)
+            if self.prop_rate is None
+            else np.asarray(self.prop_rate, np.int32)
+        )
+        ar = (
+            np.full(self.n_acceptors, DEFAULT_RATE, np.int32)
+            if self.acc_rate is None
+            else np.asarray(self.acc_rate, np.int32)
+        )
+        return (
+            np.broadcast_to(pr[None, :], (T, self.n_proposers)).copy(),
+            np.broadcast_to(ar[None, :], (T, self.n_acceptors)).copy(),
+        )
+
     def scenario(self) -> Scenario:
         """The trace's fault planes as one declarative Scenario pytree
         (defaulted, validated, [T, A] forms broadcast to [T, P, A])."""
+        prop_rate, acc_rate = self.rate_planes()
         return Scenario.build(
             self.n_ticks,
             n_cells=self.n_cells,
@@ -126,6 +184,8 @@ class Trace:
             acc_up=self.acc_up,
             delay=self.delay,
             drop=self.drop,
+            prop_rate=prop_rate,
+            acc_rate=acc_rate,
         )
 
     def link_planes(self) -> tuple[np.ndarray, np.ndarray]:
@@ -154,6 +214,7 @@ def random_trace(
     p_drop: float = 0.0,
     asymmetric: bool = False,
     round_ticks: Optional[int] = None,
+    drift_eps: float = 0.0,
 ) -> Trace:
     """Randomized trace: per (tick, cell) at most one attempting proposer
     (the no-same-instant-race construction above); releases name a random
@@ -173,8 +234,20 @@ def random_trace(
     slot-isolation construction above). ``round_ticks`` defaults to
     ``max_delay_ticks + 1`` so slow rounds genuinely get abandoned and
     responses genuinely arrive late.
+
+    With ``drift_eps > 0`` every node also gets a constant drifted clock:
+    integer rate steps drawn uniformly from ``[⌈4(1-ε)⌉, ⌊4(1+ε)⌋]``
+    local quarter-ticks per tick (ε = 0.25 → {3, 4, 5}), capped at
+    ``MAX_REFEREE_RATE`` so the event-sim replay stays exact, and the
+    trace records ε for the proposers' §4 guard discount.
     """
     rng = np.random.default_rng(seed)
+    prop_rate = acc_rate = None
+    if drift_eps > 0.0:
+        lo = max(1, int(np.ceil(DEFAULT_RATE * (1.0 - drift_eps))))
+        hi = min(MAX_REFEREE_RATE, int(DEFAULT_RATE * (1.0 + drift_eps)))
+        prop_rate = rng.integers(lo, hi + 1, n_proposers).astype(np.int32)
+        acc_rate = rng.integers(lo, hi + 1, n_acceptors).astype(np.int32)
     attempts = np.where(
         rng.random((n_ticks, n_cells)) < p_attempt,
         rng.integers(0, n_proposers, (n_ticks, n_cells)),
@@ -219,6 +292,7 @@ def random_trace(
         n_cells, n_acceptors, n_proposers, lease_ticks,
         attempts, releases, acc_up,
         delay=delay, drop=drop, round_ticks=int(round_ticks),
+        prop_rate=prop_rate, acc_rate=acc_rate, drift_eps=float(drift_eps),
     )
 
 
@@ -238,6 +312,7 @@ def replay_array(trace: Trace, *, backend: str = "jnp", netplane: Optional[bool]
         n_proposers=trace.n_proposers,
         lease_ticks=trace.lease_ticks,
         round_ticks=trace.round_ticks,
+        drift_eps=trace.drift_eps,
         backend=backend,
     )
     return eng.run_trace(trace.scenario(), netplane=netplane)
@@ -289,23 +364,79 @@ def replay_event_sim(trace: Trace, *, strict_monitor: bool = True) -> np.ndarray
     timing pinned to the trace's delay/drop planes). The trace is the only
     source of timing: renewal is disabled, autonomous retries are quiesced
     after every tick, and rounds are abandoned by the round timer exactly
-    ``round_ticks`` ticks after they start."""
+    ``round_ticks`` ticks after they start.
+
+    Drift: the trace's per-node rate steps become ``NodeClock`` rates
+    (``r/4`` local seconds per global second) so every local timer — the
+    acceptors' lease expiries, the proposers' round-abandon horizons and
+    guarded own timers — stretches or shrinks in global time exactly as
+    the array plane's accumulated local clocks do (see the construction
+    notes above). The proposers' drift-guard discount is pinned to the
+    array's floor-quantized ``guarded_lease_q4`` local quarters — the
+    cross-engine discount regression test asserts the two arithmetics
+    agree to the quarter-tick, making this a timing pin, not a semantic
+    change."""
+    for name, rates in (("prop_rate", trace.prop_rate),
+                        ("acc_rate", trace.acc_rate)):
+        if rates is not None and np.asarray(rates).size:
+            lo, hi = int(np.min(rates)), int(np.max(rates))
+            if lo < 1 or hi > MAX_REFEREE_RATE:
+                raise ValueError(
+                    f"trace {name} entries must lie in "
+                    f"[1, {MAX_REFEREE_RATE}] for an exact event-sim "
+                    f"replay; got [{lo}, {hi}]"
+                )
     cfg = CellConfig(
         n_acceptors=trace.n_acceptors,
         max_lease_time=trace.lease_ticks + 10.0,
         lease_timespan=trace.lease_ticks + 0.25,
         round_timeout=trace.round_ticks + ABANDON_EPS,
+        clock_drift_bound=trace.drift_eps,
+        drift_guard=trace.drift_eps > 0.0,
     )
+    acc_base = 1000  # build_cell's detached-acceptor node-id offset
+    clock_rates = {}
+    if trace.prop_rate is not None:
+        clock_rates.update(
+            (p, float(r) / DEFAULT_RATE)
+            for p, r in enumerate(trace.prop_rate)
+        )
+    if trace.acc_rate is not None:
+        clock_rates.update(
+            (acc_base + a, float(r) / DEFAULT_RATE)
+            for a, r in enumerate(trace.acc_rate)
+        )
     cell = build_cell(
         cfg,
         n_proposers=trace.n_proposers,
         seed=0,
         net=NetConfig(delay_min=0.0, delay_max=0.0),
+        clock_rates=clock_rates,
         strict_monitor=strict_monitor,
         combined_roles=False,
     )
     acc_addrs = [n.addr for n in cell.nodes if n.acceptor is not None]
     props = {n.node_id: n.proposer for n in cell.nodes if n.proposer is not None}
+    # Pin the §4 guard to the array plane's quarter-tick quantization: the
+    # proposer's own timer runs guard_q4 local quarters. The timer STARTS
+    # at the majority-open delivery instant (tick + DELIVER_EPS), so its
+    # pinned duration is shortened by DELIVER_EPS *global* seconds
+    # (= DELIVER_EPS·r/4 local): the belief then ends at global
+    # ``u + guard_q4/r`` exactly — mid-tick when guard_q4/r has a
+    # fractional part (>= 1/MAX_REFEREE_RATE > TICK_EPS, so sampling and
+    # boundary releases see the same liveness the array does), and at the
+    # tick boundary when it divides evenly, where the earlier-scheduled
+    # timer fires before that tick's releases/attempts/deliveries — the
+    # array step's expiries-first order.
+    guard_q4 = guarded_lease_q4(
+        lease_quarters(trace.lease_ticks), trace.drift_eps
+    )
+    for pid, p in props.items():
+        r = (
+            DEFAULT_RATE if trace.prop_rate is None
+            else int(trace.prop_rate[pid])
+        )
+        p._guarded_timespan = lambda t, g=(guard_q4 - DELIVER_EPS * r) / 4.0: g
     _pin_network_to_trace(
         cell.env.network, trace,
         {addr: a for a, addr in enumerate(acc_addrs)},

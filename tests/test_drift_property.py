@@ -1,0 +1,268 @@
+"""§4 chaos property suite for drifting clocks: with every clock rate
+inside the ε bound and proposers discounting their own timer by
+T·(1-ε)/(1+ε), at most one node believes it holds the lease at any tick —
+under arbitrary per-tick rate churn × asymmetric link delay × drop ×
+release × outage chaos.
+
+Three profiles:
+  - a fast seeded profile that always runs in ``make test``;
+  - a hypothesis-driven profile (``requirements-dev.txt``; skipped when
+    hypothesis is absent) whose strategies draw the scenario *dimensions*
+    directly, so counterexamples shrink to minimal tick counts and
+    geometries;
+  - a deep hypothesis profile under ``@slow`` for ``make test-all`` / the
+    main-branch CI job.
+
+Also here: the negative control proving the alarm isn't vacuous (no
+guard + drifted clocks → a constructible violation the §4 owner-count
+alarm reports as 2), the cross-engine discount regression pinning the
+array's quantized guard to ``core/proposer.py``'s float arithmetic, and
+the 1k-scenario drift × delay × drop ``engine.sweep`` acceptance check.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import CellConfig
+from repro.core.proposer import Proposer
+from repro.lease_array import (
+    DEFAULT_RATE,
+    NO_PROPOSER,
+    LeaseArrayEngine,
+    Scenario,
+    guarded_lease_q4,
+    lease_quarters,
+    random_trace,
+)
+
+NA = NO_PROPOSER
+
+
+def _chaos_scenario(rng, n_ticks, n_cells, n_acc, n_prop, eps):
+    """Unconstrained chaos: per-tick-varying rate planes inside the ε
+    band (the array plane is more general than the constant-rate referee),
+    asymmetric delays, drops, releases, outages. No slot-isolation
+    spacing — overwritten slots only LOSE messages, and PaxosLease is
+    safe under arbitrary loss."""
+    lo = max(1, int(np.ceil(DEFAULT_RATE * (1 - eps))))
+    hi = int(DEFAULT_RATE * (1 + eps))
+    return Scenario.build(
+        n_ticks, n_cells=n_cells, n_acceptors=n_acc, n_proposers=n_prop,
+        attempts=np.where(rng.random((n_ticks, n_cells)) < 0.7,
+                          rng.integers(0, n_prop, (n_ticks, n_cells)), NA),
+        releases=np.where(rng.random((n_ticks, n_cells)) < 0.15,
+                          rng.integers(0, n_prop, (n_ticks, n_cells)), NA),
+        acc_up=rng.random((n_ticks, n_acc)) > 0.1,
+        delay=rng.integers(0, 4, (n_ticks, n_prop, n_acc)),
+        drop=rng.random((n_ticks, n_prop, n_acc)) < 0.15,
+        prop_rate=rng.integers(lo, hi + 1, (n_ticks, n_prop)),
+        acc_rate=rng.integers(lo, hi + 1, (n_ticks, n_acc)),
+    )
+
+
+def _invariant_holds(
+    seed: int, n_ticks: int = 60, n_acc: int = None, n_prop: int = None,
+    eps: float = 0.25,
+) -> None:
+    rng = np.random.default_rng(seed)
+    n_cells = 5
+    n_acc = int(rng.integers(1, 6)) if n_acc is None else n_acc
+    n_prop = int(rng.integers(2, 5)) if n_prop is None else n_prop
+    sc = _chaos_scenario(rng, n_ticks, n_cells, n_acc, n_prop, eps)
+    eng = LeaseArrayEngine(
+        n_cells, n_acceptors=n_acc, n_proposers=n_prop,
+        lease_ticks=int(rng.integers(1, 7)),
+        round_ticks=int(rng.integers(1, 5)),
+        drift_eps=eps,
+    )
+    _, counts = eng.run_trace(sc, netplane=True)
+    assert counts.shape == (n_ticks, n_cells)
+    assert int(counts.max()) <= 1, (
+        f"§4 violated under drift chaos seed {seed} "
+        f"(A={n_acc}, P={n_prop}, eps={eps})"
+    )
+
+
+# ------------------------------------------------------- fast seeded profile
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("eps", [0.25, 0.5])
+def test_at_most_one_owner_under_drift_chaos(seed, eps):
+    _invariant_holds(seed, eps=eps)
+
+
+# ------------------------------------------------ hypothesis-driven profiles
+def _hypothesis_prop(max_examples: int):
+    hyp = pytest.importorskip(
+        "hypothesis", reason="property tests need hypothesis "
+        "(requirements-dev.txt)"
+    )
+    from hypothesis import strategies as st
+
+    @hyp.settings(max_examples=max_examples, deadline=None)
+    @hyp.given(
+        seed=st.integers(min_value=0, max_value=2**32 - 1),
+        n_ticks=st.integers(min_value=1, max_value=48),
+        n_acc=st.integers(min_value=1, max_value=5),
+        n_prop=st.integers(min_value=2, max_value=4),
+        eps=st.sampled_from([0.25, 0.5]),
+    )
+    def prop(seed, n_ticks, n_acc, n_prop, eps):
+        # dimensions are drawn directly (not derived from the seed), so a
+        # failing example shrinks toward minimal ticks and geometry
+        _invariant_holds(seed, n_ticks=n_ticks, n_acc=n_acc,
+                         n_prop=n_prop, eps=eps)
+
+    prop()
+
+
+def test_drift_chaos_hypothesis_property():
+    """Fast bounded hypothesis profile (runs in ``make test``)."""
+    _hypothesis_prop(max_examples=20)
+
+
+@pytest.mark.slow
+def test_drift_chaos_hypothesis_property_deep():
+    """Deep profile for ``make test-all`` / main-branch CI."""
+    _hypothesis_prop(max_examples=200)
+
+
+# ------------------------------------------------------ the negative control
+def _guard_scenario(n_ticks=12, n_cells=4):
+    """Slow proposer 0 (rate 3) against fast acceptors (rate 5): without
+    the discount its belief outlives the acceptors' timers, so proposer
+    1's win at tick 4 overlaps it."""
+    attempts = np.full((n_ticks, n_cells), NA, np.int32)
+    attempts[1, :] = 0
+    attempts[4, :] = 1
+    prop_rate = np.full((n_ticks, 2), DEFAULT_RATE, np.int32)
+    prop_rate[:, 0] = 3
+    acc_rate = np.full((n_ticks, 3), 5, np.int32)
+    return Scenario.build(
+        n_ticks, n_cells=n_cells, n_acceptors=3, n_proposers=2,
+        attempts=attempts, prop_rate=prop_rate, acc_rate=acc_rate,
+    )
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_drift_without_guard_trips_the_alarm(backend):
+    """ε lied about (engine assumes 0, clocks drift anyway): the §4
+    owner-count alarm must report the second believer — the array-plane
+    analogue of tests/test_drift.py's event-sim violation."""
+    sc = _guard_scenario()
+    eng = LeaseArrayEngine(
+        4, n_acceptors=3, n_proposers=2, lease_ticks=3, backend=backend,
+    )
+    _, counts = eng.run_trace(sc)
+    assert int(counts.max()) == 2, "expected a §4 alarm without the guard"
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_drift_guard_restores_invariant(backend):
+    """The same scenario with the honest ε=0.25 discount: no overlap."""
+    sc = _guard_scenario()
+    eng = LeaseArrayEngine(
+        4, n_acceptors=3, n_proposers=2, lease_ticks=3, drift_eps=0.25,
+        backend=backend,
+    )
+    _, counts = eng.run_trace(sc)
+    assert int(counts.max()) <= 1
+
+
+# ------------------------------------------- cross-engine discount regression
+def _core_guarded_timespan(lease_ticks: int, eps: float) -> float:
+    cfg = CellConfig(
+        n_acceptors=3, max_lease_time=10 * lease_ticks + 60.0,
+        lease_timespan=lease_ticks + 0.25,
+        clock_drift_bound=eps, drift_guard=eps > 0,
+    )
+    p = Proposer(
+        0, [], cfg,
+        set_timer=lambda d, fn: None, send=lambda dst, msg: None,
+        random_backoff=lambda lo, hi: lo,
+    )
+    return p._guarded_timespan(cfg.lease_timespan)
+
+
+@pytest.mark.parametrize("lease_ticks", [1, 2, 3, 4, 8, 16])
+@pytest.mark.parametrize("eps", [0.0, 0.1, 0.25, 1 / 3, 0.5])
+def test_core_and_array_discounts_agree_to_the_quarter_tick(lease_ticks, eps):
+    """core/proposer.py's float T·(1-ε)/(1+ε) and the array plane's
+    floor-quantized guard_q4, computed from the same (T, ε), must agree
+    to the quarter-tick — exactly in the ε=0 degenerate case."""
+    lease_q4 = lease_quarters(lease_ticks)
+    guard_q4 = guarded_lease_q4(lease_q4, eps)
+    core = _core_guarded_timespan(lease_ticks, eps)
+    assert 0 <= 4 * core - guard_q4 < 1, (
+        f"discounts disagree: core={4 * core} quarters, array={guard_q4}"
+    )
+    assert guard_q4 == int(4 * core)  # same floor quantization
+    if eps == 0.0:
+        assert guard_q4 == lease_q4
+        assert core == lease_ticks + 0.25
+    assert guard_q4 <= lease_q4
+
+
+def test_guarded_lease_q4_rejects_bad_eps():
+    with pytest.raises(ValueError, match="drift_eps"):
+        guarded_lease_q4(13, -0.1)
+    with pytest.raises(ValueError, match="drift_eps"):
+        guarded_lease_q4(13, 1.0)
+
+
+def test_guarded_lease_q4_rejects_collapsed_discount():
+    """A discount that floors to 0 quarter-ticks means the proposer could
+    never believe it owns — refuse it loudly instead of silently running
+    an engine that never grants a lease."""
+    with pytest.raises(ValueError, match="collapses"):
+        guarded_lease_q4(lease_quarters(1), 0.8)  # 5 * 0.111 -> 0
+    with pytest.raises(ValueError, match="collapses"):
+        LeaseArrayEngine(4, n_acceptors=3, lease_ticks=1, drift_eps=0.8)
+
+
+def test_pertick_scanner_defaults_missing_rate_planes():
+    """A pre-drift-shaped planes dict (no rate keys) through the per-tick
+    scanner runs the drift-free clock, bit-identical to the same dict
+    with explicit all-DEFAULT_RATE planes — the documented hand-rolled-
+    dict contract (`ops._local_clock_planes`)."""
+    import jax.numpy as jnp
+
+    from repro.lease_array import init_netplane, init_state
+    from repro.lease_array.engine import _scenario_scanner
+
+    tr = random_trace(9, n_ticks=30, n_cells=6, n_acceptors=3, n_proposers=3,
+                      lease_ticks=2, p_release=0.1, max_delay_ticks=1,
+                      p_drop=0.1, round_ticks=2)
+    full = {k: jnp.asarray(v) for k, v in tr.scenario().planes.items()}
+    legacy = {
+        k: v for k, v in full.items() if k not in ("prop_rate", "acc_rate")
+    }
+    scanner = _scenario_scanner(2, lease_quarters(2), 8, "jnp", False)
+    st, net = init_state(6, 3, 3), init_netplane(6, 3)
+    _, _, ow_full, cn_full = scanner(st, net, jnp.int32(0), None, full)
+    _, _, ow_leg, cn_leg = scanner(st, net, jnp.int32(0), None, legacy)
+    assert np.array_equal(np.asarray(ow_full), np.asarray(ow_leg))
+    assert np.array_equal(np.asarray(cn_full), np.asarray(cn_leg))
+
+
+# ----------------------------------------------- the 1k-scenario sweep check
+def test_sweep_1k_scenarios_drift_delay_drop():
+    """Acceptance: a 1024-scenario batched sweep with drift × delay ×
+    drop × release planes reports zero §4 violations in ONE dispatch
+    (sweep(verify=True) raises on any)."""
+    traces = [
+        random_trace(
+            1000 + s, n_ticks=12, n_cells=8, n_acceptors=3, n_proposers=4,
+            lease_ticks=2, p_attempt=0.5, p_release=0.08, p_down_flip=0.05,
+            max_delay_ticks=1, p_drop=0.1, round_ticks=2, drift_eps=0.25,
+        )
+        for s in range(1024)
+    ]
+    assert any(t.drifted for t in traces)
+    stacked = Scenario.stack([t.scenario() for t in traces])
+    eng = LeaseArrayEngine(
+        8, n_acceptors=3, n_proposers=4, lease_ticks=2, round_ticks=2,
+        drift_eps=0.25,
+    )
+    res = eng.sweep(stacked, verify=True)
+    assert res.max_owner_count.shape == (1024,)
+    assert int(res.max_owner_count.max()) <= 1
+    assert float(res.owned_frac.mean()) > 0.0

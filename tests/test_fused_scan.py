@@ -32,19 +32,20 @@ from repro.lease_array.state import QUARTERS
 GEOM = dict(n_cells=6, n_acceptors=3, n_proposers=4)
 
 
-def _delayed_trace(seed, depth, asym, n_ticks=48):
+def _delayed_trace(seed, depth, asym, n_ticks=48, drift_eps=0.0):
     return random_trace(
         seed, n_ticks=n_ticks, lease_ticks=3,
         p_attempt=0.6, p_release=0.08, p_down_flip=0.03,
         max_delay_ticks=depth, p_drop=0.15 if depth else 0.0,
-        asymmetric=asym, round_ticks=depth + 1, **GEOM,
+        asymmetric=asym, round_ticks=depth + 1, drift_eps=drift_eps,
+        **GEOM,
     )
 
 
 def _run(trace, *, backend, window, netplane):
     eng = LeaseArrayEngine(
         backend=backend, window=window, lease_ticks=trace.lease_ticks,
-        round_ticks=trace.round_ticks, **GEOM,
+        round_ticks=trace.round_ticks, drift_eps=trace.drift_eps, **GEOM,
     )
     owners, counts = eng.run_trace(trace.scenario(), netplane=netplane)
     return owners, counts, eng.state, eng.net
@@ -72,6 +73,53 @@ def test_window_boundaries_bit_exact_vs_unwindowed_oracle(depth, asym, window):
     for a, b in zip(st, st_ref):
         assert np.array_equal(np.asarray(a), np.asarray(b))
     for a, b in zip(net, net_ref):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("window", [1, 3, 5, 64])
+def test_window_boundaries_bit_exact_under_drift(window):
+    """Accumulated local-time carry across window splits: drifted clock
+    planes (per-node rates in {3, 4, 5}, the ε=0.25 guard discount) must
+    survive every window partition bit-exactly vs the unwindowed jnp
+    oracle — owners, §4 counts, final state AND the in-flight slots,
+    mirroring the deliver-at split coverage above. The local-clock
+    prefix-sum planes stream per window; a lease minted in window ``w``
+    on a drifted clock must expire correctly in window ``w + k``."""
+    trace = _delayed_trace(29, 2, True, drift_eps=0.25)
+    assert trace.drifted
+    ow_ref, cn_ref, st_ref, net_ref = _run(
+        trace, backend="jnp", window=window, netplane=True
+    )
+    ow, cn, st, net = _run(
+        trace, backend="pallas", window=window, netplane=True
+    )
+    assert np.array_equal(ow, ow_ref)
+    assert np.array_equal(cn, cn_ref)
+    assert cn.max() <= 1
+    for a, b in zip(st, st_ref):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(net, net_ref):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("window", [1, 3, 5, 64])
+def test_split_drifted_windows_continue_across_dispatches(window):
+    """A drifted trace split across two run_trace dispatches (clock
+    offsets carried by the engine) equals the one-dispatch replay on the
+    Pallas backend for every window size."""
+    trace = _delayed_trace(37, 1, False, n_ticks=40, drift_eps=0.25)
+    sc = trace.scenario()
+    kw = dict(
+        lease_ticks=3, round_ticks=2, drift_eps=0.25, window=window,
+        backend="pallas", **GEOM,
+    )
+    whole = LeaseArrayEngine(**kw)
+    ow_full, _ = whole.run_trace(sc, netplane=True)
+    split = LeaseArrayEngine(**kw)
+    ow_a, _ = split.run_trace(sc[:17], netplane=True)
+    ow_b, _ = split.run_trace(sc[17:], netplane=True)
+    assert np.array_equal(np.vstack([ow_a, ow_b]), ow_full)
+    for a, b in zip(split.state, whole.state):
         assert np.array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -116,7 +164,7 @@ def test_fused_scan_matches_legacy_pertick_scanner():
     st0 = init_state(**GEOM)
     net0 = init_netplane(GEOM["n_cells"], GEOM["n_acceptors"])
     planes = {k: jnp.asarray(v) for k, v in sc.planes.items()}
-    st1, net1, ow1, cn1 = scanner(st0, net0, jnp.int32(0), planes)
+    st1, net1, ow1, cn1 = scanner(st0, net0, jnp.int32(0), None, planes)
     assert np.array_equal(ow, np.asarray(ow1))
     assert np.array_equal(cn, np.asarray(cn1))
     for a, b in zip(st, st1):

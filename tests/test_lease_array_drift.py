@@ -1,0 +1,173 @@
+"""Differential tests for DRIFTING per-node clocks in the array engine:
+the event-driven core/ engine with trace-pinned ``NodeClock`` rates and
+the vectorized plane's accumulated local-clock planes must agree on
+ownership at every tick — and never violate §4 at-most-one-owner, because
+both apply the T·(1-ε)/(1+ε) proposer discount (quantized identically,
+see ``guarded_lease_q4`` and the pinning notes in
+repro/lease_array/trace.py). Drift composes with every other fault plane:
+asymmetric link delays, drops, outages, §7 releases.
+"""
+import numpy as np
+import pytest
+
+from repro.lease_array import (
+    DEFAULT_RATE,
+    LeaseArrayEngine,
+    random_trace,
+    replay_array,
+    replay_event_sim,
+)
+
+from test_lease_array_differential import assert_engines_agree
+
+
+def _drift_trace(seed, *, n_ticks=150, depth=1, eps=0.25, **kw):
+    args = dict(
+        n_ticks=n_ticks, n_cells=8, n_acceptors=5, n_proposers=4,
+        lease_ticks=4, p_attempt=0.6, p_release=0.08, p_down_flip=0.03,
+        max_delay_ticks=depth, p_drop=0.08 if depth else 0.0,
+        drift_eps=eps,
+    )
+    args.update(kw)
+    return random_trace(seed, **args)
+
+
+@pytest.mark.slow
+def test_thousand_tick_drifted_trace():
+    """The acceptance bar: a 1000-tick drifted + delayed + lossy trace
+    replays bit-exactly against the NodeClock referee."""
+    trace = _drift_trace(
+        4242, n_ticks=1000, depth=1, eps=0.25, lease_ticks=8,
+        p_attempt=0.8, p_release=0.06, round_ticks=3,
+    )
+    assert trace.drifted and trace.delayed
+    owners = assert_engines_agree(trace)
+    assert (owners >= 0).any() and (owners == -1).any()
+    # drift thins ownership by design: a fast-clock owner's guarded belief
+    # (19 of 33 quarters) ends ticks before slow-clock acceptors release
+    # their full timers, so re-acquisition has long safe dead zones — the
+    # trace must still produce real ownership and handoffs
+    assert float((owners >= 0).mean()) > 0.03
+    handoffs = (
+        (owners[1:] != owners[:-1]) & (owners[1:] >= 0) & (owners[:-1] >= 0)
+    )
+    assert handoffs.any() or (
+        (owners[1:] >= 0) & (owners[:-1] == -1)
+    ).any()
+
+
+@pytest.mark.slow
+def test_thousand_tick_drifted_trace_pallas_backend():
+    """Same 1000-tick drifted replay through the fused Pallas window
+    kernel (interpret mode): kernel == oracle == event sim."""
+    trace = _drift_trace(
+        4242, n_ticks=1000, depth=1, eps=0.25, lease_ticks=8,
+        p_attempt=0.8, p_release=0.06, round_ticks=3,
+    )
+    assert_engines_agree(trace, backend="pallas")
+
+
+@pytest.mark.parametrize(
+    "seed,depth,eps,n_acceptors,n_proposers",
+    [
+        (1, 0, 0.25, 5, 4),   # drift alone, zero-delay network
+        (2, 1, 0.25, 3, 2),
+        (3, 2, 0.25, 5, 6),   # drift x deeper delays x more proposers
+        (4, 1, 0.5, 7, 3),    # wider drift bound: rates in [2, 6]
+        (5, 2, 0.5, 5, 5),
+    ],
+)
+def test_drifted_geometry_sweep(seed, depth, eps, n_acceptors, n_proposers):
+    trace = _drift_trace(
+        seed, depth=depth, eps=eps,
+        n_acceptors=n_acceptors, n_proposers=n_proposers,
+    )
+    assert trace.drifted
+    assert_engines_agree(trace)
+
+
+def test_drifted_trace_on_pallas_backend():
+    """Drifted clocks through the fused window kernel, differentially."""
+    trace = _drift_trace(7, depth=1, eps=0.25)
+    assert_engines_agree(trace, backend="pallas")
+
+
+def test_drift_with_asymmetric_links_and_releases():
+    """Drift composed with [T, P, A] asymmetric link matrices and §7
+    releases riding the in-flight plane — the full fault stack."""
+    trace = _drift_trace(
+        11, depth=2, eps=0.25, asymmetric=True, p_release=0.12,
+    )
+    owners = assert_engines_agree(trace)
+    assert (owners >= 0).any()
+
+
+def test_no_drift_trace_unchanged_by_rate_planes():
+    """A drift-free trace replays identically whether its rate planes are
+    omitted or written out as all-DEFAULT_RATE: the drifted time base
+    degenerates to the rate-1 engine bit-for-bit."""
+    plain = random_trace(
+        21, n_ticks=80, n_cells=6, n_acceptors=3, n_proposers=3,
+        lease_ticks=3, p_release=0.1, max_delay_ticks=1, p_drop=0.1,
+    )
+    o1, c1 = replay_array(plain, netplane=True)
+    explicit = random_trace(
+        21, n_ticks=80, n_cells=6, n_acceptors=3, n_proposers=3,
+        lease_ticks=3, p_release=0.1, max_delay_ticks=1, p_drop=0.1,
+    )
+    explicit.prop_rate = np.full(3, DEFAULT_RATE, np.int32)
+    explicit.acc_rate = np.full(3, DEFAULT_RATE, np.int32)
+    assert not explicit.drifted
+    o2, c2 = replay_array(explicit, netplane=True)
+    assert np.array_equal(o1, o2) and np.array_equal(c1, c2)
+
+
+def test_split_drifted_trace_equals_one_trace():
+    """Clock offsets survive the dispatch boundary: two run_trace calls
+    over a drifted scenario (engine carries prop_clk/acc_clk between
+    them) equal one call over the whole scenario."""
+    trace = _drift_trace(31, n_ticks=60, depth=1, eps=0.25)
+    sc = trace.scenario()
+    geom = dict(
+        n_acceptors=trace.n_acceptors, n_proposers=trace.n_proposers,
+        lease_ticks=trace.lease_ticks, round_ticks=trace.round_ticks,
+        drift_eps=trace.drift_eps,
+    )
+    whole = LeaseArrayEngine(trace.n_cells, **geom)
+    ow_full, _ = whole.run_trace(sc, netplane=True)
+    split = LeaseArrayEngine(trace.n_cells, **geom)
+    ow_a, _ = split.run_trace(sc[:23], netplane=True)
+    ow_b, _ = split.run_trace(sc[23:], netplane=True)
+    assert np.array_equal(np.vstack([ow_a, ow_b]), ow_full)
+    assert np.array_equal(split.prop_clk, whole.prop_clk)
+    assert np.array_equal(split.acc_clk, whole.acc_clk)
+    for a, b in zip(split.state, whole.state):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_step_path_matches_run_trace_under_drift():
+    """The host-driven per-tick step accumulates the same local clocks as
+    the fused trace replay."""
+    trace = _drift_trace(41, n_ticks=25, depth=0, eps=0.25)
+    sc = trace.scenario()
+    geom = dict(
+        n_acceptors=trace.n_acceptors, n_proposers=trace.n_proposers,
+        lease_ticks=trace.lease_ticks, round_ticks=trace.round_ticks,
+        drift_eps=trace.drift_eps,
+    )
+    fused = LeaseArrayEngine(trace.n_cells, **geom)
+    ow_full, _ = fused.run_trace(sc)
+    stepped = LeaseArrayEngine(trace.n_cells, **geom)
+    rows = [stepped.step(sc[t]) for t in range(sc.n_ticks)]
+    assert np.array_equal(np.stack(rows), ow_full)
+    assert np.array_equal(stepped.prop_clk, fused.prop_clk)
+    for a, b in zip(stepped.state, fused.state):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_referee_rejects_unreplayable_rates():
+    trace = _drift_trace(51, n_ticks=10, depth=0, eps=0.25)
+    trace.prop_rate = trace.prop_rate.copy()
+    trace.prop_rate[0] = 12  # > MAX_REFEREE_RATE: fractions collide
+    with pytest.raises(ValueError, match="exact event-sim replay"):
+        replay_event_sim(trace)

@@ -177,8 +177,8 @@ def test_vmap_stacked_scenarios():
     state = init_state(n_cells, n_acc, n_prop)
     net = init_netplane(n_cells, n_acc)
     _, _, owners, counts = jax.vmap(
-        scanner, in_axes=(None, None, None, 0)
-    )(state, net, jnp.int32(0), planes)
+        scanner, in_axes=(None, None, None, None, 0)
+    )(state, net, jnp.int32(0), None, planes)
     assert owners.shape == (3, 30, n_cells)
     assert int(counts.max()) <= 1
     for b, tr in enumerate(traces):
