@@ -2,7 +2,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-all test-fast bench-smoke bench-delay bench-drift bench-json bench-compare bench dev-deps
+.PHONY: test test-all test-fast check bench-smoke bench-delay bench-drift bench-json bench-compare bench dev-deps
 
 test:  ## fast default: skip the long @slow differential replays
 	python -m pytest -x -q -m "not slow"
@@ -12,6 +12,14 @@ test-all:  ## tier-1: the full suite (including @slow), fail-fast
 
 test-fast:  ## also skip the slow XLA-compile cross-validation tests
 	python -m pytest -x -q -m "not slow" --ignore=tests/test_roofline_validation.py
+
+check:  ## leaselint: static pack-budget proof, kernel purity, launch audit, convention lints + mutation self-test (docs/static_analysis.md)
+	python -m repro.analysis.staticcheck --json findings.json
+	@if command -v ruff >/dev/null 2>&1; then \
+	  ruff check src tests benchmarks examples; \
+	else \
+	  echo "ruff not installed; skipping the crash-level baseline (CI runs it)"; \
+	fi
 
 bench-smoke:  ## quick end-to-end signal: the vectorized lease-plane bench
 	python -c "from benchmarks.bench_lease_array import run; \

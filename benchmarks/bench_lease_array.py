@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.lease_array import (
     LeaseArrayEngine,
+    make_tick,
     random_trace,
     replay_array,
     replay_event_sim,
@@ -162,8 +163,10 @@ def run():
     eng = LeaseArrayEngine(ARRAY_CELLS, n_acceptors=5, n_proposers=8,
                            lease_ticks=4)
     attempt = np.arange(ARRAY_CELLS, dtype=np.int32) % eng.n_proposers
-    eng.step(attempt)  # warm
-    dt, _ = timed(lambda: eng.step(attempt))
+    tick = make_tick(n_cells=ARRAY_CELLS, n_acceptors=5, n_proposers=8,
+                     attempts=attempt)
+    eng.step(tick)  # warm
+    dt, _ = timed(lambda: eng.step(tick))
     rows.append((
         "kernel_launch_overhead",
         dt / ARRAY_CELLS * 1e6,

@@ -1,0 +1,52 @@
+"""leaselint — static proofs over the lease engine's real jaxprs.
+
+Four passes, one finding currency, gating CI via ``make check``:
+
+- :mod:`.intervals` — interval abstract interpretation of the int32 tick
+  cores: proves no intermediate escapes int32 and no pack exceeds its
+  field budget for a given config, and *derives* ``max_pack_tick`` to
+  cross-check the hand bound in ``state.py``;
+- :mod:`.purity` — dtype/purity lint over the traced cores and window
+  kernels (no floats, no silent int64, no gathers on the Pallas path);
+- :mod:`.launch` — audits the shared :class:`~repro.lease_array.kernel.
+  LaunchPlan`: block bounds, write-race-free partition of the cell axis,
+  output coverage, VMEM residency vs the roofline accounting;
+- :mod:`.conventions` — AST/doc lints (registry-generated plane table,
+  no deprecated shims, deadline comparisons stay in local clock domain).
+
+:mod:`.fixtures` mutation-tests all four (seeded mutants must be caught,
+clean twins must pass); :mod:`.cli` is the ``python -m`` entry point.
+"""
+from .cli import main, run_all, write_plane_table
+from .conventions import check_conventions, check_plane_docs, check_source_text
+from .findings import Finding, findings_to_json
+from .fixtures import run_mutation_tests
+from .intervals import (
+    TickConfig,
+    analyze_tick_config,
+    derived_max_pack_tick,
+    trace_tick_core,
+)
+from .launch import check_launch_plan, check_window_launches
+from .purity import check_jaxpr_purity, check_tick_cores, check_window_kernels
+
+__all__ = [
+    "Finding",
+    "findings_to_json",
+    "TickConfig",
+    "analyze_tick_config",
+    "derived_max_pack_tick",
+    "trace_tick_core",
+    "check_jaxpr_purity",
+    "check_tick_cores",
+    "check_window_kernels",
+    "check_launch_plan",
+    "check_window_launches",
+    "check_conventions",
+    "check_plane_docs",
+    "check_source_text",
+    "run_mutation_tests",
+    "run_all",
+    "write_plane_table",
+    "main",
+]

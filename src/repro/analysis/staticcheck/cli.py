@@ -1,0 +1,184 @@
+"""The `leaselint` entry point: run every static checker, print findings,
+emit the CI JSON artifact.
+
+    python -m repro.analysis.staticcheck [--json PATH] [--skip-mutation]
+    python -m repro.analysis.staticcheck --write-plane-table
+
+Exit status is 0 iff no checker produced a finding AND every seeded
+mutation fixture was caught (a checker that stops firing is itself a
+finding). `--write-plane-table` regenerates the registry-derived plane
+table inside docs/scenario_api.md and exits.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from .findings import Finding, findings_to_json
+
+#: the default geometries every `make check` run proves
+_RATES = (4, 9)  # DEFAULT_RATE and MAX_REFEREE_RATE
+_P, _A, _LEASE_Q4 = 8, 5, 13
+
+
+def _check_intervals() -> list[Finding]:
+    """Tentpole self-checks on the real cores:
+
+    - the derived bound must equal ``state.max_pack_tick`` exactly for the
+      default (P=8) geometry at both the drift-free and the worst referee
+      clock rate;
+    - a config whose *round horizon* blows int32 — invisible to the
+      runtime hand check, which only budgets ballots and lease deadlines,
+      and skipped entirely under tracing — must be rejected.
+    """
+    from ...lease_array.state import max_pack_tick
+    from .intervals import TickConfig, analyze_tick_config, derived_max_pack_tick
+
+    findings: list[Finding] = []
+    for rate in _RATES:
+        hand = max_pack_tick(_P, _LEASE_Q4, 0, max_rate=rate)
+        derived = derived_max_pack_tick(_P, _LEASE_Q4, 0, max_rate=rate)
+        if hand != derived:
+            findings.append(Finding(
+                "intervals", "bound-mismatch",
+                f"max_pack_tick(P={_P}, rate={rate})",
+                f"hand bound {hand} != interval-derived bound {derived}; "
+                f"state.max_pack_tick and the traced tick core disagree "
+                f"about the pack budget",
+            ))
+    # regression for the traced-away gap: an absurd round-abandon horizon
+    # overflows `rnd_clk + round_q4` inside the core; check_pack_budget
+    # never looks at round_q4 and is skipped under tracing anyway
+    hot = TickConfig(
+        t_end=100, n_proposers=_P, n_acceptors=_A,
+        lease_q4=_LEASE_Q4, round_q4=2_147_483_600,
+    )
+    if not analyze_tick_config(hot):
+        findings.append(Finding(
+            "intervals", "lost-rejection", "round_q4=2147483600",
+            "a round horizon that overflows int32 inside the core was "
+            "proven 'safe'; the interval analysis has lost the regression "
+            "the runtime check cannot see",
+        ))
+    return findings
+
+
+def _check_purity() -> list[Finding]:
+    from .purity import check_tick_cores, check_window_kernels
+
+    return check_tick_cores(
+        _P, _A, _LEASE_Q4
+    ) + check_window_kernels(n_cells=1024, n_ticks=32)
+
+
+def _check_launch() -> list[Finding]:
+    from .launch import check_window_launches
+
+    return check_window_launches()
+
+
+def _check_conventions() -> list[Finding]:
+    from .conventions import check_conventions
+
+    return check_conventions()
+
+
+def _check_mutation() -> list[Finding]:
+    from .fixtures import run_mutation_tests
+
+    return run_mutation_tests()
+
+
+_CHECKERS = (
+    ("intervals", _check_intervals),
+    ("purity", _check_purity),
+    ("launch", _check_launch),
+    ("conventions", _check_conventions),
+    ("mutation", _check_mutation),
+)
+
+
+def run_all(*, skip_mutation: bool = False) -> list[Finding]:
+    """Run every leaselint pass over the real tree; returns all findings."""
+    findings: list[Finding] = []
+    for name, fn in _CHECKERS:
+        if skip_mutation and name == "mutation":
+            continue
+        findings += fn()
+    return findings
+
+
+def write_plane_table(root: Path | None = None) -> Path:
+    """Regenerate the registry-derived plane table between the
+    ``plane-table`` markers of docs/scenario_api.md."""
+    from ...lease_array.scenario import plane_table_md
+    from .conventions import _PLANE_TABLE_BEGIN, _PLANE_TABLE_END, _repo_root
+
+    path = (root or _repo_root()) / "docs" / "scenario_api.md"
+    text = path.read_text()
+    begin = text.find(_PLANE_TABLE_BEGIN)
+    end = text.find(_PLANE_TABLE_END)
+    if begin < 0 or end < 0:
+        raise SystemExit(
+            f"{path}: plane-table markers not found; add "
+            f"{_PLANE_TABLE_BEGIN} ... --> and {_PLANE_TABLE_END} around "
+            f"the table first"
+        )
+    close = text.index("-->", begin) + len("-->")
+    path.write_text(
+        text[:close] + "\n" + plane_table_md() + text[end:]
+    )
+    return path
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.staticcheck",
+        description="leaselint: static proof of pack budget, kernel "
+                    "purity, launch safety and repo conventions",
+    )
+    ap.add_argument(
+        "--json", metavar="PATH", default=None,
+        help="write the findings JSON artifact here (CI uploads it)",
+    )
+    ap.add_argument(
+        "--skip-mutation", action="store_true",
+        help="skip the checker self-test against the seeded mutants",
+    )
+    ap.add_argument(
+        "--write-plane-table", action="store_true",
+        help="regenerate the docs/scenario_api.md plane table from the "
+             "registry and exit",
+    )
+    args = ap.parse_args(argv)
+
+    if args.write_plane_table:
+        path = write_plane_table()
+        print(f"plane table regenerated in {path}")
+        return 0
+
+    findings = run_all(skip_mutation=args.skip_mutation)
+    for f in findings:
+        print(f)
+    checkers = [n for n, _ in _CHECKERS if not (args.skip_mutation and n == "mutation")]
+    payload = findings_to_json(
+        findings,
+        checkers=checkers,
+        config={
+            "n_proposers": _P, "n_acceptors": _A, "lease_q4": _LEASE_Q4,
+            "rates": list(_RATES),
+        },
+    )
+    if args.json:
+        Path(args.json).write_text(payload + "\n")
+        print(f"findings artifact: {args.json}")
+    if findings:
+        print(f"leaselint: {len(findings)} finding(s)")
+        return 1
+    print(f"leaselint: clean ({', '.join(checkers)})")
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover
+    sys.exit(main())

@@ -1,0 +1,49 @@
+"""The finding currency every leaselint checker speaks.
+
+A checker returns a (possibly empty) list of :class:`Finding`s; the CLI
+(`python -m repro.analysis.staticcheck`) aggregates them into the findings
+JSON artifact CI uploads and exits nonzero iff any survived. Severity is
+deliberately absent: every finding is a proof obligation the tree failed,
+not a style nit — style stays in ruff's lane.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One static-check violation.
+
+    checker: which pass found it ("intervals" | "purity" | "launch" |
+             "conventions").
+    rule:    the machine-readable rule id (e.g. "int32-overflow",
+             "pack-budget", "float-op", "write-race", "undocumented-plane").
+    where:   where it was found — a jaxpr equation, a BlockSpec index, or
+             a ``path:line`` location.
+    detail:  the human-readable explanation (what was proven false and
+             with which numbers).
+    """
+
+    checker: str
+    rule: str
+    where: str
+    detail: str
+
+    def __str__(self) -> str:  # the one-line CLI rendering
+        return f"[{self.checker}:{self.rule}] {self.where}: {self.detail}"
+
+
+def findings_to_json(findings: list[Finding], **meta) -> str:
+    """Serialize findings (+ run metadata) for the CI artifact."""
+    return json.dumps(
+        {
+            "ok": not findings,
+            "n_findings": len(findings),
+            "findings": [asdict(f) for f in findings],
+            **meta,
+        },
+        indent=2,
+        sort_keys=True,
+    )

@@ -1,0 +1,206 @@
+"""Seeded mutation fixtures: one deliberately-broken variant per checker.
+
+A static checker that never fires is indistinguishable from one that
+works, so every leaselint pass ships with a mutant it MUST flag and a
+clean twin it MUST pass — the twin proves the fixture isolates the
+mutation rather than tripping on scaffolding. `run_mutation_tests` runs
+all four pairs and returns findings about the *checkers* (empty means
+every mutant was caught and every twin passed); the CLI and
+tests/test_staticcheck.py both gate on it.
+
+The mutants:
+
+  - **overflowing shift** (intervals): the deadline is packed with
+    ``<< (2 * PACK_SHIFT)`` — the copy-paste double of the field shift.
+    Interval analysis must prove the escape from int32.
+  - **injected float op** (purity): the local-clock scale written as
+    ``* 1.25`` instead of the exact ``* 5 // 4``.
+  - **overlapping BlockSpec** (launch): a state output's index map
+    collapsed to ``lambda i, w: (0, 0)`` — every cell block writes block
+    (0, 0), a write race the grid cannot serialize.
+  - **undocumented plane** (conventions): a doc plane table missing rows
+    for registered planes, plus a deadline compared against global time.
+"""
+from __future__ import annotations
+
+import functools
+
+from .findings import Finding
+
+_P, _LEASE_Q4, _T_END = 8, 13, 4094  # the default P=8 geometry and bound
+
+
+@functools.lru_cache(maxsize=None)
+def _pack_core(shift: int, float_scale: bool = False):
+    """A minimal deadline-packing core (the fragment of the tick math the
+    pack budget lives in), parameterized so one knob seeds each mutant."""
+    import jax
+    import jax.numpy as jnp
+
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+
+    def fn(ownp, t, pclk):
+        ballot = (t + 1) * _P + (_P - 1)
+        if float_scale:
+            clk = (pclk * 1.25).astype(i32)  # MUTANT: float on the tick path
+        else:
+            clk = pclk * 5 // 4
+        deadline = clk + _LEASE_Q4
+        packed = (deadline << shift) | ballot
+        return jnp.maximum(ownp, packed)
+
+    closed = jax.make_jaxpr(fn)(
+        sds((1, 8), i32), sds((), i32), sds((1, 8), i32)
+    )
+    layout = (("ownp", "state"), ("t", "t"), ("pclk", "clk"))
+    return closed, layout
+
+
+def _pack_cfg():
+    from .intervals import TickConfig
+
+    return TickConfig(t_end=_T_END, n_proposers=_P, lease_q4=_LEASE_Q4)
+
+
+def fixture_overflowing_shift() -> list[Finding]:
+    """Mutant for the interval checker: doubled pack shift."""
+    from .intervals import PACK_SHIFT, analyze_tick_config
+
+    core, layout = _pack_core(2 * PACK_SHIFT)
+    return analyze_tick_config(_pack_cfg(), core=core, layout=layout)
+
+
+def fixture_overflowing_shift_clean() -> list[Finding]:
+    from .intervals import PACK_SHIFT, analyze_tick_config
+
+    core, layout = _pack_core(PACK_SHIFT)
+    return analyze_tick_config(_pack_cfg(), core=core, layout=layout)
+
+
+def fixture_float_op() -> list[Finding]:
+    """Mutant for the purity lint: float clock scale."""
+    from .purity import check_jaxpr_purity
+
+    core, _ = _pack_core(15, float_scale=True)
+    return check_jaxpr_purity(core, pallas_path=True, what="pack core")
+
+
+def fixture_float_op_clean() -> list[Finding]:
+    from .purity import check_jaxpr_purity
+
+    core, _ = _pack_core(15)
+    return check_jaxpr_purity(core, pallas_path=True, what="pack core")
+
+
+def _mutant_plan():
+    from jax.experimental import pallas as pl
+
+    from ...lease_array.kernel import delayed_launch_plan
+
+    plan = delayed_launch_plan(5, 2048, _P, 32)
+    specs = list(plan.out_specs)
+    specs[0] = pl.BlockSpec(
+        specs[0].block_shape, lambda i, w: (0, 0)  # MUTANT: cell axis gone
+    )
+    return plan._replace(out_specs=tuple(specs))
+
+
+def fixture_overlapping_blockspec() -> list[Finding]:
+    """Mutant for the launch checker: output index map ignores the cell
+    block, so grid instances race on block (0, 0)."""
+    from .launch import check_launch_plan
+
+    return check_launch_plan(
+        _mutant_plan(), delayed=True, n_proposers=_P, what="mutant kernel"
+    )
+
+
+def fixture_overlapping_blockspec_clean() -> list[Finding]:
+    from ...lease_array.kernel import delayed_launch_plan
+    from .launch import check_launch_plan
+
+    return check_launch_plan(
+        delayed_launch_plan(5, 2048, _P, 32),
+        delayed=True, n_proposers=_P, what="clean kernel",
+    )
+
+
+_STALE_DOC = """\
+<!-- plane-table:begin -->
+| plane | per-tick shape | default | meaning |
+|-------|----------------|---------|---------|
+| `attempts` | `[N]` | `-1` | proposer id attempting each cell this tick (-1 = none) |
+<!-- plane-table:end -->
+"""
+
+_BAD_DEADLINE_SRC = (
+    "own_live = ownp >= ((t4 + 1) << PACK_SHIFT)\n"  # global time, no guard
+)
+
+
+def fixture_undocumented_plane() -> list[Finding]:
+    """Mutant for the convention lint: a doc plane table that predates
+    most of the registry, plus a deadline minted against global time."""
+    from .conventions import check_plane_docs, check_source_text
+
+    findings = check_plane_docs(_STALE_DOC)
+    findings += check_source_text(
+        _BAD_DEADLINE_SRC, "src/repro/lease_array/mutant.py"
+    )
+    return findings
+
+
+def fixture_undocumented_plane_clean() -> list[Finding]:
+    from .conventions import check_conventions
+
+    return check_conventions()
+
+
+#: checker -> (mutant fixture, rules the mutant must trip, clean twin)
+FIXTURES: dict[str, tuple] = {
+    "intervals": (
+        fixture_overflowing_shift,
+        {"int32-overflow", "pack-budget"},
+        fixture_overflowing_shift_clean,
+    ),
+    "purity": (
+        fixture_float_op,
+        {"float-op"},
+        fixture_float_op_clean,
+    ),
+    "launch": (
+        fixture_overlapping_blockspec,
+        {"write-race"},
+        fixture_overlapping_blockspec_clean,
+    ),
+    "conventions": (
+        fixture_undocumented_plane,
+        {"undocumented-plane", "deadline-compare"},
+        fixture_undocumented_plane_clean,
+    ),
+}
+
+
+def run_mutation_tests() -> list[Finding]:
+    """Self-test every checker against its seeded mutant + clean twin.
+    Returns findings about the CHECKERS; empty means the suite has teeth."""
+    out: list[Finding] = []
+    for checker, (mutant, want_rules, clean) in FIXTURES.items():
+        rules = {f.rule for f in mutant()}
+        if not rules & want_rules:
+            out.append(Finding(
+                "mutation", "mutant-not-caught", f"{checker} fixture",
+                f"the seeded mutant produced rules {sorted(rules)}; "
+                f"expected at least one of {sorted(want_rules)} — the "
+                f"{checker} checker has lost its teeth",
+            ))
+        leftovers = clean()
+        if leftovers:
+            out.append(Finding(
+                "mutation", "clean-twin-flagged", f"{checker} fixture",
+                f"the clean twin raised {len(leftovers)} finding(s) "
+                f"(first: {leftovers[0]}); the fixture no longer isolates "
+                f"the mutation",
+            ))
+    return out

@@ -1,0 +1,187 @@
+"""Purity/dtype lint over traced jaxprs: the tick cores (and the window
+kernels wrapping them) must stay pure int32 VPU work.
+
+Three rules, each today enforced only by convention:
+
+  - ``float-op``: the §4 safety argument is exact integer arithmetic; a
+    float creeping into the tick core (a stray ``/``, a float literal)
+    breaks bit-for-bit backend agreement and the interval proof alike.
+  - ``int64-promotion``: a silent widen (Python int literal over 2^31,
+    ``jnp.sum`` with a promoted accumulator) would make the packed layout
+    *look* safe while the int32 kernels still wrap.
+  - ``gather-in-pallas``: the Pallas backend path must resolve per-leg
+    link rows with the compile-time P-loop (``netplane.legs_select`` /
+    ``state.clock_select``), never a dynamic gather — gather indices
+    materializing in HBM is exactly what the fused kernel exists to avoid
+    (the ``legs_select`` vs ``legs_gather`` rule).
+
+The walk recurses into every sub-jaxpr (pjit, scan/fori_loop bodies,
+``pallas_call`` kernels), so tracing ``lease_window_*_pallas`` checks the
+code that actually runs inside the kernel.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .findings import Finding
+
+#: primitives that materialize dynamic indices (the Pallas-path ban)
+GATHER_PRIMS = frozenset({
+    "gather", "scatter", "scatter-add", "dynamic_slice", "dynamic_gather",
+    "dynamic_update_slice",
+})
+
+_WIDE_INTS = (np.int64, np.uint64)
+
+
+def _walk(jaxpr, visit, path=""):
+    for i, eqn in enumerate(jaxpr.eqns):
+        where = f"{path}eqn {i} `{eqn.primitive.name}`"
+        visit(eqn, where)
+        for name, p in eqn.params.items():
+            subs = p if isinstance(p, (list, tuple)) else (p,)
+            for s in subs:
+                inner = getattr(s, "jaxpr", None)
+                if inner is not None and hasattr(inner, "eqns"):
+                    _walk(inner, visit, f"{where}/{name}/")
+                elif hasattr(s, "eqns"):
+                    _walk(s, visit, f"{where}/{name}/")
+
+
+def check_jaxpr_purity(
+    closed, *, pallas_path: bool = False, what: str = "tick core",
+) -> list[Finding]:
+    """Lint one (closed) jaxpr. ``pallas_path=True`` additionally bans
+    gather-family primitives (the block-local select rule)."""
+    findings: list[Finding] = []
+    seen: set[tuple] = set()
+
+    def visit(eqn, where):
+        prim = eqn.primitive.name
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            dt = getattr(aval, "dtype", None)
+            if dt is None:
+                continue
+            if np.issubdtype(dt, np.floating) or np.issubdtype(dt, np.complexfloating):
+                key = ("float", prim)
+                if key not in seen:
+                    seen.add(key)
+                    findings.append(Finding(
+                        "purity", "float-op", where,
+                        f"{what} produces a {dt} value via `{prim}`; the "
+                        f"packed tick math must be exact int32",
+                    ))
+            elif dt.type in _WIDE_INTS:
+                key = ("int64", prim)
+                if key not in seen:
+                    seen.add(key)
+                    findings.append(Finding(
+                        "purity", "int64-promotion", where,
+                        f"{what} silently promotes to {dt} via `{prim}`; "
+                        f"the int32 kernels would wrap where this widened",
+                    ))
+        if pallas_path and prim in GATHER_PRIMS:
+            key = ("gather", prim, where)
+            if key not in seen:
+                seen.add(key)
+                findings.append(Finding(
+                    "purity", "gather-in-pallas", where,
+                    f"`{prim}` reaches the Pallas backend path of {what}; "
+                    f"use the compile-time P-loop selects "
+                    f"(netplane.legs_select / state.clock_select) instead",
+                ))
+
+    _walk(closed.jaxpr, visit)
+    return findings
+
+
+def check_tick_cores(
+    n_proposers: int = 8,
+    n_acceptors: int = 5,
+    lease_q4: int = 13,
+    round_q4: int = 4,
+    guard_q4: int = 13,
+) -> list[Finding]:
+    """Lint the real tick cores on both leg strategies:
+
+    - sync core and the delayed core with ``legs_select`` must pass the
+      full Pallas-path rules (these are the bodies the window kernels run);
+    - the delayed core with ``legs_gather`` is the XLA-only oracle, where
+      gather is allowed by design — but floats/int64 still aren't.
+    """
+    from .intervals import trace_tick_core
+
+    majority = n_acceptors // 2 + 1
+    args = (n_proposers, n_acceptors, lease_q4, round_q4, guard_q4, majority)
+    findings = check_jaxpr_purity(
+        trace_tick_core(*args, sync=True),
+        pallas_path=True, what="sync_tick_math",
+    )
+    findings += check_jaxpr_purity(
+        trace_tick_core(*args, sync=False, legs="select"),
+        pallas_path=True, what="delayed_tick_math[legs_select]",
+    )
+    findings += check_jaxpr_purity(
+        trace_tick_core(*args, sync=False, legs="gather"),
+        pallas_path=False, what="delayed_tick_math[legs_gather]",
+    )
+    return findings
+
+
+def check_window_kernels(
+    n_cells: int = 1024,
+    n_acceptors: int = 5,
+    n_proposers: int = 8,
+    n_ticks: int = 32,
+    *,
+    block_n: int = 512,
+    window: int = 16,
+) -> list[Finding]:
+    """Trace the whole ``lease_window_{sync,delayed}_pallas`` entry points
+    (shapes only — nothing executes) and lint everything inside the
+    ``pallas_call``, fori_loop bodies included, under the Pallas rules."""
+    import jax
+    import jax.numpy as jnp
+
+    from ...lease_array.kernel import (
+        lease_window_delayed_pallas,
+        lease_window_sync_pallas,
+    )
+    from ...lease_array.netplane import NetPlaneState, init_netplane
+    from ...lease_array.state import PackedLeaseState, init_state, pack_state
+
+    A, P, N, T = n_acceptors, n_proposers, n_cells, n_ticks
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    packed = PackedLeaseState(
+        *(sds(a.shape, i32) for a in pack_state(init_state(N, A, P)))
+    )
+    net = NetPlaneState(*(sds(a.shape, i32) for a in init_netplane(N, A)))
+    t0 = sds((), i32)
+    planes = dict(
+        attempts=sds((T, N), i32), releases=sds((T, N), i32),
+        acc_up=sds((T, A), i32), pclk=sds((T, P), i32),
+        aclk=sds((T, A), i32),
+    )
+    kw = dict(majority=A // 2 + 1, lease_q4=13, n_proposers=P,
+              block_n=block_n, window=window, interpret=True)
+
+    sync_jaxpr = jax.make_jaxpr(
+        lambda p, t, a, r, u, pc, ac: lease_window_sync_pallas(
+            p, t, a, r, u, pc, ac, **kw
+        )
+    )(packed, t0, *planes.values())
+    delayed_jaxpr = jax.make_jaxpr(
+        lambda p, n, t, a, r, u, pc, ac, lk: lease_window_delayed_pallas(
+            p, n, t, a, r, u, pc, ac, lk, round_q4=4, **kw
+        )
+    )(packed, net, t0, *planes.values(), sds((T, P, A), i32))
+
+    findings = check_jaxpr_purity(
+        sync_jaxpr, pallas_path=True, what="lease_window_sync_pallas"
+    )
+    findings += check_jaxpr_purity(
+        delayed_jaxpr, pallas_path=True, what="lease_window_delayed_pallas"
+    )
+    return findings

@@ -20,6 +20,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from .engine import LeaseArrayEngine
+from .scenario import make_tick
 from .state import NO_PROPOSER
 
 
@@ -131,7 +132,12 @@ class LeaseArrayDirectory:
             free = np.flatnonzero((owners < 0) & (attempt < 0))
             k = min(len(seq), len(free))
             attempt[free[:k]] = seq[:k]
-        return self.engine.step(attempt=attempt, release=release).astype(np.int32)
+        tick = make_tick(
+            n_cells=self.engine.n_cells, n_acceptors=self.engine.n_acceptors,
+            n_proposers=self.engine.n_proposers,
+            attempts=attempt, releases=release,
+        )
+        return self.engine.step(tick).astype(np.int32)
 
     # -------------------------------------------------------------- queries
     def coverage(self) -> float:

@@ -41,6 +41,7 @@ docs/perf.md).
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import NamedTuple, Optional
 
 import jax
@@ -61,6 +62,46 @@ from .state import (
     lease_quarters,
     rate1_clock,
 )
+
+
+#: flips True after the first analyzer failure so a broken static checker
+#: warns once instead of blocking (or spamming) every dispatch
+_STATIC_CHECK_FAILED = False
+
+_DEPRECATED_STEP_KWARGS = (
+    "per-plane LeaseArrayEngine.step arguments (attempt=, release=, "
+    "acc_up=, delay=, drop=) are deprecated; build a TickInputs with "
+    "make_tick(...) and pass it as the single argument"
+)
+_DEPRECATED_TRACE_PLANES = (
+    "LeaseArrayEngine.run_trace with raw plane arrays is deprecated; "
+    "pass a Scenario (Scenario.build(...) or Trace.scenario())"
+)
+
+
+@functools.lru_cache(maxsize=512)
+def _static_pack_findings(
+    t_end: int, n_proposers: int, n_acceptors: int, lease_q4: int,
+    round_q4: int, guard_q4: Optional[int], max_delay: int, max_rate: int,
+    clk_slack: int,
+) -> tuple[str, ...]:
+    """Interval-analysis twin of ``state.check_pack_budget``: walk the
+    traced delayed tick core (the conservative superset of the sync one)
+    and bound EVERY int32 intermediate for replays up to ``t_end``. The
+    hand check budgets only ballots and lease deadlines — this one also
+    sees round horizons, clock sums and any future field the core grows.
+    Cached because the same protocol config is re-proved per dispatch."""
+    from ..analysis.staticcheck.intervals import (
+        TickConfig,
+        analyze_tick_config,
+    )
+
+    cfg = TickConfig(
+        t_end=t_end, n_proposers=n_proposers, n_acceptors=n_acceptors,
+        lease_q4=lease_q4, round_q4=round_q4, guard_q4=guard_q4,
+        max_delay=max_delay, max_rate=max_rate, clk_slack=clk_slack,
+    )
+    return tuple(str(f) for f in analyze_tick_config(cfg))
 
 
 @functools.lru_cache(maxsize=None)
@@ -283,6 +324,42 @@ class LeaseArrayEngine:
             clk_slack=max(0, clk_max - max_rate * self.t),
         )
 
+    def _static_bound_check(
+        self, t_end: int, max_delay: int = 0, max_rate: int = QUARTERS
+    ) -> None:
+        """Run the leaselint interval analysis host-side before a bulk
+        dispatch. Complements ``_check_pack_budget``: the hand bound is
+        skipped under tracing and blind to everything but ballots and
+        lease deadlines, while this proves every traced-core intermediate
+        stays in int32. Best-effort by design — an analyzer import/bug
+        failure warns once and never blocks a dispatch; a *finding*
+        (an actual overflow proof) raises."""
+        global _STATIC_CHECK_FAILED
+        max_rate = max(int(max_rate), QUARTERS)
+        clk_max = int(max(self.prop_clk.max(), self.acc_clk.max(), 0))
+        try:
+            findings = _static_pack_findings(
+                int(t_end), self.n_proposers, self.n_acceptors,
+                self.lease_q4, self.round_q4, self.guard_q4,
+                int(max_delay), max_rate,
+                max(0, clk_max - max_rate * self.t),
+            )
+        except Exception as e:
+            if not _STATIC_CHECK_FAILED:
+                _STATIC_CHECK_FAILED = True
+                warnings.warn(
+                    f"static pack-budget analysis unavailable "
+                    f"(falling back to the hand check only): {e!r}",
+                    RuntimeWarning, stacklevel=3,
+                )
+            return
+        if findings:
+            raise ValueError(
+                f"static analysis refused a {t_end}-tick replay — the "
+                f"traced tick core can overflow where the runtime check "
+                f"does not look:\n  " + "\n  ".join(findings)
+            )
+
     def _clk0(self):
         """The engine's local-clock offsets for a dispatch — or None while
         every clock still equals the rate-1 reading ``4t`` (an engine that
@@ -344,6 +421,14 @@ class LeaseArrayEngine:
                 "pass planes inside the TickInputs, not alongside it"
             )
         if tick is None:
+            if any(
+                x is not None
+                for x in (attempt, release, acc_up, delay, drop)
+            ):
+                warnings.warn(
+                    _DEPRECATED_STEP_KWARGS, DeprecationWarning,
+                    stacklevel=2,
+                )
             tick = make_tick(  # validates ghost proposer ids, shapes, dtypes
                 n_cells=self.n_cells, n_acceptors=self.n_acceptors,
                 n_proposers=self.n_proposers,
@@ -439,6 +524,10 @@ class LeaseArrayEngine:
                     "not both"
                 )
             scenario = attempts  # legacy keyword call sites
+        if not isinstance(scenario, Scenario):
+            warnings.warn(
+                _DEPRECATED_TRACE_PLANES, DeprecationWarning, stacklevel=2
+            )
         scenario = self._coerce_scenario(
             scenario, releases, acc_up, delay, drop
         )
@@ -447,14 +536,13 @@ class LeaseArrayEngine:
         if T == 0:
             empty = np.zeros((0, self.n_cells), np.int32)
             return empty, empty.copy()
-        self._check_pack_budget(
-            self.t + T,
-            int(np.asarray(scenario.delay).max(initial=0)),
-            max(
-                int(np.asarray(scenario.prop_rate).max(initial=0)),
-                int(np.asarray(scenario.acc_rate).max(initial=0)),
-            ),
+        dmax = int(np.asarray(scenario.delay).max(initial=0))
+        rmax = max(
+            int(np.asarray(scenario.prop_rate).max(initial=0)),
+            int(np.asarray(scenario.acc_rate).max(initial=0)),
         )
+        self._check_pack_budget(self.t + T, dmax, rmax)
+        self._static_bound_check(self.t + T, dmax, rmax)
         planes = {k: jnp.asarray(v) for k, v in scenario.planes.items()}
         n_dev = len(jax.devices())
         if n_dev > 1 and self.n_cells % n_dev != 0:
@@ -547,6 +635,7 @@ class LeaseArrayEngine:
         # a sweep is read-only: pick the model without flipping the engine
         sync = self._pick_model(netplane, delayed, mutate=False)
         self._check_pack_budget(self.t + T, dmax, rmax)
+        self._static_bound_check(self.t + T, dmax, rmax)
         n_dev = len(jax.devices())
         if n_dev > 1 and B % n_dev != 0:
             n_dev = 1  # uneven batch: fall back to single-device vmap

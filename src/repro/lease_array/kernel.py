@@ -45,6 +45,7 @@ geometry.
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -102,6 +103,100 @@ def _bcast_plane_spec(tw: int, rows: int, cols: int):
     """A cell-independent plane (acc_up columns, link matrices): every cell
     block streams the same [tw, rows, cols] slab."""
     return pl.BlockSpec((None, tw, rows, cols), lambda i, w: (w, 0, 0, 0))
+
+
+class LaunchPlan(NamedTuple):
+    """The complete launch geometry of one window kernel: grid, BlockSpecs
+    and the *logical* (full-array) shape behind every spec, in call order.
+
+    The ``pallas_call`` entry points below consume a plan verbatim, and the
+    static launch checker (``repro.analysis.staticcheck.launch``) audits the
+    same object — bounds, write-race partition of the cell axis, VMEM
+    residency — so there is no second hand-maintained description of the
+    launch to drift out of sync.
+
+    ``in_shapes``/``out_shapes`` align 1:1 with ``in_specs``/``out_specs``.
+    The leading scalar-vector input rides in SMEM on real TPUs; its spec has
+    no block shape, which the checker treats as exempt from tiling rules.
+    """
+
+    grid: tuple[int, int]
+    in_specs: tuple
+    out_specs: tuple
+    in_shapes: tuple[tuple[int, ...], ...]
+    out_shapes: tuple[tuple[int, ...], ...]
+    block_n: int
+    tw: int
+    n_windows: int
+
+
+def _window_geometry(n_cells: int, n_ticks: int, block_n: int, window: int):
+    block_n = min(block_n, n_cells)
+    assert n_cells % block_n == 0, \
+        "pad the cell axis to a block multiple (ops.py)"
+    tw = max(1, min(window, n_ticks))
+    n_windows = -(-n_ticks // tw)
+    return block_n, tw, n_windows
+
+
+def _launch_plan(
+    rows, n_acceptors: int, n_cells: int, n_proposers: int, n_ticks: int,
+    block_n: int, window: int, bcast_rows: tuple[tuple[int, int], ...],
+) -> LaunchPlan:
+    """Shared plan builder: ``rows`` describes the resident state planes
+    (None -> A rows), ``bcast_rows`` the trailing cell-independent streams
+    as (rows, cols) pairs."""
+    A, N, T = n_acceptors, n_cells, n_ticks
+    block_n, tw, n_windows = _window_geometry(N, T, block_n, window)
+    grid = (N // block_n, n_windows)
+    state_specs = _state_specs(rows, A, block_n)
+    state_shapes = tuple((A if r is None else r, N) for r in rows)
+    cell_spec = _cell_plane_spec(tw, 1, block_n)
+    cell_shape = (n_windows, tw, 1, N)
+    in_specs = (
+        (_scalar_spec(2), *state_specs, cell_spec, cell_spec)
+        + tuple(_bcast_plane_spec(tw, r, c) for r, c in bcast_rows)
+    )
+    in_shapes = (
+        ((2,), *state_shapes, cell_shape, cell_shape)
+        + tuple((n_windows, tw, r, c) for r, c in bcast_rows)
+    )
+    return LaunchPlan(
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(*state_specs, cell_spec, cell_spec),
+        in_shapes=in_shapes,
+        out_shapes=(*state_shapes, cell_shape, cell_shape),
+        block_n=block_n,
+        tw=tw,
+        n_windows=n_windows,
+    )
+
+
+def sync_launch_plan(
+    n_acceptors: int, n_cells: int, n_proposers: int, n_ticks: int,
+    *, block_n: int = 512, window: int = 16,
+) -> LaunchPlan:
+    """Launch geometry of ``lease_window_sync_pallas``: lease state +
+    attempt/release cell planes + acc_up/pclk/aclk broadcast columns."""
+    A, P = n_acceptors, n_proposers
+    return _launch_plan(
+        _LEASE_ROWS, A, n_cells, P, n_ticks, block_n, window,
+        bcast_rows=((A, 1), (P, 1), (A, 1)),
+    )
+
+
+def delayed_launch_plan(
+    n_acceptors: int, n_cells: int, n_proposers: int, n_ticks: int,
+    *, block_n: int = 512, window: int = 16,
+) -> LaunchPlan:
+    """Launch geometry of ``lease_window_delayed_pallas``: lease + netplane
+    state, the same streams as sync, plus the fused [P, A] link matrices."""
+    A, P = n_acceptors, n_proposers
+    return _launch_plan(
+        _LEASE_ROWS + _NET_ROWS, A, n_cells, P, n_ticks, block_n, window,
+        bcast_rows=((A, 1), (P, 1), (A, 1), (P, A)),
+    )
 
 
 def _init_resident(w, in_refs, out_refs):
@@ -220,11 +315,8 @@ def lease_window_sync_pallas(
     A, N = packed.promised.shape
     P = n_proposers
     T = attempts.shape[0]
-    block_n = min(block_n, N)
-    assert N % block_n == 0, "pad the cell axis to a block multiple (ops.py)"
-    tw = max(1, min(window, T))
-    n_windows = -(-T // tw)
-    grid = (N // block_n, n_windows)
+    plan = sync_launch_plan(A, N, P, T, block_n=block_n, window=window)
+    tw, n_windows = plan.tw, plan.n_windows
 
     kernel = functools.partial(
         _sync_window_kernel,
@@ -232,7 +324,6 @@ def lease_window_sync_pallas(
         guard_q4=lease_q4 if guard_q4 is None else guard_q4,
         n_proposers=P, tw=tw,
     )
-    state_specs = _state_specs(_LEASE_ROWS, A, block_n)
     row_plane = lambda p: _windowed(
         jnp.asarray(p, jnp.int32), n_windows, tw, 1, N
     )
@@ -240,22 +331,12 @@ def lease_window_sync_pallas(
         jnp.asarray(p, jnp.int32), n_windows, tw, rows, 1
     )
     sds = jax.ShapeDtypeStruct
-    state_shapes = [sds(a.shape, jnp.int32) for a in packed]
     outs = pl.pallas_call(
         kernel,
-        grid=grid,
-        in_specs=(
-            [_scalar_spec(2)]
-            + state_specs
-            + [_cell_plane_spec(tw, 1, block_n)] * 2
-            + [
-                _bcast_plane_spec(tw, A, 1),
-                _bcast_plane_spec(tw, P, 1),
-                _bcast_plane_spec(tw, A, 1),
-            ]
-        ),
-        out_specs=state_specs + [_cell_plane_spec(tw, 1, block_n)] * 2,
-        out_shape=state_shapes + [sds((n_windows, tw, 1, N), jnp.int32)] * 2,
+        grid=plan.grid,
+        in_specs=list(plan.in_specs),
+        out_specs=list(plan.out_specs),
+        out_shape=[sds(s, jnp.int32) for s in plan.out_shapes],
         interpret=interpret,
     )(
         jnp.stack([jnp.asarray(t0, jnp.int32), jnp.int32(T)]),
@@ -296,11 +377,8 @@ def lease_window_delayed_pallas(
     A, N = packed.promised.shape
     P = n_proposers
     T = attempts.shape[0]
-    block_n = min(block_n, N)
-    assert N % block_n == 0, "pad the cell axis to a block multiple (ops.py)"
-    tw = max(1, min(window, T))
-    n_windows = -(-T // tw)
-    grid = (N // block_n, n_windows)
+    plan = delayed_launch_plan(A, N, P, T, block_n=block_n, window=window)
+    tw, n_windows = plan.tw, plan.n_windows
 
     kernel = functools.partial(
         _delayed_window_kernel,
@@ -308,7 +386,6 @@ def lease_window_delayed_pallas(
         guard_q4=lease_q4 if guard_q4 is None else guard_q4,
         n_proposers=P, tw=tw,
     )
-    state_specs = _state_specs(_LEASE_ROWS + _NET_ROWS, A, block_n)
     row_plane = lambda p: _windowed(
         jnp.asarray(p, jnp.int32), n_windows, tw, 1, N
     )
@@ -316,23 +393,12 @@ def lease_window_delayed_pallas(
         jnp.asarray(p, jnp.int32), n_windows, tw, rows, 1
     )
     sds = jax.ShapeDtypeStruct
-    state_shapes = [sds(a.shape, jnp.int32) for a in (*packed, *net)]
     outs = pl.pallas_call(
         kernel,
-        grid=grid,
-        in_specs=(
-            [_scalar_spec(2)]
-            + state_specs
-            + [_cell_plane_spec(tw, 1, block_n)] * 2
-            + [
-                _bcast_plane_spec(tw, A, 1),
-                _bcast_plane_spec(tw, P, 1),
-                _bcast_plane_spec(tw, A, 1),
-                _bcast_plane_spec(tw, P, A),
-            ]
-        ),
-        out_specs=state_specs + [_cell_plane_spec(tw, 1, block_n)] * 2,
-        out_shape=state_shapes + [sds((n_windows, tw, 1, N), jnp.int32)] * 2,
+        grid=plan.grid,
+        in_specs=list(plan.in_specs),
+        out_specs=list(plan.out_specs),
+        out_shape=[sds(s, jnp.int32) for s in plan.out_shapes],
         interpret=interpret,
     )(
         jnp.stack([jnp.asarray(t0, jnp.int32), jnp.int32(T)]),

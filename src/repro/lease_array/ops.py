@@ -234,6 +234,11 @@ _window_scan_jit = functools.partial(
 )(_window_scan_impl)
 
 
+#: one-time flag: the traced-away skip below is a real coverage gap (the
+#: guard silently not running), so the first occurrence per process warns
+_WARNED_TRACED_SKIP = False
+
+
 def _guard_pack_budget(
     t0, n_ticks, planes, *, n_proposers, lease_q4, sync, clk0=None
 ):
@@ -249,6 +254,19 @@ def _guard_pack_budget(
     if clk0 is not None:
         consulted += tuple(clk0)
     if any(isinstance(x, jax.core.Tracer) for x in consulted):
+        global _WARNED_TRACED_SKIP
+        if not _WARNED_TRACED_SKIP:
+            _WARNED_TRACED_SKIP = True
+            warnings.warn(
+                "check_pack_budget skipped: the tick count or a consulted "
+                "plane is a tracer, so the host-side overflow guard cannot "
+                "run. The jitting caller owns the check — verify the "
+                "config statically first (engine.run_trace/sweep do, via "
+                "repro.analysis.staticcheck), or a replay past "
+                "state.max_pack_tick will silently corrupt the packed "
+                "fields.",
+                RuntimeWarning, stacklevel=3,
+            )
         return
     t0 = int(np.asarray(t0))
     max_delay = 0 if delay is None else int(np.asarray(delay).max(initial=0))

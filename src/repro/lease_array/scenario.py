@@ -54,6 +54,7 @@ __all__ = [
     "PlaneSpec",
     "PLANES",
     "register_plane",
+    "plane_table_md",
     "Scenario",
     "TickInputs",
     "make_tick",
@@ -137,6 +138,32 @@ register_plane(
     "acceptor local-clock step this tick (local quarter-ticks; 4 = rate 1.0)",
     min_value=1,
 )
+
+
+def plane_table_md(planes: Optional[dict[str, PlaneSpec]] = None) -> str:
+    """Render the registry as the markdown plane table embedded in
+    docs/scenario_api.md (between the ``plane-table`` markers).
+
+    The registry is the single source of truth: the table in the docs is
+    generated by this function, and the convention lint
+    (``repro.analysis.staticcheck.conventions``) fails CI whenever the two
+    drift — including when a plane is registered with an empty ``doc``.
+    """
+    specs = (PLANES if planes is None else planes).values()
+    rows = [
+        "| plane | per-tick shape | default | meaning |",
+        "|-------|----------------|---------|---------|",
+    ]
+    for spec in specs:
+        shape = "`[" + ", ".join(spec.dims) + "]`"
+        if spec.alts:
+            shape += " (or " + " / ".join(
+                "`[" + ", ".join(a) + "]`" for a in spec.alts
+            ) + ")"
+        rows.append(
+            f"| `{spec.name}` | {shape} | `{spec.default}` | {spec.doc} |"
+        )
+    return "\n".join(rows) + "\n"
 
 
 def validate_proposer_ids(arr, n_proposers: int) -> None:

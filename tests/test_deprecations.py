@@ -1,0 +1,150 @@
+"""The deprecation surface of the per-kwarg engine forms (S2).
+
+Every legacy form keeps working bit-for-bit — it builds the Scenario /
+TickInputs pytree and forwards — but now announces itself with a real
+DeprecationWarning, and the new forms stay silent. This file is on the
+convention lint's shim allowlist: it exists to exercise the deprecated
+spellings on purpose.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.lease_array import (  # noqa: E402
+    LeaseArrayEngine,
+    Scenario,
+    make_tick,
+)
+from repro.lease_array.netplane import init_netplane  # noqa: E402
+from repro.lease_array.ops import (  # noqa: E402
+    lease_plane_step,
+    lease_plane_step_delayed,
+    lease_plane_tick,
+)
+from repro.lease_array.state import NO_PROPOSER, init_state  # noqa: E402
+
+N, A, P = 8, 3, 2
+
+
+def _engine():
+    return LeaseArrayEngine(N, n_acceptors=A, n_proposers=P)
+
+
+def _planes(T):
+    attempts = np.full((T, N), NO_PROPOSER, np.int32)
+    attempts[0] = 0
+    return attempts
+
+
+# ------------------------------------------------------------ engine.step
+def test_step_legacy_kwargs_warn_and_still_work():
+    eng = _engine()
+    attempt = np.zeros(N, np.int32)
+    with pytest.warns(DeprecationWarning, match="per-plane .*step"):
+        owners = eng.step(attempt=attempt)
+    assert (np.asarray(owners) == 0).all()
+
+
+def test_step_legacy_positional_plane_warns():
+    eng = _engine()
+    with pytest.warns(DeprecationWarning, match="make_tick"):
+        eng.step(np.zeros(N, np.int32))
+
+
+def test_step_tickinputs_form_is_silent():
+    eng = _engine()
+    tick = make_tick(n_cells=N, n_acceptors=A, n_proposers=P,
+                     attempts=np.zeros(N, np.int32))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        owners = eng.step(tick)
+    assert (np.asarray(owners) == 0).all()
+
+
+def test_bare_step_is_silent():
+    eng = _engine()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        eng.step()
+
+
+def test_step_legacy_matches_tickinputs():
+    a = np.zeros(N, np.int32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        old = np.asarray(_engine().step(attempt=a))
+    tick = make_tick(n_cells=N, n_acceptors=A, n_proposers=P, attempts=a)
+    new = np.asarray(_engine().step(tick))
+    np.testing.assert_array_equal(old, new)
+
+
+# -------------------------------------------------------- engine.run_trace
+def test_run_trace_legacy_planes_warn_and_still_work():
+    T = 6
+    with pytest.warns(DeprecationWarning, match="raw plane arrays"):
+        owners, _ = _engine().run_trace(_planes(T))
+    assert (np.asarray(owners)[0] == 0).all()
+
+
+def test_run_trace_attempts_kwarg_warns():
+    with pytest.warns(DeprecationWarning, match="raw plane arrays"):
+        _engine().run_trace(attempts=_planes(4))
+
+
+def test_run_trace_scenario_form_is_silent():
+    T = 6
+    sc = Scenario.build(T, n_cells=N, n_acceptors=A, n_proposers=P,
+                        attempts=_planes(T))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        owners, _ = _engine().run_trace(sc)
+    assert (np.asarray(owners)[0] == 0).all()
+
+
+def test_run_trace_legacy_matches_scenario():
+    T = 6
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        old, old_c = _engine().run_trace(_planes(T))
+    sc = Scenario.build(T, n_cells=N, n_acceptors=A, n_proposers=P,
+                        attempts=_planes(T))
+    new, new_c = _engine().run_trace(sc)
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+    np.testing.assert_array_equal(np.asarray(old_c), np.asarray(new_c))
+
+
+# ------------------------------------------------- the lease_plane_* shims
+def test_lease_plane_step_shim_warns():
+    state = init_state(N, A, P)
+    with pytest.warns(DeprecationWarning, match="lease_plane_step is deprecated"):
+        state, count = lease_plane_step(
+            state, 0, np.zeros(N, np.int32),
+            np.full(N, NO_PROPOSER, np.int32), np.ones(A, np.int32),
+            majority=2, lease_q4=13,
+        )
+    assert int(np.asarray(count).max()) >= 0
+
+
+def test_lease_plane_step_delayed_shim_warns():
+    state, net = init_state(N, A, P), init_netplane(N, A)
+    with pytest.warns(DeprecationWarning,
+                      match="lease_plane_step_delayed is deprecated"):
+        lease_plane_step_delayed(
+            state, net, 0, np.zeros(N, np.int32),
+            np.full(N, NO_PROPOSER, np.int32), np.ones(A, np.int32),
+            np.zeros(A, np.int32), np.zeros(A, np.int32),
+            majority=2, lease_q4=13, round_q4=8,
+        )
+
+
+def test_lease_plane_tick_is_silent():
+    state, net = init_state(N, A, P), init_netplane(N, A)
+    tick = make_tick(n_cells=N, n_acceptors=A, n_proposers=P,
+                     attempts=np.zeros(N, np.int32))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        lease_plane_tick(state, net, 0, tick,
+                         majority=2, lease_q4=13, round_q4=8)

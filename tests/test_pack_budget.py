@@ -1,0 +1,113 @@
+"""max_pack_tick boundary behavior (S3).
+
+The packed int32 layout budgets PACK_SHIFT bits for ballots and the rest
+for quarter-tick deadlines; max_pack_tick is the hand-derived last safe
+tick. These tests nail the exact edge (limit passes, limit+1 raises), the
+MAX_REFEREE_RATE worst case, and cross-check the hand bound against the
+interval analysis's independently derived bound on a (P, rate) grid.
+"""
+import pytest
+
+pytest.importorskip("jax")
+
+from repro.analysis.staticcheck import derived_max_pack_tick  # noqa: E402
+from repro.lease_array.state import (  # noqa: E402
+    MAX_PACK_Q4,
+    PACK_MASK,
+    PACK_SHIFT,
+    QUARTERS,
+    check_pack_budget,
+    max_pack_tick,
+)
+from repro.lease_array.trace import MAX_REFEREE_RATE  # noqa: E402
+
+LEASE_Q4 = 13  # the engine default: 3 lease ticks + 1 guard quarter
+
+
+# ------------------------------------------------------------- exact edges
+def test_default_bound_value():
+    # P=8, lease_q4=13: ballot budget (32767 - 7)//8 - 1 = 4094 binds first
+    assert max_pack_tick(8, LEASE_Q4) == 4094
+
+
+def test_edge_tick_passes_and_next_raises():
+    limit = max_pack_tick(8, LEASE_Q4)
+    check_pack_budget(limit, 8, LEASE_Q4)  # exactly at the edge: fine
+    with pytest.raises(ValueError, match="exceeds the packed int32"):
+        check_pack_budget(limit + 1, 8, LEASE_Q4)
+
+
+def test_edge_ballot_fits_and_next_does_not():
+    """The bound is tight on the ballot side at P=8: the last attempt's
+    ballot fits PACK_SHIFT bits, one tick later it would not."""
+    P = 8
+    limit = max_pack_tick(P, LEASE_Q4)
+    assert (limit + 1) * P + (P - 1) <= PACK_MASK
+    assert (limit + 2) * P + (P - 1) > PACK_MASK
+
+
+def test_q4_side_binds_for_small_p():
+    """At P=2 the ballot budget is huge; the deadline (q4) side binds:
+    the last deadline any safe tick can mint fits MAX_PACK_Q4."""
+    P, rate = 2, QUARTERS
+    limit = max_pack_tick(P, LEASE_Q4, 0, rate, 0)
+    assert rate * limit + LEASE_Q4 <= MAX_PACK_Q4
+    assert rate * (limit + 1) + LEASE_Q4 > MAX_PACK_Q4
+
+
+def test_max_referee_rate_worst_case():
+    """A rate-9 clock mints deadlines 9/4 faster — the q4 side shrinks
+    accordingly and the edge stays exact."""
+    limit = max_pack_tick(2, LEASE_Q4, 0, MAX_REFEREE_RATE, 0)
+    assert MAX_REFEREE_RATE * limit + LEASE_Q4 <= MAX_PACK_Q4
+    assert MAX_REFEREE_RATE * (limit + 1) + LEASE_Q4 > MAX_PACK_Q4
+    check_pack_budget(limit, 2, LEASE_Q4, 0, MAX_REFEREE_RATE)
+    with pytest.raises(ValueError):
+        check_pack_budget(limit + 1, 2, LEASE_Q4, 0, MAX_REFEREE_RATE)
+
+
+# ----------------------------------------------------------- monotonicity
+def test_bound_monotone_in_delay_rate_slack():
+    base = max_pack_tick(8, LEASE_Q4, 0, QUARTERS, 0)
+    assert max_pack_tick(8, LEASE_Q4, 5, QUARTERS, 0) <= base
+    assert max_pack_tick(8, LEASE_Q4, 0, MAX_REFEREE_RATE, 0) <= base
+    assert max_pack_tick(8, LEASE_Q4, 0, QUARTERS, 100) <= base
+
+
+def test_slack_shifts_q4_bound_exactly():
+    """clk_slack models clocks already `slack` quarter-ticks ahead: on the
+    q4-bound side each unit of slack costs 1/rate ticks, floor-divided."""
+    P, rate, slack = 2, QUARTERS, 37
+    assert max_pack_tick(P, LEASE_Q4, 0, rate, slack) == (
+        (MAX_PACK_Q4 - LEASE_Q4 - slack) // rate
+    )
+
+
+# -------------------------------------- hand bound vs the interval theorem
+@pytest.mark.parametrize("n_proposers", [2, 3, 8, 16])
+@pytest.mark.parametrize("max_rate", [QUARTERS, MAX_REFEREE_RATE])
+def test_hand_bound_agrees_with_interval_bound(n_proposers, max_rate):
+    """The static analyzer re-derives the same last-safe tick from the
+    traced jaxpr with no knowledge of the formula — the hand bound is
+    neither optimistic (unsound) nor pessimistic (wasteful), to the tick."""
+    hand = max_pack_tick(n_proposers, LEASE_Q4, 0, max_rate, 0)
+    assert derived_max_pack_tick(
+        n_proposers, LEASE_Q4, 0, max_rate, 0
+    ) == hand
+
+
+@pytest.mark.parametrize("max_delay", [1, 3])
+def test_hand_bound_never_optimistic_under_delay(max_delay):
+    """With in-flight delay the hand bound charges a full QUARTERS*delay;
+    it must stay at or below what the analysis proves safe (sound), and
+    within one delay-charge of it (not gratuitously loose)."""
+    hand = max_pack_tick(8, LEASE_Q4, max_delay)
+    derived = derived_max_pack_tick(8, LEASE_Q4, max_delay)
+    assert hand <= derived
+    assert derived - hand <= QUARTERS * max_delay + 1
+
+
+def test_pack_geometry_consistency():
+    # the layout constants the bounds are derived from
+    assert MAX_PACK_Q4 == (2**31 - 1) >> PACK_SHIFT
+    assert PACK_MASK == (1 << PACK_SHIFT) - 1
