@@ -2,7 +2,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-all test-fast check bench-smoke bench-delay bench-drift bench-json bench-compare bench dev-deps
+.PHONY: test test-all test-fast check falsify-smoke bench-smoke bench-delay bench-drift bench-json bench-compare bench dev-deps
 
 test:  ## fast default: skip the long @slow differential replays
 	python -m pytest -x -q -m "not slow"
@@ -20,6 +20,10 @@ check:  ## leaselint: static pack-budget proof, kernel purity, launch audit, con
 	else \
 	  echo "ruff not installed; skipping the crash-level baseline (CI runs it)"; \
 	fi
+
+falsify-smoke:  ## seeded fixed-budget falsification contract (docs/falsification.md): the corrupt negative control MUST violate, the honest search must NOT
+	python -m repro.lease_array.falsify --mode corrupt --seed 7 --pop 128 --generations 6 --expect violation --out falsify_corrupt.json
+	python -m repro.lease_array.falsify --mode honest --seed 7 --pop 128 --generations 6 --expect none --out falsify_honest.json
 
 bench-smoke:  ## quick end-to-end signal: the vectorized lease-plane bench
 	python -c "from benchmarks.bench_lease_array import run; \

@@ -333,6 +333,50 @@ def run_sweep():
     )]
 
 
+def run_falsify():
+    """Falsification-search throughput: one steady-state generation of the
+    coverage-guided search — a margins-mode sweep over the whole
+    population plus the host-side selection + mutation pass."""
+    import numpy as np
+
+    from repro.lease_array import Scenario
+    from repro.lease_array.falsify import (
+        FalsifyConfig, margin_score, mutate, random_population,
+    )
+
+    cfg = FalsifyConfig(pop_size=4096)
+    eng = cfg.engine()
+    rng = np.random.default_rng(0)
+    space = cfg.mutation_space()
+    planes = random_population(rng, cfg)
+
+    def generation(planes):
+        res = eng.sweep(
+            Scenario(planes), collect="margins", verify=False,
+        )
+        scores = margin_score(res.margins)
+        order = np.argsort(scores, kind="stable")
+        elite = order[: cfg.pop_size // 4]
+        parents = rng.choice(elite, size=cfg.pop_size - elite.size)
+        children = {k: np.asarray(v)[parents] for k, v in planes.items()}
+        children, _ = mutate(children, rng, space)
+        return {
+            k: np.concatenate([np.asarray(v)[elite], children[k]])
+            for k, v in planes.items()
+        }, res
+
+    planes, _ = generation(planes)  # warm (compile) + first evolution
+    dt, (planes, res) = timed(lambda: generation(planes))
+    assert int(res.max_owner_count.max()) <= 1
+    return [(
+        "lease_falsify_throughput",
+        dt / (cfg.pop_size * cfg.n_cells * cfg.n_ticks) * 1e6,
+        f"{cfg.pop_size} scenarios/generation "
+        f"({cfg.n_cells} cells x {cfg.n_ticks} ticks, margins+mutation): "
+        f"{fmt(cfg.pop_size / dt)} scenarios/s",
+    )]
+
+
 JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_lease_array.json"
 
 
@@ -360,7 +404,7 @@ def emit_json(path=JSON_PATH) -> dict:
     trajectory stays interpretable across machines and PRs."""
     import jax
 
-    rows = run() + run_delayed() + run_drift() + run_sweep()
+    rows = run() + run_delayed() + run_drift() + run_sweep() + run_falsify()
     doc = {
         "benchmark": "lease_array",
         "git_rev": _git_rev(),

@@ -113,6 +113,7 @@ class TickConfig:
     clk_slack: int = 0
     sync: bool = False
     lease_q4: Optional[int] = None  # overrides lease_ticks when given
+    corrupt: bool = False  # thread the acc_stale/acc_equiv planes
 
     @property
     def majority(self) -> int:
@@ -154,6 +155,9 @@ _NET_STATE = (
 _DELAYED_ARGS = _SYNC_ARGS[:4] + _NET_STATE + _SYNC_ARGS[4:] + (
     ("link", "link"),
 )
+#: the corruption-plane variant: two extra [A, 1] boolean planes
+#: (falsifier negative controls — acc_stale / acc_equiv)
+_CORRUPT_ARGS = _DELAYED_ARGS + (("stale", "bool"), ("equiv", "bool"))
 
 
 @functools.lru_cache(maxsize=None)
@@ -168,6 +172,7 @@ def trace_tick_core(
     sync: bool = False,
     legs: str = "gather",
     block_n: int = 8,
+    corrupt: bool = False,
 ):
     """``jax.make_jaxpr`` of one tick core with the protocol constants
     closed over, on tiny block shapes (intervals are shape-oblivious
@@ -204,16 +209,22 @@ def trace_tick_core(
 
     def fn(*args):
         lease, net = args[:4], args[4:16]
-        t, att, rel, up, pclk, aclk, link = args[16:]
+        if corrupt:
+            t, att, rel, up, pclk, aclk, link, stale, equiv = args[16:]
+            adv = {"stale": stale, "equiv": equiv}
+        else:
+            t, att, rel, up, pclk, aclk, link = args[16:]
+            adv = {}
         lease, net, count = _netplane.delayed_tick_math(
             lease, net, t, att, rel, up, pclk, aclk, link,
             majority=majority, lease_q4=lease_q4, round_q4=round_q4,
-            n_proposers=P, guard_q4=guard_q4, legs=legs_fn,
+            n_proposers=P, guard_q4=guard_q4, legs=legs_fn, **adv,
         )
         return (*lease, *net, count)
 
+    extra = [sds((A, 1), i32)] * 2 if corrupt else []
     return jax.make_jaxpr(fn)(
-        *lease_shapes, *net_shapes, *common, sds((P, A), i32)
+        *lease_shapes, *net_shapes, *common, sds((P, A), i32), *extra
     )
 
 
@@ -477,8 +488,12 @@ def _core_and_layout(cfg: TickConfig, legs: str):
     closed = trace_tick_core(
         cfg.n_proposers, cfg.n_acceptors, cfg.eff_lease_q4, cfg.round_q4,
         cfg.eff_guard_q4, cfg.majority, sync=cfg.sync, legs=legs,
+        corrupt=cfg.corrupt,
     )
-    layout = _SYNC_ARGS if cfg.sync else _DELAYED_ARGS
+    if cfg.sync:
+        layout = _SYNC_ARGS
+    else:
+        layout = _CORRUPT_ARGS if cfg.corrupt else _DELAYED_ARGS
     return closed, layout
 
 

@@ -126,6 +126,16 @@ def check_tick_cores(
         trace_tick_core(*args, sync=False, legs="gather"),
         pallas_path=False, what="delayed_tick_math[legs_gather]",
     )
+    # the corruption-plane variants (falsifier negative controls) run the
+    # same backends, so they obey the same rules
+    findings += check_jaxpr_purity(
+        trace_tick_core(*args, sync=False, legs="select", corrupt=True),
+        pallas_path=True, what="delayed_tick_math[legs_select,corrupt]",
+    )
+    findings += check_jaxpr_purity(
+        trace_tick_core(*args, sync=False, legs="gather", corrupt=True),
+        pallas_path=False, what="delayed_tick_math[legs_gather,corrupt]",
+    )
     return findings
 
 
@@ -178,10 +188,23 @@ def check_window_kernels(
         )
     )(packed, net, t0, *planes.values(), sds((T, P, A), i32))
 
+    corrupt_jaxpr = jax.make_jaxpr(
+        lambda p, n, t, a, r, u, pc, ac, lk, st, eq:
+        lease_window_delayed_pallas(
+            p, n, t, a, r, u, pc, ac, lk, round_q4=4, stale=st, equiv=eq,
+            **kw
+        )
+    )(packed, net, t0, *planes.values(), sds((T, P, A), i32),
+      sds((T, A), i32), sds((T, A), i32))
+
     findings = check_jaxpr_purity(
         sync_jaxpr, pallas_path=True, what="lease_window_sync_pallas"
     )
     findings += check_jaxpr_purity(
         delayed_jaxpr, pallas_path=True, what="lease_window_delayed_pallas"
+    )
+    findings += check_jaxpr_purity(
+        corrupt_jaxpr, pallas_path=True,
+        what="lease_window_delayed_pallas[corrupt]",
     )
     return findings

@@ -49,9 +49,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from .netplane import NetPlaneState, init_netplane
-from .ops import _window_scan_impl, lease_plane_tick
+from .ops import _margin_scan_impl, _window_scan_impl, lease_plane_tick
 from .ref import owner_row
-from .scenario import Scenario, TickInputs, make_tick
+from .scenario import (
+    CORRUPTION_PLANES,
+    Scenario,
+    TickInputs,
+    make_tick,
+    plane_digest,
+)
 from .state import (
     DEFAULT_RATE,
     NO_PROPOSER,
@@ -153,7 +159,23 @@ def _scenario_scanner(
         )
         return state, net, owners, counts
 
-    return jax.jit(scan_fn)
+    jitted = jax.jit(scan_fn)
+
+    def strip_and_scan(state, net, t0, clk0, planes):
+        # all-zero corruption planes are the honest path: drop them
+        # host-side (same contract as ops.lease_window_scan) so the
+        # sync step never sees them and the honest trace stays corrupt-free
+        planes = {
+            k: v for k, v in planes.items()
+            if not (
+                k in CORRUPTION_PLANES
+                and not isinstance(v, jax.core.Tracer)
+                and not np.asarray(v).any()
+            )
+        }
+        return jitted(state, net, t0, clk0, planes)
+
+    return strip_and_scan
 
 
 class SweepResult(NamedTuple):
@@ -168,6 +190,9 @@ class SweepResult(NamedTuple):
     final_owners: np.ndarray     # [B, N] owner row after the last tick
     owners: Optional[np.ndarray] = None  # [B, T, N] iff collect="owners"
     counts: Optional[np.ndarray] = None  # [B, T, N] iff collect="owners"
+    #: [B] int32 per margin component iff collect="margins" (see
+    #: ops._margin_scan_impl for the definitions; MARGIN_BIG = never close)
+    margins: Optional[dict] = None
 
 
 def _cell_sharding_specs(planes_keys):
@@ -238,12 +263,22 @@ def _sweep_fn(
     nothing could reuse any plane and donating would only warn."""
 
     def one(state, net, t0, clk0, cell_planes, rest_planes):
-        _, _, owners, counts = _window_scan_impl(
-            state, net, t0, clk0, {**cell_planes, **rest_planes},
-            majority=majority, lease_q4=lease_q4, round_q4=round_q4,
-            guard_q4=guard_q4, backend=backend, sync=sync, block_n=block_n,
-            window=window,
-        )
+        if collect == "margins":
+            # the margin mode always runs the delayed jnp oracle scan —
+            # the backends agree bit-for-bit, so margins are backend-free
+            owners, counts, margins = _margin_scan_impl(
+                state, net, t0, clk0, {**cell_planes, **rest_planes},
+                majority=majority, lease_q4=lease_q4, round_q4=round_q4,
+                guard_q4=guard_q4,
+            )
+        else:
+            margins = None
+            _, _, owners, counts = _window_scan_impl(
+                state, net, t0, clk0, {**cell_planes, **rest_planes},
+                majority=majority, lease_q4=lease_q4, round_q4=round_q4,
+                guard_q4=guard_q4, backend=backend, sync=sync,
+                block_n=block_n, window=window,
+            )
         out = {
             "max_owner_count": counts.max(),
             "owned_frac": (owners >= 0).mean(),
@@ -252,6 +287,8 @@ def _sweep_fn(
         if collect == "owners":
             out["owners"] = owners
             out["counts"] = counts
+        if collect == "margins":
+            out["margins"] = margins
         return out
 
     batched = jax.vmap(one, in_axes=(None, None, None, None, 0, 0))
@@ -442,7 +479,11 @@ class LeaseArrayEngine:
                 n_cells=self.n_cells, n_acceptors=self.n_acceptors,
                 n_proposers=self.n_proposers,
             )
-            if np.asarray(tick.delay).any() or np.asarray(tick.drop).any():
+            if (
+                np.asarray(tick.delay).any()
+                or np.asarray(tick.drop).any()
+                or tick.corrupted
+            ):
                 self._netplane_active = True
         self._check_pack_budget(
             self.t + 1,
@@ -486,8 +527,8 @@ class LeaseArrayEngine:
         if netplane is False and (delayed or self._netplane_active):
             raise ValueError(
                 "netplane=False but the scenario carries nonzero delay/drop "
-                "planes (or messages are already in flight); the synchronous "
-                "model cannot honor them"
+                "or corruption planes (or messages are already in flight); "
+                "the synchronous model cannot honor them"
             )
         wants_net = bool(netplane) or (netplane is None and delayed)
         if mutate and wants_net:
@@ -532,7 +573,7 @@ class LeaseArrayEngine:
             scenario, releases, acc_up, delay, drop
         )
         T = scenario.n_ticks
-        sync = self._pick_model(netplane, scenario.delayed)
+        sync = self._pick_model(netplane, scenario.delayed or scenario.corrupted)
         if T == 0:
             empty = np.zeros((0, self.n_cells), np.int32)
             return empty, empty.copy()
@@ -543,7 +584,14 @@ class LeaseArrayEngine:
         )
         self._check_pack_budget(self.t + T, dmax, rmax)
         self._static_bound_check(self.t + T, dmax, rmax)
-        planes = {k: jnp.asarray(v) for k, v in scenario.planes.items()}
+        # all-zero corruption planes stay host-side: the honest replay
+        # never compiles the corrupt tick variant (bit-identical jaxpr)
+        planes = {
+            k: jnp.asarray(v) for k, v in scenario.planes.items()
+            if not (
+                k in CORRUPTION_PLANES and not np.asarray(v).any()
+            )
+        }
         n_dev = len(jax.devices())
         if n_dev > 1 and self.n_cells % n_dev != 0:
             n_dev = 1  # uneven cell split: stay on one device
@@ -562,7 +610,7 @@ class LeaseArrayEngine:
     # ----------------------------------------------------------- the sweep
     def sweep(
         self, scenarios, *, netplane=None, collect: str = "summary",
-        verify: bool = True, backend: Optional[str] = None,
+        verify: bool = True, backend: Optional[str] = None, tags=None,
     ) -> SweepResult:
         """Replay a BATCH of scenarios in ONE dispatch — "replay 10k fault
         scenarios" as a single call.
@@ -581,11 +629,18 @@ class LeaseArrayEngine:
         ``collect="summary"`` (default) reduces inside the dispatch — only
         [B]-shaped verdicts and the [B, N] final owner rows come back, so
         10k-scenario sweeps never materialize [B, T, N] on the host;
-        ``collect="owners"`` also returns the full owners/counts cubes.
-        With ``verify=True`` a per-scenario §4 violation (max owner count
-        > 1) raises immediately.
+        ``collect="owners"`` also returns the full owners/counts cubes;
+        ``collect="margins"`` additionally folds the §4 boundary-proximity
+        margins (``ops._margin_scan_impl``) into the dispatch — [B] int32
+        scalars per component, the falsifier's fitness signal, still never
+        materializing [B, T, N]. With ``verify=True`` a per-scenario §4
+        violation (max owner count > 1) raises immediately; the message
+        carries each offender's ``plane_digest`` (and its ``tags[i]``
+        lineage string when the caller — e.g. ``falsify.search`` — passes
+        per-scenario ``tags``), so a 10k-batch violation reproduces
+        standalone.
         """
-        if collect not in ("summary", "owners"):
+        if collect not in ("summary", "owners", "margins"):
             raise ValueError(f"unknown collect mode {collect!r}")
         if isinstance(scenarios, (list, tuple)):
             if not scenarios:
@@ -604,15 +659,26 @@ class LeaseArrayEngine:
         delayed = dmax > 0 or bool(np.asarray(stacked.planes["drop"]).any())
         # all-DEFAULT_RATE rate planes are the in-graph default clock:
         # don't ship [B, T, P]/[B, T, A] constants into the dispatch
-        # (ops._local_clock_planes derives the same readings bit-for-bit)
-        drop_rates = []
+        # (ops._local_clock_planes derives the same readings bit-for-bit);
+        # likewise all-zero corruption planes stay host-side so an honest
+        # sweep never compiles (or pays for) the corrupt tick variant
+        drop_keys = []
         rmax = QUARTERS
         for k in ("prop_rate", "acc_rate"):
             plane = np.asarray(stacked.planes[k])
             if plane.size == 0 or (plane == DEFAULT_RATE).all():
-                drop_rates.append(k)
+                drop_keys.append(k)
             else:
                 rmax = max(rmax, int(plane.max()))
+        corrupt = False
+        for k in CORRUPTION_PLANES:
+            plane = stacked.planes.get(k)
+            if plane is None:
+                continue
+            if np.asarray(plane).any():
+                corrupt = True
+            else:
+                drop_keys.append(k)
         # in collect="owners" mode the [B, T, N] attempts/releases planes
         # are DONATED to the dispatch (XLA reuses their buffers for the
         # output cubes); copy those leaves when they are already device
@@ -620,7 +686,7 @@ class LeaseArrayEngine:
         donating = collect == "owners"
         cell_planes, rest_planes = {}, {}
         for k, v in stacked.planes.items():
-            if k in drop_rates:
+            if k in drop_keys:
                 continue
             arr = jnp.asarray(v)
             if k in ("attempts", "releases"):
@@ -633,7 +699,8 @@ class LeaseArrayEngine:
         if T == 0:
             raise ValueError("sweep scenarios must have at least one tick")
         # a sweep is read-only: pick the model without flipping the engine
-        sync = self._pick_model(netplane, delayed, mutate=False)
+        # (corruption planes only exist in the delayed tick)
+        sync = self._pick_model(netplane, delayed or corrupt, mutate=False)
         self._check_pack_budget(self.t + T, dmax, rmax)
         self._static_bound_check(self.t + T, dmax, rmax)
         n_dev = len(jax.devices())
@@ -657,12 +724,27 @@ class LeaseArrayEngine:
             counts=(
                 np.asarray(out["counts"]) if collect == "owners" else None
             ),
+            margins=(
+                {k: np.asarray(v) for k, v in out["margins"].items()}
+                if collect == "margins" else None
+            ),
         )
         if verify and (result.max_owner_count > 1).any():
             bad = np.flatnonzero(result.max_owner_count > 1)
+            # name each offender by its content digest (+ the caller's
+            # lineage tag): batch indices alone don't reproduce standalone
+            ids = []
+            for i in bad[:8]:
+                sc_planes = {
+                    k: np.asarray(v)[i] for k, v in stacked.planes.items()
+                }
+                label = f"#{i} digest={plane_digest(sc_planes)}"
+                if tags is not None and i < len(tags):
+                    label += f" tag={tags[i]}"
+                ids.append(label)
             raise AssertionError(
-                f"§4 at-most-one-owner violated in scenario(s) "
-                f"{bad[:8].tolist()} of the sweep"
+                f"§4 at-most-one-owner violated in {bad.size} scenario(s) "
+                f"of the sweep: " + "; ".join(ids)
             )
         return result
 

@@ -1,0 +1,46 @@
+"""Coverage-guided falsification of the §4 at-most-one-owner guarantee.
+
+The sweep driver replays thousands of fault scenarios per dispatch; this
+package turns that throughput into a bug-hunter: a PRNG-keyed population
+of :class:`~repro.lease_array.scenario.Scenario` planes is evolved toward
+the invariant boundary with structure-aware mutations
+(:mod:`~repro.lease_array.falsify.mutate`), scored by the in-dispatch
+margin reductions (``engine.sweep(collect="margins")``), and elitist-
+selected on boundary proximity (:mod:`~repro.lease_array.falsify.search`).
+Any violating survivor is minimized by the greedy shrinker
+(:mod:`~repro.lease_array.falsify.shrink`) and identified by its plane
+digest + mutation lineage. ``falsify/corpus/`` checks in the known bug
+species (the PR 5 guarded-expiry tie, the PR 2 §3-step-5 ghost lease) as
+regression fixtures the margin scorer must keep ranking near the
+boundary. See docs/falsification.md.
+
+Run it: ``python -m repro.lease_array.falsify --mode corrupt --expect
+violation`` (the corruption-plane negative control proving the alarm can
+fire) / ``--mode honest --expect none`` (the actual falsification run).
+"""
+from .corpus import CORPUS_DIR, load_corpus, load_scenario, save_scenario
+from .mutate import MUTATION_OPS, MutationSpace, mutate
+from .search import (
+    FalsifyConfig,
+    FalsifyResult,
+    margin_score,
+    random_population,
+    search,
+)
+from .shrink import shrink
+
+__all__ = [
+    "CORPUS_DIR",
+    "FalsifyConfig",
+    "FalsifyResult",
+    "MUTATION_OPS",
+    "MutationSpace",
+    "load_corpus",
+    "load_scenario",
+    "margin_score",
+    "mutate",
+    "random_population",
+    "save_scenario",
+    "search",
+    "shrink",
+]

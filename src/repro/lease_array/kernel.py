@@ -188,14 +188,20 @@ def sync_launch_plan(
 
 def delayed_launch_plan(
     n_acceptors: int, n_cells: int, n_proposers: int, n_ticks: int,
-    *, block_n: int = 512, window: int = 16,
+    *, block_n: int = 512, window: int = 16, corrupt: bool = False,
 ) -> LaunchPlan:
     """Launch geometry of ``lease_window_delayed_pallas``: lease + netplane
-    state, the same streams as sync, plus the fused [P, A] link matrices."""
+    state, the same streams as sync, plus the fused [P, A] link matrices.
+    ``corrupt`` appends the two adversarial [A, 1] corruption columns
+    (stale-ballot / equivocation masks) to the streamed planes — the
+    honest launch is geometry-identical to the pre-falsifier kernel."""
     A, P = n_acceptors, n_proposers
+    bcast = ((A, 1), (P, 1), (A, 1), (P, A))
+    if corrupt:
+        bcast += ((A, 1), (A, 1))
     return _launch_plan(
         _LEASE_ROWS + _NET_ROWS, A, n_cells, P, n_ticks, block_n, window,
-        bcast_rows=((A, 1), (P, 1), (A, 1), (P, A)),
+        bcast_rows=bcast,
     )
 
 
@@ -251,11 +257,14 @@ def _delayed_window_kernel(
     sc_ref,
     *refs,
     majority: int, lease_q4: int, round_q4: int, guard_q4: int,
-    n_proposers: int, tw: int,
+    n_proposers: int, tw: int, corrupt: bool = False,
 ):
     n_state = N_LEASE + N_NET
-    ins, outs = refs[: n_state + 6], refs[n_state + 6:]
-    att_ref, rel_ref, up_ref, pclk_ref, aclk_ref, link_ref = ins[n_state:]
+    n_in = n_state + (8 if corrupt else 6)
+    ins, outs = refs[:n_in], refs[n_in:]
+    att_ref, rel_ref, up_ref, pclk_ref, aclk_ref, link_ref = \
+        ins[n_state:n_state + 6]
+    stale_ref, equiv_ref = ins[n_state + 6:n_in] if corrupt else (None, None)
     st_refs = outs[:n_state]
     own_ref, cnt_ref = outs[n_state], outs[n_state + 1]
     _init_resident(pl.program_id(1), ins[:n_state], st_refs)
@@ -263,12 +272,17 @@ def _delayed_window_kernel(
 
     def body(tau, carry):
         lease, net = carry[:N_LEASE], carry[N_LEASE:]
+        adv = (
+            {"stale": stale_ref[tau], "equiv": equiv_ref[tau]}
+            if corrupt else {}
+        )
         lease, net, count = delayed_tick_math(
             lease, net, t_base + tau,
             att_ref[tau], rel_ref[tau], up_ref[tau],
             pclk_ref[tau], aclk_ref[tau], link_ref[tau],
             majority=majority, lease_q4=lease_q4, round_q4=round_q4,
             n_proposers=n_proposers, guard_q4=guard_q4, legs=legs_select,
+            **adv,
         )
         own_ref[tau] = lease[_OWN_ID]
         cnt_ref[tau] = count
@@ -370,21 +384,28 @@ def lease_window_delayed_pallas(
     block_n: int = 512,
     window: int = 16,
     interpret: bool = True,  # False on real TPUs
+    stale=None,  # [T, A] adversarial stale-ballot mask (None = honest)
+    equiv=None,  # [T, A] adversarial equivocation mask (None = honest)
 ) -> tuple[PackedLeaseState, NetPlaneState, jax.Array, jax.Array]:
     """Replay T delayed-model ticks in ONE kernel launch (state AND the
     in-flight netplane stay VMEM-resident across windows). Returns
-    (packed_state', net', owners [T, N], counts [T, N])."""
+    (packed_state', net', owners [T, N], counts [T, N]). Passing either
+    corruption mask streams both as extra [A, 1] broadcast columns and
+    compiles the corrupted tick body; the honest launch is unchanged."""
     A, N = packed.promised.shape
     P = n_proposers
     T = attempts.shape[0]
-    plan = delayed_launch_plan(A, N, P, T, block_n=block_n, window=window)
+    corrupt = stale is not None or equiv is not None
+    plan = delayed_launch_plan(
+        A, N, P, T, block_n=block_n, window=window, corrupt=corrupt
+    )
     tw, n_windows = plan.tw, plan.n_windows
 
     kernel = functools.partial(
         _delayed_window_kernel,
         majority=majority, lease_q4=lease_q4, round_q4=round_q4,
         guard_q4=lease_q4 if guard_q4 is None else guard_q4,
-        n_proposers=P, tw=tw,
+        n_proposers=P, tw=tw, corrupt=corrupt,
     )
     row_plane = lambda p: _windowed(
         jnp.asarray(p, jnp.int32), n_windows, tw, 1, N
@@ -408,6 +429,15 @@ def lease_window_delayed_pallas(
         col_plane(jnp.asarray(acc_up).astype(jnp.int32), A),
         col_plane(pclk, P), col_plane(aclk, A),
         _windowed(jnp.asarray(link, jnp.int32), n_windows, tw, P, A),
+        *(
+            (
+                col_plane(jnp.zeros((T, A), jnp.int32) if stale is None
+                          else stale, A),
+                col_plane(jnp.zeros((T, A), jnp.int32) if equiv is None
+                          else equiv, A),
+            )
+            if corrupt else ()
+        ),
     )
     n_state = N_LEASE + N_NET
     new_packed = PackedLeaseState(*outs[:N_LEASE])

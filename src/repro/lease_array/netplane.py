@@ -228,6 +228,8 @@ def delayed_tick_math(
     n_proposers: int,
     guard_q4: int = None,  # proposer's guarded own timer (default: no drift)
     legs=legs_gather,  # per-leg link strategy (select inside Pallas)
+    stale=None,        # [A, 1|bn] adversarial: honor below-promise ballots
+    equiv=None,        # [A, 1|bn] adversarial: report a live lease as open
 ) -> tuple[tuple, tuple, jnp.ndarray]:
     """One tick of the delayed model on the packed layout. Returns
     (lease', net', owner_count[1, bn]).
@@ -248,6 +250,16 @@ def delayed_tick_math(
     accumulated local quarter-ticks; per-cell owner/round rows read the
     relevant proposer's entry via `state.clock_select`). All-``4t`` clock
     planes reproduce the rate-1 engine bit-for-bit.
+
+    ``stale``/``equiv`` are the adversarial corruption masks (the
+    falsification engine's negative controls — Byzantine acceptors in the
+    spirit of dca's byzantine variants): where ``stale`` is set the
+    acceptor grants prepares and accepts proposes whose ballot is BELOW
+    its promise (§3.2/§3.4 broken; its promise still only ratchets up),
+    and where ``equiv`` is set its prepare response lies that it holds no
+    accepted lease (the §3.3 open count poisons). Passing ``None`` (the
+    default) traces no corruption ops at all, so the honest path's jaxpr
+    is byte-identical to a build without these arguments.
     """
     promised, acc_lease, own_id, ownp = lease
     (preq, presp, presp_pay, poreq, poresp, rel_s,
@@ -262,6 +274,8 @@ def delayed_tick_math(
     a_ids = jax.lax.broadcasted_iota(jnp.int32, promised.shape, 0)
     a_bit = 1 << a_ids                                             # [A, bn]
     up = up > 0
+    stale_b = None if stale is None else stale > 0
+    equiv_b = None if equiv is None else equiv > 0
 
     def due(slot):
         return (slot > 0) & (slot < live_min)
@@ -336,14 +350,24 @@ def delayed_tick_math(
     # -- 4b. deliver prepare requests at acceptors (§3.2) ------------------
     preq_due = due(preq)
     preq_b = preq & PACK_MASK
-    grant = preq_due & up & (preq_b >= promised)
-    promised = jnp.where(grant, preq_b, promised)
+    if stale_b is None:
+        grant = preq_due & up & (preq_b >= promised)
+        promised = jnp.where(grant, preq_b, promised)
+    else:
+        # stale-ballot injection: the corrupted acceptor grants below its
+        # promise too (the promise itself still only ratchets upward)
+        grant = preq_due & up & ((preq_b >= promised) | stale_b)
+        promised = jnp.where(grant, jnp.maximum(promised, preq_b), promised)
     # the response leg belongs to the REQUESTER's link: each slot's ballot
     # names the proposer the grant travels back to
     dq4, lost = legs(link, ballot_proposer(preq_b, P))
     send_presp = grant & ~lost
     acc_b = acc_lease & PACK_MASK                                   # [A, bn]
     acc_prop = jnp.where(acc_b > 0, ballot_proposer(acc_b, P), NO_PROPOSER)
+    if equiv_b is not None:
+        # equivocation: the corrupted acceptor's grant payload claims it
+        # holds no accepted lease, whatever acc_lease says
+        acc_prop = jnp.where(equiv_b, NO_PROPOSER, acc_prop)
     presp = jnp.where(send_presp, pack_slot(preq_b, t4 + dq4), presp)
     presp_pay = jnp.where(send_presp, acc_prop, presp_pay)
     preq = jnp.where(preq_due, 0, preq)
@@ -385,6 +409,8 @@ def delayed_tick_math(
     poreq_due = due(poreq)
     poreq_b = poreq & PACK_MASK
     accept = poreq_due & up & (poreq_b >= promised)
+    if stale_b is not None:
+        accept = poreq_due & up & ((poreq_b >= promised) | stale_b)
     # each accepting acceptor restarts the full-length timer on ITS clock
     acc_lease = jnp.where(accept, pack_pair(aclk + lease_q4, poreq_b), acc_lease)
     dq4, lost = legs(link, ballot_proposer(poreq_b, P))

@@ -34,7 +34,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from .kernel import lease_window_delayed_pallas, lease_window_sync_pallas
-from .netplane import NetPlaneState, delayed_tick_math, pack_link
+from .netplane import (
+    R_PROPOSING,
+    NetPlaneState,
+    delayed_tick_math,
+    pack_link,
+)
 from .ref import link_matrix, sync_tick_math
 from .scenario import TickInputs, make_tick
 from .state import (
@@ -42,8 +47,11 @@ from .state import (
     QUARTERS,
     LeaseArrayState,
     PackedLeaseState,
+    ballot_proposer,
     check_pack_budget,
+    clock_select,
     pack_state,
+    packed_q4,
     rate1_clock,
     unpack_state,
 )
@@ -155,6 +163,21 @@ def _window_scan_impl(
     T = attempts.shape[0]
     pclk, aclk = _local_clock_planes(t0, T, clk0, planes, P, A)
     packed = pack_state(state)
+    # the adversarial corruption planes: absent from the dict means the
+    # honest tick math traces with NO corruption ops (the callers omit
+    # all-zero planes host-side, so honest replays stay byte-identical)
+    stale = planes.get("acc_stale")
+    equiv = planes.get("acc_equiv")
+    corrupt = stale is not None or equiv is not None
+    if corrupt:
+        if sync:
+            raise ValueError(
+                "corruption planes (acc_stale/acc_equiv) need the delayed "
+                "model; the synchronous tick cannot honor them"
+            )
+        za = jnp.zeros((T, A), jnp.int32)
+        stale = za if stale is None else jnp.asarray(stale, jnp.int32)
+        equiv = za if equiv is None else jnp.asarray(equiv, jnp.int32)
     if not sync:
         link = pack_link(planes["delay"], planes["drop"])  # [T, P, A]
 
@@ -179,18 +202,24 @@ def _window_scan_impl(
         else:
             def body(carry, xs):
                 lease, netc, t = carry
-                a, r, u, pc, ac, lk = xs
+                a, r, u, pc, ac, lk = xs[:6]
+                adv = (
+                    {"stale": xs[6][:, None], "equiv": xs[7][:, None]}
+                    if corrupt else {}
+                )
                 lease, netc, count = delayed_tick_math(
                     lease, netc, t, a[None, :], r[None, :], u[:, None],
                     pc[:, None], ac[:, None], lk,
                     majority=majority, lease_q4=lease_q4, round_q4=round_q4,
-                    n_proposers=P, guard_q4=guard_q4,
+                    n_proposers=P, guard_q4=guard_q4, **adv,
                 )
                 return (lease, netc, t + 1), (lease[2], count)
 
+            xs = (attempts, releases, acc_up, pclk, aclk, link)
+            if corrupt:
+                xs += (stale, equiv)
             (lease, netc, _), (owners, counts) = jax.lax.scan(
-                body, (tuple(packed), tuple(net), t0),
-                (attempts, releases, acc_up, pclk, aclk, link),
+                body, (tuple(packed), tuple(net), t0), xs
             )
             new_net = NetPlaneState(*netc)
         new_state = unpack_state(PackedLeaseState(*lease), P)
@@ -213,7 +242,7 @@ def _window_scan_impl(
         net_p = _pad_net(net, block_n)
         padded, net_p, owners, counts = lease_window_delayed_pallas(
             padded, net_p, t0, attempts_p, releases_p, acc_up, pclk, aclk,
-            link,
+            link, stale=stale, equiv=equiv,
             majority=majority, lease_q4=lease_q4, round_q4=round_q4,
             n_proposers=P, guard_q4=guard_q4, block_n=block_n,
             window=window, interpret=interpret,
@@ -232,6 +261,141 @@ _window_scan_jit = functools.partial(
         "block_n", "window",
     ),
 )(_window_scan_impl)
+
+
+#: "never got close" sentinel for the min-tracked margin components
+MARGIN_BIG = 1 << 28
+
+#: the margin components, in the order the scan carry holds them
+MARGIN_NAMES = ("votes_gap", "tie_q4", "ghost_q4", "open_rounds")
+
+
+def _margin_scan_impl(
+    state: LeaseArrayState,
+    net,
+    t0,
+    clk0,
+    planes: dict,
+    *,
+    majority: int,
+    lease_q4: int,
+    round_q4: int,
+    guard_q4: int,
+):
+    """The delayed jnp scan with §4 boundary-proximity margins folded into
+    the carry — the body of ``engine.sweep(collect="margins")``. Margins
+    are whole-scenario int32 scalars reduced in-dispatch (never [T, N],
+    let alone [B, T, N]):
+
+      ``votes_gap``   min votes still missing for a *foreign* round to
+                      reach a majority while another proposer's belief is
+                      live — the ticks-to-second-believer proxy (0 ⇔ the
+                      violating vote is already in flight);
+      ``tie_q4``      min |owner expiry − owner local clock| in quarter-
+                      ticks over ticks whose release names the live owner
+                      — the guarded-expiry tie species (the PR 5 bug was
+                      exactly tie_q4 = 0);
+      ``ghost_q4``    min local quarter-ticks by which a majority-accepted
+                      claim missed its own guarded timer (§3 step 5: the
+                      ghost-lease guard refused the win; 1 = refused by a
+                      single quarter-tick);
+      ``open_rounds`` max cells with a round open at once (contention).
+
+    Min components start at ``MARGIN_BIG`` ("never got close"). Always
+    the jnp oracle path of the delayed model — the backends are
+    bit-identical by construction, so margins are backend-independent,
+    and zero-delay planes are the sync special case bit-for-bit. Returns
+    (owners [T, N], counts [T, N], margins dict of scalars).
+    """
+    P = state.n_proposers
+    A, N = state.highest_promised.shape
+    t0 = jnp.asarray(t0, jnp.int32)
+    attempts = jnp.asarray(planes["attempts"], jnp.int32)
+    releases = jnp.asarray(planes["releases"], jnp.int32)
+    acc_up = jnp.asarray(planes["acc_up"], jnp.int32)
+    T = attempts.shape[0]
+    pclk, aclk = _local_clock_planes(t0, T, clk0, planes, P, A)
+    packed = pack_state(state)
+    link = pack_link(planes["delay"], planes["drop"])
+    stale = planes.get("acc_stale")
+    equiv = planes.get("acc_equiv")
+    corrupt = stale is not None or equiv is not None
+    if corrupt:
+        za = jnp.zeros((T, A), jnp.int32)
+        stale = za if stale is None else jnp.asarray(stale, jnp.int32)
+        equiv = za if equiv is None else jnp.asarray(equiv, jnp.int32)
+    big = jnp.int32(MARGIN_BIG)
+
+    def vote_count(bits):  # popcount over the A vote bits (compile-time A)
+        n = bits & 1
+        for a in range(1, A):
+            n = n + ((bits >> a) & 1)
+        return n
+
+    def body(carry, xs):
+        lease, netc, t, m = carry
+        a, r, u, pc, ac, lk = xs[:6]
+        adv = (
+            {"stale": xs[6][:, None], "equiv": xs[7][:, None]}
+            if corrupt else {}
+        )
+        att_row, rel_row = a[None, :], r[None, :]
+        pc_col = pc[:, None]
+        # pre-tick: guarded-expiry tie distance at releases that name the
+        # live owner — its packed expiry vs its local clock right now
+        own_id_pre, ownp_pre = lease[2], lease[3]
+        own_clk = clock_select(pc_col, own_id_pre)
+        names_owner = (
+            (rel_row >= 0) & (own_id_pre == rel_row) & (ownp_pre > 0)
+        )
+        tie_clk_d = jnp.abs(packed_q4(ownp_pre) - own_clk)
+        tie_q4 = jnp.min(jnp.where(names_owner, tie_clk_d, big))
+
+        lease, netc, count = delayed_tick_math(
+            lease, netc, t, att_row, rel_row, u[:, None],
+            pc_col, ac[:, None], lk,
+            majority=majority, lease_q4=lease_q4, round_q4=round_q4,
+            n_proposers=P, guard_q4=guard_q4, **adv,
+        )
+
+        # post-tick: contention gap + ghost-guard refusals still visible
+        # in the round rows (a refused §3-step-5 claim leaves its round
+        # R_PROPOSING with a majority of accept bits set)
+        own_id, ownp = lease[2], lease[3]
+        rnd_ballot, rnd_phase, rnd_expiry = netc[6], netc[7], netc[8]
+        rnd_open_bits, rnd_acc_bits = netc[10], netc[11]
+        rnd_prop = ballot_proposer(rnd_ballot, P)
+        rnd_clk = clock_select(pc_col, rnd_prop)
+        nvotes = jnp.maximum(
+            vote_count(rnd_open_bits), vote_count(rnd_acc_bits)
+        )
+        contested = (rnd_ballot > 0) & (ownp > 0) & (own_id != rnd_prop)
+        gap = jnp.maximum(majority - nvotes, 0)
+        votes_gap = jnp.min(jnp.where(contested, gap, big))
+        refused = (
+            (rnd_ballot > 0) & (rnd_phase == R_PROPOSING)
+            & (vote_count(rnd_acc_bits) >= majority)
+        )
+        ghost_clk_d = rnd_clk - rnd_expiry + 1
+        ghost_q4 = jnp.min(jnp.where(refused, ghost_clk_d, big))
+        open_rounds = jnp.sum((rnd_ballot > 0).astype(jnp.int32))
+        m = (
+            jnp.minimum(m[0], votes_gap),
+            jnp.minimum(m[1], tie_q4),
+            jnp.minimum(m[2], ghost_q4),
+            jnp.maximum(m[3], open_rounds),
+        )
+        return (lease, netc, t + 1, m), (lease[2], count)
+
+    m0 = (big, big, big, jnp.int32(0))
+    xs = (attempts, releases, acc_up, pclk, aclk, link)
+    if corrupt:
+        xs += (stale, equiv)
+    (_, _, _, m), (owners, counts) = jax.lax.scan(
+        body, (tuple(packed), tuple(net), t0, m0), xs
+    )
+    margins = dict(zip(MARGIN_NAMES, m))
+    return owners.reshape(T, N), counts.reshape(T, N), margins
 
 
 #: one-time flag: the traced-away skip below is a real coverage gap (the
@@ -319,6 +483,17 @@ def lease_window_scan(
     """
     if guard_q4 is None:
         guard_q4 = lease_q4
+    # all-zero corruption planes are the honest acceptor: strip them
+    # host-side so the honest replay never compiles the corrupt variant
+    # (and a zero-corruption Scenario still runs under sync=True)
+    planes = {
+        k: v for k, v in planes.items()
+        if not (
+            k in ("acc_stale", "acc_equiv")
+            and not isinstance(v, jax.core.Tracer)
+            and not np.asarray(v).any()
+        )
+    }
     _guard_pack_budget(
         t0, int(jnp.shape(planes["attempts"])[0]), planes,
         n_proposers=state.n_proposers, lease_q4=lease_q4, sync=sync,
@@ -367,19 +542,22 @@ def lease_plane_tick(
     if guard_q4 is None:
         guard_q4 = lease_q4
 
-    def _default_rate(k, v):
-        # an all-DEFAULT_RATE rate plane is the in-graph default clock:
-        # omit it from the dispatch dict (one fewer host->device upload
-        # per step; the scan derives the same readings bit-for-bit)
-        return (
-            k in ("prop_rate", "acc_rate")
-            and not isinstance(v, jax.core.Tracer)
-            and bool((np.asarray(v) == QUARTERS).all())
-        )
+    def _default_plane(k, v):
+        # an all-DEFAULT_RATE rate plane is the in-graph default clock,
+        # and an all-zero corruption plane is the honest acceptor: omit
+        # either from the dispatch dict (one fewer host->device upload
+        # per step; the scan derives identical behavior bit-for-bit)
+        if isinstance(v, jax.core.Tracer):
+            return False
+        if k in ("prop_rate", "acc_rate"):
+            return bool((np.asarray(v) == QUARTERS).all())
+        if k in ("acc_stale", "acc_equiv"):
+            return not np.asarray(v).any()
+        return False
 
     planes = {
         k: jnp.asarray(v)[None, ...] for k, v in tick.planes.items()
-        if not _default_rate(k, v)
+        if not _default_plane(k, v)
     }
     _guard_pack_budget(
         t, 1, tick.planes,

@@ -53,8 +53,10 @@ from .state import DEFAULT_RATE, NO_PROPOSER
 __all__ = [
     "PlaneSpec",
     "PLANES",
+    "CORRUPTION_PLANES",
     "register_plane",
     "plane_table_md",
+    "plane_digest",
     "Scenario",
     "TickInputs",
     "make_tick",
@@ -138,6 +140,23 @@ register_plane(
     "acceptor local-clock step this tick (local quarter-ticks; 4 = rate 1.0)",
     min_value=1,
 )
+register_plane(
+    "acc_stale", ("A",), 0,
+    "adversarial (falsifier negative control): acceptor honors "
+    "below-promise ballots this tick",
+    min_value=0,
+)
+register_plane(
+    "acc_equiv", ("A",), 0,
+    "adversarial (falsifier negative control): acceptor reports its live "
+    "accepted lease as open this tick",
+    min_value=0,
+)
+
+#: the adversarial corruption planes — Byzantine acceptor behaviors the
+#: honest protocol must never exhibit; the falsification engine enables
+#: them as negative controls proving the §4 alarm can fire at all
+CORRUPTION_PLANES = ("acc_stale", "acc_equiv")
 
 
 def plane_table_md(planes: Optional[dict[str, PlaneSpec]] = None) -> str:
@@ -164,6 +183,25 @@ def plane_table_md(planes: Optional[dict[str, PlaneSpec]] = None) -> str:
             f"| `{spec.name}` | {shape} | `{spec.default}` | {spec.doc} |"
         )
     return "\n".join(rows) + "\n"
+
+
+def plane_digest(planes: dict) -> str:
+    """Content hash of one scenario's planes (12 hex chars): a stable,
+    seed-independent identifier for "which exact scenario was this".
+    ``engine.sweep`` prints it for §4-violating batch members so a
+    10k-batch offender can be re-identified standalone, and the
+    falsification engine stamps it into survivor lineage tags. Plane
+    *names* participate, so two scenarios differing only in which plane
+    holds a value hash differently."""
+    import hashlib
+
+    h = hashlib.sha256()
+    for name in sorted(planes):
+        arr = np.ascontiguousarray(np.asarray(planes[name], np.int32))
+        h.update(name.encode())
+        h.update(np.asarray(arr.shape, np.int64).tobytes())
+        h.update(arr.tobytes())
+    return h.hexdigest()[:12]
 
 
 def validate_proposer_ids(arr, n_proposers: int) -> None:
@@ -303,6 +341,15 @@ class _PlaneBundle:
             (np.asarray(self.planes["prop_rate"]) != DEFAULT_RATE).any()
             or (np.asarray(self.planes["acc_rate"]) != DEFAULT_RATE).any()
         )
+
+    @property
+    def corrupted(self) -> bool:
+        """True iff an adversarial corruption plane is nonzero anywhere
+        (needs the delayed model with the corruption inputs threaded).
+        Host-side only — not traceable."""
+        return bool(any(
+            np.asarray(self.planes[k]).any() for k in CORRUPTION_PLANES
+        ))
 
     def validate_for(
         self, *, n_cells: int, n_acceptors: int, n_proposers: int

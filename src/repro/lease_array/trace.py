@@ -296,6 +296,64 @@ def random_trace(
     )
 
 
+def trace_from_scenario(
+    scenario: Scenario,
+    *,
+    lease_ticks: int,
+    round_ticks: int = 1,
+    drift_eps: float = 0.0,
+) -> Trace:
+    """A falsification survivor as a referee-replayable :class:`Trace`
+    (the triage hook: shrink a violating scenario, convert, and hand it
+    to :func:`replay_event_sim` to see what the reference implementation
+    does with the same world). The engine knobs (``lease_ticks``,
+    ``round_ticks``, ``drift_eps``) travel outside the Scenario pytree, so
+    they are passed explicitly — use the falsifier config's values.
+
+    Two scenario features have no event-sim pin and raise here:
+    per-tick *varying* clock rates (``NodeClock`` holds one constant rate
+    per node) and nonzero acc_stale/acc_equiv corruption planes (the
+    reference acceptors cannot be made Byzantine). Note the exactness
+    caveat: a survivor that re-attempts a cell while that cell's previous
+    round is still in flight overwrites the array plane's slot (loss the
+    protocol tolerates), which the event sim does not reproduce — the
+    cross-engine equality tests only cover traces obeying the spacing
+    construction above. Triage agreement on §4 is still the point: the
+    referee monitor independently checks at-most-one-owner."""
+    p = scenario.planes
+    for name in ("acc_stale", "acc_equiv"):
+        arr = np.asarray(p[name])
+        if arr.any():
+            raise ValueError(
+                f"scenario carries a nonzero {name} corruption plane; the "
+                "event-sim referee has no Byzantine acceptors — triage "
+                "honest survivors only"
+            )
+    rates = []
+    for name in ("prop_rate", "acc_rate"):
+        arr = np.asarray(p[name], np.int32)
+        if (arr != arr[:1]).any():
+            raise ValueError(
+                f"scenario {name} varies over ticks; the event-sim "
+                "NodeClock holds one constant rate per node — constant "
+                "rate columns are required for an exact replay"
+            )
+        rates.append(arr[0].copy())
+    prop_rate, acc_rate = rates
+    return Trace(
+        scenario.n_cells, scenario.n_acceptors, scenario.n_proposers,
+        int(lease_ticks),
+        np.asarray(p["attempts"], np.int32),
+        np.asarray(p["releases"], np.int32),
+        np.asarray(p["acc_up"]) > 0,
+        delay=np.asarray(p["delay"], np.int32),
+        drop=np.asarray(p["drop"]) > 0,
+        round_ticks=int(round_ticks),
+        prop_rate=prop_rate, acc_rate=acc_rate,
+        drift_eps=float(drift_eps),
+    )
+
+
 def replay_array(trace: Trace, *, backend: str = "jnp", netplane: Optional[bool] = None):
     """Owners [T, N] + per-tick owner counts via the vectorized plane.
 

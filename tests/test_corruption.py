@@ -1,0 +1,125 @@
+"""Adversarial corruption planes (acc_stale/acc_equiv): the falsifier's
+negative controls. A Byzantine acceptor that equivocates about its
+accepted lease (§3.3 poisoned) or honors below-promise ballots
+(§3.2/§3.4 broken) MUST be able to trip the §4 at-most-one-owner alarm —
+on both backends — while the honest path stays bit-identical to a build
+that never heard of corruption."""
+import numpy as np
+import pytest
+
+from repro.lease_array import LeaseArrayEngine, Scenario
+from repro.lease_array.scenario import CORRUPTION_PLANES
+
+GEOM = dict(n_cells=4, n_acceptors=3, n_proposers=4)
+T = 16
+
+BACKENDS = ["jnp", "pallas"]
+
+
+def _engine(backend="jnp", **kw):
+    kw.setdefault("lease_ticks", 8)
+    kw.setdefault("round_ticks", 2)
+    return LeaseArrayEngine(GEOM["n_cells"], n_acceptors=GEOM["n_acceptors"],
+                            n_proposers=GEOM["n_proposers"], backend=backend,
+                            **kw)
+
+
+def _scenario(corrupt: bool) -> Scenario:
+    """Alternating p0/p1 attempts under a live p0 lease; during the
+    corruption window (ticks 3..7) every acceptor both equivocates (its
+    prepare response claims no accepted lease) and honors stale ballots —
+    p1's round then completes over p0's live belief: two owners."""
+    att = np.full((T, GEOM["n_cells"]), -1, np.int32)
+    att[0, :] = 0
+    att[4, :] = 1
+    att[8, :] = 0
+    att[12, :] = 1
+    planes = {"attempts": att}
+    if corrupt:
+        mask = np.zeros((T, GEOM["n_acceptors"]), np.int32)
+        mask[3:8, :] = 1
+        planes["acc_stale"] = mask
+        planes["acc_equiv"] = mask
+    return Scenario.build(T, **GEOM, **planes)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_corruption_trips_the_alarm(backend):
+    """The negative control: with the Byzantine planes enabled the sweep's
+    built-in §4 verification must fire, and the error must identify the
+    offending scenario by plane digest (and tag, when given)."""
+    eng = _engine(backend)
+    with pytest.raises(AssertionError, match="§4 at-most-one-owner") as ei:
+        eng.sweep([_scenario(corrupt=True)], tags=["neg-control"])
+    msg = str(ei.value)
+    assert "digest=" in msg
+    assert "tag=neg-control" in msg
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_honest_twin_holds(backend):
+    """The same world without the Byzantine window never violates."""
+    eng = _engine(backend)
+    res = eng.sweep([_scenario(corrupt=False)])
+    assert (res.max_owner_count <= 1).all()
+
+
+def test_backends_agree_on_the_violation():
+    """The corrupted replay itself (owners, counts) is bit-identical
+    across backends — corruption is a semantic plane, not a kernel."""
+    outs = []
+    for backend in BACKENDS:
+        res = _engine(backend).sweep(
+            [_scenario(corrupt=True)], collect="owners", verify=False,
+        )
+        outs.append(res)
+    assert np.array_equal(outs[0].owners, outs[1].owners)
+    assert np.array_equal(outs[0].counts, outs[1].counts)
+    assert (outs[0].max_owner_count > 1).all()
+
+
+def test_sync_model_rejects_corruption():
+    """The zero-delay synchronous step has no acceptor response path to
+    corrupt: forcing netplane=False on a corrupted scenario must raise."""
+    eng = _engine()
+    with pytest.raises(ValueError, match="corruption"):
+        eng.run_trace(_scenario(corrupt=True), netplane=False)
+
+
+def test_zero_corruption_planes_are_honest():
+    """All-zero acc_stale/acc_equiv planes are the honest path: the sync
+    model accepts them (they are stripped host-side, never traced) and the
+    replay equals one that never carried them."""
+    eng = _engine()
+    sc = _scenario(corrupt=False)
+    assert not sc.corrupted
+    assert all(k in sc.planes for k in CORRUPTION_PLANES)  # registry-filled
+    ow, cn = eng.run_trace(sc, netplane=False)
+    ow2, cn2 = _engine().run_trace(sc, netplane=True)
+    assert np.array_equal(np.asarray(ow), np.asarray(ow2))
+    assert np.array_equal(np.asarray(cn), np.asarray(cn2))
+    # stepping the engine with a zero-corruption tick keeps the fast path
+    eng2 = _engine()
+    eng2.step(sc[0])
+    assert not eng2._netplane_active
+
+
+@pytest.mark.parametrize("collect", ["margins"])
+def test_margins_are_backend_free(collect):
+    """collect="margins" runs the always-jnp delayed scan whatever the
+    engine backend: margin vectors agree bit-for-bit, honest or corrupt."""
+    from repro.lease_array.falsify.search import FalsifyConfig, random_population
+
+    for corrupt in (False, True):
+        cfg = FalsifyConfig(pop_size=32, corrupt=corrupt, seed=5)
+        pop = Scenario(random_population(np.random.default_rng(5), cfg))
+        margins = []
+        for backend in BACKENDS:
+            res = FalsifyConfig(backend=backend).engine().sweep(
+                pop, collect=collect, verify=False,
+            )
+            assert res.margins is not None
+            margins.append(res.margins)
+        for k in margins[0]:
+            assert margins[0][k].dtype == np.int32
+            assert np.array_equal(margins[0][k], margins[1][k]), k
