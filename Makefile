@@ -21,9 +21,11 @@ check:  ## leaselint: static pack-budget proof, kernel purity, launch audit, con
 	  echo "ruff not installed; skipping the crash-level baseline (CI runs it)"; \
 	fi
 
-falsify-smoke:  ## seeded fixed-budget falsification contract (docs/falsification.md): the corrupt negative control MUST violate, the honest search must NOT
+falsify-smoke:  ## seeded fixed-budget falsification contract (docs/falsification.md): the corrupt negative control MUST violate, the honest search must NOT — each also run with the crash/restart planes enabled (honest faults: the corrupt pair still violates, the honest pair still must not)
 	python -m repro.lease_array.falsify --mode corrupt --seed 7 --pop 128 --generations 6 --expect violation --out falsify_corrupt.json
 	python -m repro.lease_array.falsify --mode honest --seed 7 --pop 128 --generations 6 --expect none --out falsify_honest.json
+	python -m repro.lease_array.falsify --mode corrupt --restarts --seed 7 --pop 128 --generations 6 --expect violation --out falsify_corrupt_restart.json
+	python -m repro.lease_array.falsify --mode honest --restarts --seed 7 --pop 128 --generations 6 --expect none --out falsify_honest_restart.json
 
 bench-smoke:  ## quick end-to-end signal: the vectorized lease-plane bench
 	python -c "from benchmarks.bench_lease_array import run; \

@@ -303,6 +303,43 @@ def run_drift(depth: int = 2):
     return rows
 
 
+def run_restart(depth: int = 4):
+    """The crash/restart planes' cost next to the delay rows they extend:
+    all-acceptor ROLLING diskless restarts (two staggered waves — every
+    acceptor blanks and goes deaf for M twice per trace, never a whole
+    quorum at once) plus one proposer restart-counter bump each (inside
+    the RESTART_SHIFT carve), over the deepest delay regime. Restart mode
+    switches the whole dispatch to carved ballots + deaf/counter streams,
+    so this row prices exactly what the all-default strip avoids."""
+    def storm_trace(seed):
+        tr = _delayed_trace(depth, DELAY_TICKS, seed=seed)
+        T, A, P = DELAY_TICKS, tr.n_acceptors, tr.n_proposers
+        rst = np.zeros((T, A), np.int32)
+        for wave in (16, 56):
+            for a in range(A):
+                rst[wave + 4 * a, a] = 1
+        prst = np.zeros((T, P), np.int32)
+        for p in range(P):
+            prst[8 + 6 * p, p] = 1
+        tr.acc_restarts, tr.prop_restarts = rst, prst
+        return tr
+
+    tr = storm_trace(9)
+    replay_array(storm_trace(10), netplane=True)  # same-shape warm-up
+    dt, (owners, counts) = timed(lambda: replay_array(tr, netplane=True))
+    assert counts.max() <= 1, "§4 violated under the restart storm"
+    rate = DELAY_CELLS * DELAY_TICKS / dt
+    return [(
+        "lease_restart_storm",
+        dt / (DELAY_CELLS * DELAY_TICKS) * 1e6,
+        f"{DELAY_CELLS} cells x {DELAY_TICKS} ticks, delay<={depth} "
+        f"drop=0.05 + rolling acceptor restarts (2 waves x "
+        f"{tr.n_acceptors} acceptors) + 1 restart-counter bump/proposer: "
+        f"{fmt(rate)} cell-ticks/s, "
+        f"owned={float((owners >= 0).mean()):.2f}",
+    )]
+
+
 def run_sweep():
     """The scenario-sweep driver: a stacked batch of fault scenarios in ONE
     dispatch (vmap inside, shard_map across devices), §4 verified."""
@@ -404,7 +441,10 @@ def emit_json(path=JSON_PATH) -> dict:
     trajectory stays interpretable across machines and PRs."""
     import jax
 
-    rows = run() + run_delayed() + run_drift() + run_sweep() + run_falsify()
+    rows = (
+        run() + run_delayed() + run_drift() + run_restart()
+        + run_sweep() + run_falsify()
+    )
     doc = {
         "benchmark": "lease_array",
         "git_rev": _git_rev(),

@@ -27,26 +27,32 @@ def _check_intervals() -> list[Finding]:
 
     - the derived bound must equal ``state.max_pack_tick`` exactly for the
       default (P=8) geometry at both the drift-free and the worst referee
-      clock rate;
+      clock rate, with and without the restart-counter ballot carve
+      (``max_restarts`` shrinks the run field by RESTART_SHIFT bits — the
+      hand formula and the traced restart-mode core must agree on by how
+      much);
     - a config whose *round horizon* blows int32 — invisible to the
       runtime hand check, which only budgets ballots and lease deadlines,
       and skipped entirely under tracing — must be rejected.
     """
-    from ...lease_array.state import max_pack_tick
+    from ...lease_array.state import MAX_RESTARTS, max_pack_tick
     from .intervals import TickConfig, analyze_tick_config, derived_max_pack_tick
 
     findings: list[Finding] = []
     for rate in _RATES:
-        hand = max_pack_tick(_P, _LEASE_Q4, 0, max_rate=rate)
-        derived = derived_max_pack_tick(_P, _LEASE_Q4, 0, max_rate=rate)
-        if hand != derived:
-            findings.append(Finding(
-                "intervals", "bound-mismatch",
-                f"max_pack_tick(P={_P}, rate={rate})",
-                f"hand bound {hand} != interval-derived bound {derived}; "
-                f"state.max_pack_tick and the traced tick core disagree "
-                f"about the pack budget",
-            ))
+        for mr in (0, 1, MAX_RESTARTS):
+            hand = max_pack_tick(_P, _LEASE_Q4, 0, max_rate=rate,
+                                 max_restarts=mr)
+            derived = derived_max_pack_tick(_P, _LEASE_Q4, 0, max_rate=rate,
+                                            max_restarts=mr)
+            if hand != derived:
+                findings.append(Finding(
+                    "intervals", "bound-mismatch",
+                    f"max_pack_tick(P={_P}, rate={rate}, restarts={mr})",
+                    f"hand bound {hand} != interval-derived bound {derived}; "
+                    f"state.max_pack_tick and the traced tick core disagree "
+                    f"about the pack budget",
+                ))
     # regression for the traced-away gap: an absurd round-abandon horizon
     # overflows `rnd_clk + round_q4` inside the core; check_pack_budget
     # never looks at round_q4 and is skipped under tracing anyway

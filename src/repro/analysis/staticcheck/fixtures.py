@@ -4,7 +4,7 @@ A static checker that never fires is indistinguishable from one that
 works, so every leaselint pass ships with a mutant it MUST flag and a
 clean twin it MUST pass — the twin proves the fixture isolates the
 mutation rather than tripping on scaffolding. `run_mutation_tests` runs
-all four pairs and returns findings about the *checkers* (empty means
+every pair and returns findings about the *checkers* (empty means
 every mutant was caught and every twin passed); the CLI and
 tests/test_staticcheck.py both gate on it.
 
@@ -13,6 +13,11 @@ The mutants:
   - **overflowing shift** (intervals): the deadline is packed with
     ``<< (2 * PACK_SHIFT)`` — the copy-paste double of the field shift.
     Interval analysis must prove the escape from int32.
+  - **doubled restart carve** (intervals, restart mode): the ballot run
+    field minted with ``<< (2 * RESTART_SHIFT)``. At the restart-mode
+    budget boundary the honest carve fits PACK_MASK *exactly*, so the
+    doubled shift bleeds the ballot into the deadline field and the
+    pack-budget rule must fire.
   - **injected float op** (purity): the local-clock scale written as
     ``* 1.25`` instead of the exact ``* 5 // 4``.
   - **overlapping BlockSpec** (launch): a state output's index map
@@ -28,10 +33,16 @@ import functools
 from .findings import Finding
 
 _P, _LEASE_Q4, _T_END = 8, 13, 4094  # the default P=8 geometry and bound
+#: restart-mode twin of _T_END: the carve costs RESTART_SHIFT run-field
+#: bits, so max_pack_tick(P=8, max_restarts=3) collapses to 1022 — and the
+#: final honest ballot ((1023 << 2) | 3) * 8 + 7 == PACK_MASK exactly
+_MAX_RESTARTS, _RESTART_T_END = 3, 1022
 
 
 @functools.lru_cache(maxsize=None)
-def _pack_core(shift: int, float_scale: bool = False):
+def _pack_core(
+    shift: int, float_scale: bool = False, restart_shift: int | None = None
+):
     """A minimal deadline-packing core (the fragment of the tick math the
     pack budget lives in), parameterized so one knob seeds each mutant."""
     import jax
@@ -40,8 +51,11 @@ def _pack_core(shift: int, float_scale: bool = False):
     i32 = jnp.int32
     sds = jax.ShapeDtypeStruct
 
-    def fn(ownp, t, pclk):
-        ballot = (t + 1) * _P + (_P - 1)
+    def fn(ownp, t, pclk, rc):
+        if restart_shift is None:
+            ballot = (t + 1) * _P + (_P - 1)
+        else:  # the restart-carve mint of state.ballot_of
+            ballot = (((t + 1) << restart_shift) | rc) * _P + (_P - 1)
         if float_scale:
             clk = (pclk * 1.25).astype(i32)  # MUTANT: float on the tick path
         else:
@@ -51,9 +65,9 @@ def _pack_core(shift: int, float_scale: bool = False):
         return jnp.maximum(ownp, packed)
 
     closed = jax.make_jaxpr(fn)(
-        sds((1, 8), i32), sds((), i32), sds((1, 8), i32)
+        sds((1, 8), i32), sds((), i32), sds((1, 8), i32), sds((), i32)
     )
-    layout = (("ownp", "state"), ("t", "t"), ("pclk", "clk"))
+    layout = (("ownp", "state"), ("t", "t"), ("pclk", "clk"), ("rc", "rc"))
     return closed, layout
 
 
@@ -76,6 +90,35 @@ def fixture_overflowing_shift_clean() -> list[Finding]:
 
     core, layout = _pack_core(PACK_SHIFT)
     return analyze_tick_config(_pack_cfg(), core=core, layout=layout)
+
+
+def _restart_cfg():
+    from .intervals import TickConfig
+
+    return TickConfig(
+        t_end=_RESTART_T_END, n_proposers=_P, lease_q4=_LEASE_Q4,
+        max_restarts=_MAX_RESTARTS,
+    )
+
+
+def fixture_doubled_restart_shift() -> list[Finding]:
+    """Mutant for the interval checker, restart mode: doubled restart
+    carve. The honest carve fits PACK_MASK exactly at t_end=1022, so the
+    doubled shift reaches ((1023 << 4) | 3) * 8 + 7 = 130975 and bleeds
+    into the deadline field."""
+    from ...lease_array.state import RESTART_SHIFT
+    from .intervals import PACK_SHIFT, analyze_tick_config
+
+    core, layout = _pack_core(PACK_SHIFT, restart_shift=2 * RESTART_SHIFT)
+    return analyze_tick_config(_restart_cfg(), core=core, layout=layout)
+
+
+def fixture_doubled_restart_shift_clean() -> list[Finding]:
+    from ...lease_array.state import RESTART_SHIFT
+    from .intervals import PACK_SHIFT, analyze_tick_config
+
+    core, layout = _pack_core(PACK_SHIFT, restart_shift=RESTART_SHIFT)
+    return analyze_tick_config(_restart_cfg(), core=core, layout=layout)
 
 
 def fixture_float_op() -> list[Finding]:
@@ -163,6 +206,11 @@ FIXTURES: dict[str, tuple] = {
         fixture_overflowing_shift,
         {"int32-overflow", "pack-budget"},
         fixture_overflowing_shift_clean,
+    ),
+    "restart-intervals": (
+        fixture_doubled_restart_shift,
+        {"pack-budget"},
+        fixture_doubled_restart_shift_clean,
     ),
     "purity": (
         fixture_float_op,

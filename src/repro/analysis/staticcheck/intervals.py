@@ -114,10 +114,18 @@ class TickConfig:
     sync: bool = False
     lease_q4: Optional[int] = None  # overrides lease_ticks when given
     corrupt: bool = False  # thread the acc_stale/acc_equiv planes
+    #: > 0 threads the crash/restart planes AND switches ballots onto the
+    #: restart-carve encoding (state.RESTART_SHIFT): the highest per-
+    #: proposer restart counter any tick can carry
+    max_restarts: int = 0
 
     @property
     def majority(self) -> int:
         return self.n_acceptors // 2 + 1
+
+    @property
+    def restart(self) -> bool:
+        return self.max_restarts > 0
 
     @property
     def eff_lease_q4(self) -> int:
@@ -158,6 +166,13 @@ _DELAYED_ARGS = _SYNC_ARGS[:4] + _NET_STATE + _SYNC_ARGS[4:] + (
 #: the corruption-plane variant: two extra [A, 1] boolean planes
 #: (falsifier negative controls — acc_stale / acc_equiv)
 _CORRUPT_ARGS = _DELAYED_ARGS + (("stale", "bool"), ("equiv", "bool"))
+#: the crash/restart variant: the per-tick restart/deaf indicator planes
+#: plus the running restart-counter plane ([0, max_restarts], the "rc"
+#: kind) that the restart-mode ballot mint ORs under RESTART_SHIFT
+_RESTART_TAIL = (
+    ("acc_restart", "bool"), ("acc_deaf", "bool"),
+    ("prop_restart", "rc"), ("prop_rc", "rc"),
+)
 
 
 @functools.lru_cache(maxsize=None)
@@ -173,6 +188,7 @@ def trace_tick_core(
     legs: str = "gather",
     block_n: int = 8,
     corrupt: bool = False,
+    restart: bool = False,
 ):
     """``jax.make_jaxpr`` of one tick core with the protocol constants
     closed over, on tiny block shapes (intervals are shape-oblivious
@@ -209,12 +225,20 @@ def trace_tick_core(
 
     def fn(*args):
         lease, net = args[:4], args[4:16]
+        rest = list(args[16:])
+        adv = {}
+        if restart:
+            arst, deaf, prst, prc = rest[-4:]
+            rest = rest[:-4]
+            adv.update(
+                acc_restart=arst, acc_deaf=deaf,
+                prop_restart=prst, prop_rc=prc,
+            )
         if corrupt:
-            t, att, rel, up, pclk, aclk, link, stale, equiv = args[16:]
-            adv = {"stale": stale, "equiv": equiv}
-        else:
-            t, att, rel, up, pclk, aclk, link = args[16:]
-            adv = {}
+            stale, equiv = rest[-2:]
+            rest = rest[:-2]
+            adv.update(stale=stale, equiv=equiv)
+        t, att, rel, up, pclk, aclk, link = rest
         lease, net, count = _netplane.delayed_tick_math(
             lease, net, t, att, rel, up, pclk, aclk, link,
             majority=majority, lease_q4=lease_q4, round_q4=round_q4,
@@ -223,6 +247,11 @@ def trace_tick_core(
         return (*lease, *net, count)
 
     extra = [sds((A, 1), i32)] * 2 if corrupt else []
+    if restart:
+        extra = extra + [
+            sds((A, 1), i32), sds((A, 1), i32),
+            sds((P, 1), i32), sds((P, 1), i32),
+        ]
     return jax.make_jaxpr(fn)(
         *lease_shapes, *net_shapes, *common, sds((P, A), i32), *extra
     )
@@ -238,6 +267,7 @@ def _input_intervals(cfg: TickConfig) -> dict[str, AbsVal]:
         "bool": AbsVal(BOOL),
         "clk": AbsVal(IV(0, clk_hi)),
         "link": AbsVal(IV(0, 2 * cfg.max_delay + 1)),
+        "rc": AbsVal(IV(0, cfg.max_restarts)),
     }
 
 
@@ -488,12 +518,14 @@ def _core_and_layout(cfg: TickConfig, legs: str):
     closed = trace_tick_core(
         cfg.n_proposers, cfg.n_acceptors, cfg.eff_lease_q4, cfg.round_q4,
         cfg.eff_guard_q4, cfg.majority, sync=cfg.sync, legs=legs,
-        corrupt=cfg.corrupt,
+        corrupt=cfg.corrupt, restart=cfg.restart,
     )
     if cfg.sync:
         layout = _SYNC_ARGS
     else:
         layout = _CORRUPT_ARGS if cfg.corrupt else _DELAYED_ARGS
+        if cfg.restart:
+            layout = layout + _RESTART_TAIL
     return closed, layout
 
 
@@ -557,6 +589,7 @@ def derived_max_pack_tick(
     round_q4: int = QUARTERS,
     guard_q4: Optional[int] = None,
     sync: bool = False,
+    max_restarts: int = 0,
 ) -> int:
     """``state.max_pack_tick`` as a *derived* result: the largest ``t_end``
     the interval analysis proves safe, by monotone binary search (larger
@@ -568,7 +601,7 @@ def derived_max_pack_tick(
         t_end=0, n_proposers=n_proposers, n_acceptors=n_acceptors,
         lease_q4=lease_q4, round_q4=round_q4, guard_q4=guard_q4,
         max_delay=max_delay_ticks, max_rate=max_rate, clk_slack=clk_slack,
-        sync=sync,
+        sync=sync, max_restarts=max_restarts,
     )
     core, layout = _core_and_layout(base, "gather")
 

@@ -112,6 +112,8 @@ class LeaseNode:
         self.env.set_timer(self.addr, 0.0, lambda: None)  # keep scheduler moving
 
         def rejoin() -> None:
+            if self.env.now + 1e-9 < self.rejoin_deadline:
+                return  # a later restart extended the deaf window
             self.crashed = False
             self.env.network.set_down(self.addr, False)
 

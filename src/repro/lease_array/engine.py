@@ -53,6 +53,7 @@ from .ops import _margin_scan_impl, _window_scan_impl, lease_plane_tick
 from .ref import owner_row
 from .scenario import (
     CORRUPTION_PLANES,
+    RESTART_PLANES,
     Scenario,
     TickInputs,
     make_tick,
@@ -89,7 +90,7 @@ _DEPRECATED_TRACE_PLANES = (
 def _static_pack_findings(
     t_end: int, n_proposers: int, n_acceptors: int, lease_q4: int,
     round_q4: int, guard_q4: Optional[int], max_delay: int, max_rate: int,
-    clk_slack: int,
+    clk_slack: int, max_restarts: int = 0,
 ) -> tuple[str, ...]:
     """Interval-analysis twin of ``state.check_pack_budget``: walk the
     traced delayed tick core (the conservative superset of the sync one)
@@ -106,6 +107,7 @@ def _static_pack_findings(
         t_end=t_end, n_proposers=n_proposers, n_acceptors=n_acceptors,
         lease_q4=lease_q4, round_q4=round_q4, guard_q4=guard_q4,
         max_delay=max_delay, max_rate=max_rate, clk_slack=clk_slack,
+        max_restarts=max_restarts,
     )
     return tuple(str(f) for f in analyze_tick_config(cfg))
 
@@ -162,13 +164,24 @@ def _scenario_scanner(
     jitted = jax.jit(scan_fn)
 
     def strip_and_scan(state, net, t0, clk0, planes):
-        # all-zero corruption planes are the honest path: drop them
-        # host-side (same contract as ops.lease_window_scan) so the
+        # all-zero corruption/restart planes are the honest path: drop
+        # them host-side (same contract as ops.lease_window_scan) so the
         # sync step never sees them and the honest trace stays corrupt-free
+        for k in RESTART_PLANES:
+            v = planes.get(k)
+            if (
+                v is not None and not isinstance(v, jax.core.Tracer)
+                and np.asarray(v).any()
+            ):
+                raise ValueError(
+                    "the per-tick scanner cannot accumulate restart "
+                    "history across ticks; replay restart scenarios "
+                    "through run_trace/lease_window_scan instead"
+                )
         planes = {
             k: v for k, v in planes.items()
             if not (
-                k in CORRUPTION_PLANES
+                k in CORRUPTION_PLANES + RESTART_PLANES
                 and not isinstance(v, jax.core.Tracer)
                 and not np.asarray(v).any()
             )
@@ -196,11 +209,11 @@ class SweepResult(NamedTuple):
 
 
 def _cell_sharding_specs(planes_keys):
-    """shard_map PartitionSpecs for a (state, net, t0, clk0, planes) call:
-    every state/output plane splits on its trailing cell axis; scenario
-    planes split iff their registered dims carry the cell axis "N" (acc_up,
-    the [T, P, A] link matrices and the clock-rate planes are replicated,
-    as are the [P]/[A] clock offsets)."""
+    """shard_map PartitionSpecs for a (state, net, t0, clk0, rst0, planes)
+    call: every state/output plane splits on its trailing cell axis;
+    scenario planes split iff their registered dims carry the cell axis
+    "N" (acc_up, the [T, P, A] link matrices and the clock-rate planes are
+    replicated, as are the [P]/[A] clock offsets and restart history)."""
     from jax.sharding import PartitionSpec as P
 
     from .scenario import PLANES
@@ -210,10 +223,10 @@ def _cell_sharding_specs(planes_keys):
         k: (P(None, "cells") if "N" in PLANES[k].dims else P())
         for k in planes_keys
     }
-    # the clk0 slot takes a bare prefix spec: it covers both the (prop,
-    # acc) offset tuple and the None fast path (no leaves) identically
+    # the clk0/rst0 slots take bare prefix specs: they cover both the
+    # per-node tuples and the None fast path (no leaves) identically
     return (
-        (cells, cells, P(), P(), plane_specs),
+        (cells, cells, P(), P(), P(), plane_specs),
         (cells, cells, cells, cells),
     )
 
@@ -222,17 +235,18 @@ def _cell_sharding_specs(planes_keys):
 def _trace_fn(
     majority: int, lease_q4: int, round_q4: int, guard_q4: int, backend: str,
     sync: bool, block_n: int, window: int, n_devices: int, planes_keys: tuple,
+    restart_guard: bool = True,
 ):
     """The fused scenario replay, jitted; with >1 device the cell axis is
     shard_map-ed across a 1-D device mesh (cells are independent — the
     tick math never reduces across N), so a trace uses every device."""
 
-    def run(state, net, t0, clk0, planes):
+    def run(state, net, t0, clk0, rst0, planes):
         return _window_scan_impl(
-            state, net, t0, clk0, planes,
+            state, net, t0, clk0, rst0, planes,
             majority=majority, lease_q4=lease_q4, round_q4=round_q4,
             guard_q4=guard_q4, backend=backend, sync=sync, block_n=block_n,
-            window=window,
+            window=window, restart_guard=restart_guard,
         )
 
     if n_devices > 1:
@@ -252,6 +266,7 @@ def _trace_fn(
 def _sweep_fn(
     majority: int, lease_q4: int, round_q4: int, guard_q4: int, backend: str,
     sync: bool, block_n: int, window: int, collect: str, n_devices: int,
+    restart_guard: bool = True,
 ):
     """One-dispatch batched scenario replay: vmap over the stacked planes
     (state broadcast), reductions inside the jit so a summary sweep never
@@ -262,22 +277,22 @@ def _sweep_fn(
     the owners/counts cubes; a summary sweep's outputs are [B]-shaped, so
     nothing could reuse any plane and donating would only warn."""
 
-    def one(state, net, t0, clk0, cell_planes, rest_planes):
+    def one(state, net, t0, clk0, rst0, cell_planes, rest_planes):
         if collect == "margins":
             # the margin mode always runs the delayed jnp oracle scan —
             # the backends agree bit-for-bit, so margins are backend-free
             owners, counts, margins = _margin_scan_impl(
                 state, net, t0, clk0, {**cell_planes, **rest_planes},
                 majority=majority, lease_q4=lease_q4, round_q4=round_q4,
-                guard_q4=guard_q4,
+                guard_q4=guard_q4, rst0=rst0, restart_guard=restart_guard,
             )
         else:
             margins = None
             _, _, owners, counts = _window_scan_impl(
-                state, net, t0, clk0, {**cell_planes, **rest_planes},
+                state, net, t0, clk0, rst0, {**cell_planes, **rest_planes},
                 majority=majority, lease_q4=lease_q4, round_q4=round_q4,
                 guard_q4=guard_q4, backend=backend, sync=sync,
-                block_n=block_n, window=window,
+                block_n=block_n, window=window, restart_guard=restart_guard,
             )
         out = {
             "max_owner_count": counts.max(),
@@ -291,7 +306,7 @@ def _sweep_fn(
             out["margins"] = margins
         return out
 
-    batched = jax.vmap(one, in_axes=(None, None, None, None, 0, 0))
+    batched = jax.vmap(one, in_axes=(None, None, None, None, None, 0, 0))
     if n_devices > 1:
         from jax.experimental.shard_map import shard_map
         from jax.sharding import Mesh, PartitionSpec as P
@@ -299,11 +314,11 @@ def _sweep_fn(
         mesh = Mesh(np.array(jax.devices()[:n_devices]), ("b",))
         batched = shard_map(
             batched, mesh=mesh,
-            in_specs=(P(), P(), P(), P(), P("b"), P("b")),
+            in_specs=(P(), P(), P(), P(), P(), P("b"), P("b")),
             out_specs=P("b"),
             check_rep=False,
         )
-    donate = (4,) if collect == "owners" else ()
+    donate = (5,) if collect == "owners" else ()
     return jax.jit(batched, donate_argnums=donate)
 
 
@@ -319,6 +334,7 @@ class LeaseArrayEngine:
         drift_eps: float = 0.0,
         backend: str = "jnp",
         window: int = 16,
+        restart_guard: bool = True,
     ) -> None:
         if n_acceptors < 1 or n_proposers < 1:
             raise ValueError("need at least one acceptor and one proposer")
@@ -348,10 +364,49 @@ class LeaseArrayEngine:
         # flips True on the first delayed step; once messages may be in
         # flight, every later tick must run the delayed model too
         self._netplane_active = False
+        #: §2 diskless deaf window honored? False is the chaos suite's
+        #: negative control: restarted acceptors answer immediately with
+        #: blank state, which provably breaks §4 under crash schedules
+        self.restart_guard = bool(restart_guard)
+        # restart history carried across dispatches (mirrors the clocks):
+        # per-proposer restart counters and each acceptor's deaf-until
+        # reading on ITS local clock. flips _restart_active once any
+        # restart plane fires so the restart-mode ballot encoding (the
+        # RESTART_SHIFT carve) never switches off mid-trace
+        self._rc = np.zeros(n_proposers, np.int32)
+        self._deaf_until = np.zeros(n_acceptors, np.int32)
+        self._restart_active = False
 
     # -------------------------------------------------------- packing budget
+    def _max_restarts(self, prop_restart=None) -> int:
+        """The pack-budget ``max_restarts`` charge for a dispatch that may
+        add ``prop_restart`` ([T, P], [B, T, P] or a single [P] row) to the
+        carried counters — 0 while the engine has never seen a restart
+        (the honest encoding), else at least 1 so the RESTART_SHIFT carve
+        is always charged once restart mode is on."""
+        rc_end = self._rc.astype(np.int64)
+        seen = self._restart_active
+        if prop_restart is not None:
+            prst = np.asarray(prop_restart, np.int64)
+            if prst.size:
+                if prst.ndim >= 3:
+                    # [B, T, P] stack: each scenario replays independently,
+                    # so charge the worst per-scenario total, not the sum
+                    add = (
+                        prst.reshape(prst.shape[0], -1, self.n_proposers)
+                        .sum(axis=1).max(axis=0)
+                    )
+                else:
+                    add = prst.reshape(-1, self.n_proposers).sum(axis=0)
+                rc_end = rc_end + add
+                seen = seen or bool(prst.any())
+        if not seen:
+            return 0
+        return max(1, int(rc_end.max(initial=0)))
+
     def _check_pack_budget(
-        self, t_end: int, max_delay: int = 0, max_rate: int = QUARTERS
+        self, t_end: int, max_delay: int = 0, max_rate: int = QUARTERS,
+        max_restarts: int = 0,
     ) -> None:
         max_rate = max(int(max_rate), QUARTERS)
         clk_max = int(max(self.prop_clk.max(), self.acc_clk.max(), 0))
@@ -359,10 +414,12 @@ class LeaseArrayEngine:
             t_end, self.n_proposers, self.lease_q4, max_delay,
             max_rate=max_rate,
             clk_slack=max(0, clk_max - max_rate * self.t),
+            max_restarts=max_restarts,
         )
 
     def _static_bound_check(
-        self, t_end: int, max_delay: int = 0, max_rate: int = QUARTERS
+        self, t_end: int, max_delay: int = 0, max_rate: int = QUARTERS,
+        max_restarts: int = 0,
     ) -> None:
         """Run the leaselint interval analysis host-side before a bulk
         dispatch. Complements ``_check_pack_budget``: the hand bound is
@@ -380,6 +437,7 @@ class LeaseArrayEngine:
                 self.lease_q4, self.round_q4, self.guard_q4,
                 int(max_delay), max_rate,
                 max(0, clk_max - max_rate * self.t),
+                int(max_restarts),
             )
         except Exception as e:
             if not _STATIC_CHECK_FAILED:
@@ -407,6 +465,40 @@ class LeaseArrayEngine:
         if (self.prop_clk == t4).all() and (self.acc_clk == t4).all():
             return None
         return jnp.asarray(self.prop_clk), jnp.asarray(self.acc_clk)
+
+    def _rst0(self):
+        """The engine's restart history for a dispatch — or None while no
+        restart plane has ever fired, so honest replays trace the
+        restart-free tick core (and the honest ballot encoding) with zero
+        extra uploads. Once active, always a concrete (rc [P],
+        deaf_until [A]) pair: mode must stay pinned even through quiet
+        dispatches so ballot encodings never mix mid-trace."""
+        if not self._restart_active:
+            return None
+        return jnp.asarray(self._rc), jnp.asarray(self._deaf_until)
+
+    def _advance_restarts(self, acc_restart, prop_restart, acc_rate) -> None:
+        """Fold a dispatched schedule's restart planes into the carried
+        history. MUST run before ``_advance_clocks``: deaf-until deadlines
+        are minted against each acceptor's local clock reading AT the
+        restart tick (``self.acc_clk`` + the exclusive rate prefix), the
+        same readings ``ops._restart_planes`` derives in-graph."""
+        prst = np.asarray(prop_restart, np.int64).reshape(
+            -1, self.n_proposers
+        )
+        self._rc = (self._rc + prst.sum(axis=0)).astype(np.int32)
+        arst = np.asarray(acc_restart, np.int64).reshape(
+            -1, self.n_acceptors
+        )
+        rate = np.asarray(acc_rate, np.int64).reshape(-1, self.n_acceptors)
+        aclk = self.acc_clk.astype(np.int64) + np.concatenate(
+            [np.zeros((1, self.n_acceptors), np.int64),
+             np.cumsum(rate, axis=0)[:-1]]
+        )
+        minted = np.where(arst > 0, aclk + self.lease_q4, 0)
+        self._deaf_until = np.maximum(
+            self._deaf_until, minted.max(axis=0, initial=0)
+        ).astype(np.int32)
 
     def _advance_clocks(self, prop_rate, acc_rate) -> None:
         """Accumulate the scenario's rate planes ([T, P]/[T, A] or one
@@ -483,6 +575,7 @@ class LeaseArrayEngine:
                 np.asarray(tick.delay).any()
                 or np.asarray(tick.drop).any()
                 or tick.corrupted
+                or tick.restarted
             ):
                 self._netplane_active = True
         self._check_pack_budget(
@@ -492,15 +585,26 @@ class LeaseArrayEngine:
                 int(np.asarray(tick.prop_rate).max(initial=0)),
                 int(np.asarray(tick.acc_rate).max(initial=0)),
             ),
+            self._max_restarts(tick.prop_restart),
         )
+        if tick.restarted:
+            # crashes imply in-flight state (restart mode is delayed-only)
+            # and pin the restart-mode ballot encoding from here on
+            self._netplane_active = True
+            self._restart_active = True
         self.state, self.net, self.last_owner_count = lease_plane_tick(
             self.state, self.net, self.t, tick,
             majority=self.majority, lease_q4=self.lease_q4,
             round_q4=self.round_q4, guard_q4=self.guard_q4,
-            clk0=self._clk0(), backend=self.backend,
+            clk0=self._clk0(), rst0=self._rst0(),
+            restart_guard=self.restart_guard, backend=self.backend,
             sync=not self._netplane_active, window=self.window,
         )
         self.t += 1
+        if self._restart_active:
+            self._advance_restarts(
+                tick.acc_restart, tick.prop_restart, tick.acc_rate
+            )
         self._advance_clocks(tick.prop_rate, tick.acc_rate)
         return np.asarray(owner_row(self.state))
 
@@ -526,9 +630,9 @@ class LeaseArrayEngine:
         (sweep) passes ``mutate=False`` and the engine is left untouched."""
         if netplane is False and (delayed or self._netplane_active):
             raise ValueError(
-                "netplane=False but the scenario carries nonzero delay/drop "
-                "or corruption planes (or messages are already in flight); "
-                "the synchronous model cannot honor them"
+                "netplane=False but the scenario carries nonzero delay/drop, "
+                "corruption or restart planes (or messages are already in "
+                "flight); the synchronous model cannot honor them"
             )
         wants_net = bool(netplane) or (netplane is None and delayed)
         if mutate and wants_net:
@@ -573,7 +677,10 @@ class LeaseArrayEngine:
             scenario, releases, acc_up, delay, drop
         )
         T = scenario.n_ticks
-        sync = self._pick_model(netplane, scenario.delayed or scenario.corrupted)
+        restarted = scenario.restarted
+        sync = self._pick_model(
+            netplane, scenario.delayed or scenario.corrupted or restarted
+        )
         if T == 0:
             empty = np.zeros((0, self.n_cells), np.int32)
             return empty, empty.copy()
@@ -582,14 +689,20 @@ class LeaseArrayEngine:
             int(np.asarray(scenario.prop_rate).max(initial=0)),
             int(np.asarray(scenario.acc_rate).max(initial=0)),
         )
-        self._check_pack_budget(self.t + T, dmax, rmax)
-        self._static_bound_check(self.t + T, dmax, rmax)
-        # all-zero corruption planes stay host-side: the honest replay
-        # never compiles the corrupt tick variant (bit-identical jaxpr)
+        mr = self._max_restarts(scenario.prop_restart)
+        self._check_pack_budget(self.t + T, dmax, rmax, mr)
+        self._static_bound_check(self.t + T, dmax, rmax, mr)
+        if restarted:
+            self._restart_active = True  # pins the restart ballot encoding
+        # all-zero corruption/restart planes stay host-side: the honest
+        # replay never compiles the faulted tick variants (bit-identical
+        # jaxpr, zero extra uploads); once restart mode is pinned, rst0
+        # (not the planes) keeps it on across quiet dispatches
         planes = {
             k: jnp.asarray(v) for k, v in scenario.planes.items()
             if not (
-                k in CORRUPTION_PLANES and not np.asarray(v).any()
+                k in CORRUPTION_PLANES + RESTART_PLANES
+                and not np.asarray(v).any()
             )
         }
         n_dev = len(jax.devices())
@@ -598,11 +711,18 @@ class LeaseArrayEngine:
         fn = _trace_fn(
             self.majority, self.lease_q4, self.round_q4, self.guard_q4,
             self.backend, sync, 512, self.window, n_dev, tuple(planes),
+            self.restart_guard,
         )
         self.state, self.net, owners, counts = fn(
-            self.state, self.net, jnp.int32(self.t), self._clk0(), planes
+            self.state, self.net, jnp.int32(self.t), self._clk0(),
+            self._rst0(), planes
         )
         self.t += int(T)
+        if self._restart_active:
+            self._advance_restarts(
+                scenario.acc_restart, scenario.prop_restart,
+                scenario.acc_rate,
+            )
         self._advance_clocks(scenario.prop_rate, scenario.acc_rate)
         self.last_owner_count = counts[-1]
         return np.asarray(owners), np.asarray(counts)
@@ -679,6 +799,18 @@ class LeaseArrayEngine:
                 corrupt = True
             else:
                 drop_keys.append(k)
+        # all-zero restart planes drop like corruption planes; when the
+        # engine already carries restart history, rst0 (below) keeps
+        # restart mode — and its ballot encoding — on regardless
+        restarted = self._restart_active
+        for k in RESTART_PLANES:
+            plane = stacked.planes.get(k)
+            if plane is None:
+                continue
+            if np.asarray(plane).any():
+                restarted = True
+            else:
+                drop_keys.append(k)
         # in collect="owners" mode the [B, T, N] attempts/releases planes
         # are DONATED to the dispatch (XLA reuses their buffers for the
         # output cubes); copy those leaves when they are already device
@@ -699,20 +831,24 @@ class LeaseArrayEngine:
         if T == 0:
             raise ValueError("sweep scenarios must have at least one tick")
         # a sweep is read-only: pick the model without flipping the engine
-        # (corruption planes only exist in the delayed tick)
-        sync = self._pick_model(netplane, delayed or corrupt, mutate=False)
-        self._check_pack_budget(self.t + T, dmax, rmax)
-        self._static_bound_check(self.t + T, dmax, rmax)
+        # (corruption and restart planes only exist in the delayed tick)
+        sync = self._pick_model(
+            netplane, delayed or corrupt or restarted, mutate=False
+        )
+        mr = self._max_restarts(stacked.planes.get("prop_restart"))
+        self._check_pack_budget(self.t + T, dmax, rmax, mr)
+        self._static_bound_check(self.t + T, dmax, rmax, mr)
         n_dev = len(jax.devices())
         if n_dev > 1 and B % n_dev != 0:
             n_dev = 1  # uneven batch: fall back to single-device vmap
         fn = _sweep_fn(
             self.majority, self.lease_q4, self.round_q4, self.guard_q4,
             backend or self.backend, sync, 512, self.window, collect, n_dev,
+            self.restart_guard,
         )
         out = fn(
             self.state, self.net, jnp.int32(self.t), self._clk0(),
-            cell_planes, rest_planes,
+            self._rst0(), cell_planes, rest_planes,
         )
         result = SweepResult(
             max_owner_count=np.asarray(out["max_owner_count"]),

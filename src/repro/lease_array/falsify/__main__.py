@@ -2,6 +2,7 @@
 
     python -m repro.lease_array.falsify --mode honest --expect none
     python -m repro.lease_array.falsify --mode corrupt --expect violation
+    python -m repro.lease_array.falsify --mode honest --restarts --expect none
 
 ``--mode corrupt`` enables the adversarial acc_stale/acc_equiv planes —
 the negative control where the search MUST reach a §4 violation (the
@@ -41,6 +42,12 @@ def main(argv=None) -> int:
         description="coverage-guided §4 falsification at sweep speed",
     )
     ap.add_argument("--mode", choices=("honest", "corrupt"), default="honest")
+    ap.add_argument(
+        "--restarts", action="store_true",
+        help="also explore the crash/restart planes (diskless acceptor "
+             "restarts + proposer restart counters) — honest faults in "
+             "either mode, so --expect stays mode-driven",
+    )
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--pop", type=int, default=256)
     ap.add_argument("--generations", type=int, default=8)
@@ -62,6 +69,7 @@ def main(argv=None) -> int:
     cfg = FalsifyConfig(
         seed=args.seed, pop_size=args.pop, generations=args.generations,
         backend=args.backend, corrupt=args.mode == "corrupt",
+        restarts=args.restarts,
     )
     res = search(cfg, log=lambda m: print(f"[falsify] {m}", flush=True))
 

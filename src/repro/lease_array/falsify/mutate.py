@@ -21,8 +21,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from ..scenario import CORRUPTION_PLANES
-from ..state import DEFAULT_RATE, NO_PROPOSER
+from ..scenario import CORRUPTION_PLANES, RESTART_PLANES
+from ..state import DEFAULT_RATE, MAX_RESTARTS, NO_PROPOSER
 
 __all__ = ["MUTATION_OPS", "MutationSpace", "mutate"]
 
@@ -42,16 +42,28 @@ class MutationSpace:
     rate_lo: int = 3       # clock-rate floor (>= 1; 3..5 bounds eps=0.25)
     rate_hi: int = 5       # clock-rate ceiling
     corrupt: bool = False  # also mutate the acc_stale/acc_equiv planes
+    restart: bool = False  # also mutate the acc_restart/prop_restart planes
+    #: per-proposer restart ceiling (the packed ballot's RESTART_SHIFT
+    #: carve); crash inserts that would overflow it are dropped, keeping
+    #: every mutant inside check_pack_budget's refusal boundary
+    max_restarts: int = MAX_RESTARTS
+    lease_ticks: int = 2   # M in whole ticks — the deaf-boundary reach
 
     def op_names(self) -> tuple[str, ...]:
+        cor, rst = set(CORRUPTION_PLANES), set(RESTART_PLANES)
         names = tuple(
             n for n, (_, planes) in MUTATION_OPS.items()
-            if not set(planes) & set(CORRUPTION_PLANES)
+            if not set(planes) & (cor | rst)
         )
         if self.corrupt:
             names += tuple(
                 n for n, (_, planes) in MUTATION_OPS.items()
-                if set(planes) & set(CORRUPTION_PLANES)
+                if set(planes) & cor
+            )
+        if self.restart:
+            names += tuple(
+                n for n, (_, planes) in MUTATION_OPS.items()
+                if set(planes) & rst
             )
         return names
 
@@ -147,8 +159,50 @@ def _op_flip_equiv(planes, b, rng, sp):
     e[b, t, a] = 1 - e[b, t, a]
 
 
+def _op_crash_insert(planes, b, rng, sp):
+    """Toggle one node restart (crash/restart plane operators only join
+    the pool when MutationSpace.restart is set): an acceptor — blank +
+    deaf for M — or a proposer — restart-counter bump. Proposer toggles
+    stay closed under the RESTART_SHIFT carve: an insert that would push
+    that proposer past ``sp.max_restarts`` total restarts is dropped."""
+    acc = rng.random(b.size) < 0.5
+    t, a = _coords(rng, b, sp.n_ticks, sp.n_acceptors)
+    t2, p = _coords(rng, b, sp.n_ticks, sp.n_proposers)
+    ra = planes["acc_restart"]
+    ba, ta, aa = b[acc], t[acc], a[acc]
+    ra[ba, ta, aa] = 1 - ra[ba, ta, aa]
+    rp = planes["prop_restart"]
+    bp, tp, pp = b[~acc], t2[~acc], p[~acc]
+    rp[bp, tp, pp] = 1 - rp[bp, tp, pp]
+    over = rp[bp].sum(axis=1)[np.arange(bp.size), pp] > sp.max_restarts
+    rp[bp[over], tp[over], pp[over]] = 0
+
+
+def _op_crash_shift(planes, b, rng, sp):
+    """Move one acceptor-restart slot by ±1 tick — the whole deaf window
+    slides against the quorum traffic around it."""
+    t, a = _coords(rng, b, sp.n_ticks, sp.n_acceptors)
+    t2 = np.clip(t + rng.choice((-1, 1), b.size), 0, sp.n_ticks - 1)
+    r = planes["acc_restart"]
+    v = r[b, t, a].copy()
+    r[b, t, a] = 0
+    r[b, t2, a] |= v
+
+
+def _op_deaf_boundary_nudge(planes, b, rng, sp):
+    """Plant one acceptor restart so its M-long deaf window expires right
+    around a random (tick, cell) attempt slot (±1 tick of jitter) — the
+    §4-critical boundary where an acceptor rejoins, blank, exactly as a
+    foreign quorum wants its vote."""
+    t, _, a = _coords(rng, b, sp.n_ticks, sp.n_cells, sp.n_acceptors)
+    jitter = rng.integers(-1, 2, b.size)
+    t0 = np.clip(t - sp.lease_ticks + jitter, 0, sp.n_ticks - 1)
+    planes["acc_restart"][b, t0, a] = 1
+
+
 #: name -> (operator, planes it writes); corruption-plane operators join
-#: the pool only when MutationSpace.corrupt is set
+#: the pool only when MutationSpace.corrupt is set, restart-plane
+#: operators only when MutationSpace.restart is set
 MUTATION_OPS = {
     "shift_attempt": (_op_shift_attempt, ("attempts",)),
     "flip_attempt": (_op_flip_attempt, ("attempts",)),
@@ -160,6 +214,9 @@ MUTATION_OPS = {
     "flip_acc_up": (_op_flip_acc_up, ("acc_up",)),
     "flip_stale": (_op_flip_stale, ("acc_stale",)),
     "flip_equiv": (_op_flip_equiv, ("acc_equiv",)),
+    "crash_insert": (_op_crash_insert, ("acc_restart", "prop_restart")),
+    "crash_shift": (_op_crash_shift, ("acc_restart",)),
+    "deaf_boundary_nudge": (_op_deaf_boundary_nudge, ("acc_restart",)),
 }
 
 

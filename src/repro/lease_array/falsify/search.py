@@ -23,7 +23,7 @@ import numpy as np
 
 from ..engine import LeaseArrayEngine
 from ..scenario import Scenario, plane_digest
-from ..state import DEFAULT_RATE, NO_PROPOSER
+from ..state import DEFAULT_RATE, MAX_RESTARTS, NO_PROPOSER
 from .mutate import MutationSpace, mutate
 
 __all__ = [
@@ -82,6 +82,11 @@ class FalsifyConfig:
     drift: bool = True
     corrupt: bool = False
     p_corrupt: float = 0.05
+    #: enable the crash/restart planes: diskless acceptor restarts (blank
+    #: + deaf for M) and proposer restart-counter bumps — honest faults,
+    #: so the search must NOT find a violation through them
+    restarts: bool = False
+    p_restart: float = 0.03
 
     @property
     def rate_bounds(self) -> tuple[int, int]:
@@ -97,7 +102,8 @@ class FalsifyConfig:
             n_ticks=self.n_ticks, n_cells=self.n_cells,
             n_acceptors=self.n_acceptors, n_proposers=self.n_proposers,
             delay_hi=self.max_delay, rate_lo=lo, rate_hi=hi,
-            corrupt=self.corrupt,
+            corrupt=self.corrupt, restart=self.restarts,
+            lease_ticks=self.lease_ticks,
         )
 
     def engine(self) -> LeaseArrayEngine:
@@ -136,15 +142,18 @@ def margin_score(margins: dict) -> np.ndarray:
     """[B] int64 boundary-proximity score — LOWER is closer to a §4
     violation. The primary distance is the smallest weighted margin
     component (one missing quorum vote = 256; one quarter-tick of
-    expiry-tie or ghost-guard distance = 64); concurrent open rounds
-    subtract a small contention bonus (capped far below one primary unit)
-    so equal-margin members with more simultaneous rounds rank first.
-    ``MARGIN_BIG`` sentinels ("never got close") stay astronomically
-    large, int64 keeps the weighting overflow-free."""
+    expiry-tie, ghost-guard, or deaf-window distance = 64); concurrent
+    open rounds subtract a small contention bonus (capped far below one
+    primary unit) so equal-margin members with more simultaneous rounds
+    rank first. ``MARGIN_BIG`` sentinels ("never got close") stay
+    astronomically large, int64 keeps the weighting overflow-free."""
     m = {k: np.asarray(v, np.int64) for k, v in margins.items()}
     primary = np.minimum(
         m["votes_gap"] * _W_VOTES,
-        np.minimum(m["tie_q4"] * _W_Q4, m["ghost_q4"] * _W_Q4),
+        np.minimum(
+            m["tie_q4"] * _W_Q4,
+            np.minimum(m["ghost_q4"] * _W_Q4, m["deaf_q4"] * _W_Q4),
+        ),
     )
     return primary - np.minimum(m["open_rounds"], _W_Q4 - 1)
 
@@ -186,6 +195,18 @@ def random_population(rng: np.random.Generator, cfg: FalsifyConfig) -> dict:
     )
     planes["acc_stale"] = fill()
     planes["acc_equiv"] = fill()
+    if cfg.restarts:
+        planes["acc_restart"] = (
+            rng.random((B, T, A)) < cfg.p_restart
+        ).astype(i32)
+        prop = (rng.random((B, T, P)) < cfg.p_restart / 2).astype(i32)
+        # the RESTART_SHIFT carve caps per-proposer totals: zero every
+        # restart past the cap so the batch clears check_pack_budget
+        prop[np.cumsum(prop, axis=1) > MAX_RESTARTS] = 0
+        planes["prop_restart"] = prop
+    else:
+        planes["acc_restart"] = np.zeros((B, T, A), i32)
+        planes["prop_restart"] = np.zeros((B, T, P), i32)
     return planes
 
 

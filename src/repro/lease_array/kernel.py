@@ -189,16 +189,21 @@ def sync_launch_plan(
 def delayed_launch_plan(
     n_acceptors: int, n_cells: int, n_proposers: int, n_ticks: int,
     *, block_n: int = 512, window: int = 16, corrupt: bool = False,
+    restart: bool = False,
 ) -> LaunchPlan:
     """Launch geometry of ``lease_window_delayed_pallas``: lease + netplane
     state, the same streams as sync, plus the fused [P, A] link matrices.
     ``corrupt`` appends the two adversarial [A, 1] corruption columns
-    (stale-ballot / equivocation masks) to the streamed planes — the
-    honest launch is geometry-identical to the pre-falsifier kernel."""
+    (stale-ballot / equivocation masks) to the streamed planes; ``restart``
+    appends the four crash/restart columns (acceptor restart + deaf-window
+    masks [A, 1], proposer restart + running restart counters [P, 1]) —
+    the honest launch is geometry-identical to the pre-falsifier kernel."""
     A, P = n_acceptors, n_proposers
     bcast = ((A, 1), (P, 1), (A, 1), (P, A))
     if corrupt:
         bcast += ((A, 1), (A, 1))
+    if restart:
+        bcast += ((A, 1), (A, 1), (P, 1), (P, 1))
     return _launch_plan(
         _LEASE_ROWS + _NET_ROWS, A, n_cells, P, n_ticks, block_n, window,
         bcast_rows=bcast,
@@ -257,14 +262,19 @@ def _delayed_window_kernel(
     sc_ref,
     *refs,
     majority: int, lease_q4: int, round_q4: int, guard_q4: int,
-    n_proposers: int, tw: int, corrupt: bool = False,
+    n_proposers: int, tw: int, corrupt: bool = False, restart: bool = False,
 ):
     n_state = N_LEASE + N_NET
-    n_in = n_state + (8 if corrupt else 6)
+    n_in = n_state + 6 + (2 if corrupt else 0) + (4 if restart else 0)
     ins, outs = refs[:n_in], refs[n_in:]
     att_ref, rel_ref, up_ref, pclk_ref, aclk_ref, link_ref = \
         ins[n_state:n_state + 6]
-    stale_ref, equiv_ref = ins[n_state + 6:n_in] if corrupt else (None, None)
+    extra = n_state + 6
+    stale_ref = equiv_ref = None
+    if corrupt:
+        stale_ref, equiv_ref = ins[extra:extra + 2]
+        extra += 2
+    rst_refs = ins[extra:extra + 4] if restart else None
     st_refs = outs[:n_state]
     own_ref, cnt_ref = outs[n_state], outs[n_state + 1]
     _init_resident(pl.program_id(1), ins[:n_state], st_refs)
@@ -276,6 +286,12 @@ def _delayed_window_kernel(
             {"stale": stale_ref[tau], "equiv": equiv_ref[tau]}
             if corrupt else {}
         )
+        if restart:
+            arst_ref, deaf_ref, prst_ref, rc_ref = rst_refs
+            adv.update(
+                acc_restart=arst_ref[tau], acc_deaf=deaf_ref[tau],
+                prop_restart=prst_ref[tau], prop_rc=rc_ref[tau],
+            )
         lease, net, count = delayed_tick_math(
             lease, net, t_base + tau,
             att_ref[tau], rel_ref[tau], up_ref[tau],
@@ -386,18 +402,28 @@ def lease_window_delayed_pallas(
     interpret: bool = True,  # False on real TPUs
     stale=None,  # [T, A] adversarial stale-ballot mask (None = honest)
     equiv=None,  # [T, A] adversarial equivocation mask (None = honest)
+    acc_restart=None,   # [T, A] acceptor crash+restart mask (None = honest)
+    acc_deaf=None,      # [T, A] post-restart deaf-window mask
+    prop_restart=None,  # [T, P] proposer crash+restart mask
+    prop_rc=None,       # [T, P] running per-proposer restart counters
 ) -> tuple[PackedLeaseState, NetPlaneState, jax.Array, jax.Array]:
     """Replay T delayed-model ticks in ONE kernel launch (state AND the
     in-flight netplane stay VMEM-resident across windows). Returns
     (packed_state', net', owners [T, N], counts [T, N]). Passing either
     corruption mask streams both as extra [A, 1] broadcast columns and
-    compiles the corrupted tick body; the honest launch is unchanged."""
+    compiles the corrupted tick body; passing any restart input streams
+    all four crash/restart columns likewise; the honest launch is
+    unchanged."""
     A, N = packed.promised.shape
     P = n_proposers
     T = attempts.shape[0]
     corrupt = stale is not None or equiv is not None
+    restart = any(
+        x is not None for x in (acc_restart, acc_deaf, prop_restart, prop_rc)
+    )
     plan = delayed_launch_plan(
-        A, N, P, T, block_n=block_n, window=window, corrupt=corrupt
+        A, N, P, T, block_n=block_n, window=window, corrupt=corrupt,
+        restart=restart,
     )
     tw, n_windows = plan.tw, plan.n_windows
 
@@ -405,7 +431,7 @@ def lease_window_delayed_pallas(
         _delayed_window_kernel,
         majority=majority, lease_q4=lease_q4, round_q4=round_q4,
         guard_q4=lease_q4 if guard_q4 is None else guard_q4,
-        n_proposers=P, tw=tw, corrupt=corrupt,
+        n_proposers=P, tw=tw, corrupt=corrupt, restart=restart,
     )
     row_plane = lambda p: _windowed(
         jnp.asarray(p, jnp.int32), n_windows, tw, 1, N
@@ -437,6 +463,19 @@ def lease_window_delayed_pallas(
                           else equiv, A),
             )
             if corrupt else ()
+        ),
+        *(
+            (
+                col_plane(jnp.zeros((T, A), jnp.int32) if acc_restart is None
+                          else acc_restart, A),
+                col_plane(jnp.zeros((T, A), jnp.int32) if acc_deaf is None
+                          else acc_deaf, A),
+                col_plane(jnp.zeros((T, P), jnp.int32) if prop_restart is None
+                          else prop_restart, P),
+                col_plane(jnp.zeros((T, P), jnp.int32) if prop_rc is None
+                          else prop_rc, P),
+            )
+            if restart else ()
         ),
     )
     n_state = N_LEASE + N_NET

@@ -71,6 +71,7 @@ from .state import (
     PACK_MASK,
     PACK_SHIFT,
     QUARTERS,
+    RESTART_SHIFT,
     ballot_proposer,
     clock_select,
     pack_pair,
@@ -230,6 +231,10 @@ def delayed_tick_math(
     legs=legs_gather,  # per-leg link strategy (select inside Pallas)
     stale=None,        # [A, 1|bn] adversarial: honor below-promise ballots
     equiv=None,        # [A, 1|bn] adversarial: report a live lease as open
+    acc_restart=None,  # [A, 1|bn] diskless acceptor crash+restart this tick
+    acc_deaf=None,     # [A, 1|bn] acceptor inside its post-restart deaf window
+    prop_restart=None,  # [P, 1|bn] proposer crash+restart this tick
+    prop_rc=None,       # [P, 1|bn] accumulated per-proposer restart counters
 ) -> tuple[tuple, tuple, jnp.ndarray]:
     """One tick of the delayed model on the packed layout. Returns
     (lease', net', owner_count[1, bn]).
@@ -260,6 +265,20 @@ def delayed_tick_math(
     accepted lease (the §3.3 open count poisons). Passing ``None`` (the
     default) traces no corruption ops at all, so the honest path's jaxpr
     is byte-identical to a build without these arguments.
+
+    ``acc_restart``/``acc_deaf``/``prop_restart``/``prop_rc`` are the
+    crash/restart inputs (paper §2's diskless failure model). An acceptor
+    restart blanks its column — promises, accepted lease and its own
+    not-yet-delivered responses — and ``acc_deaf`` (precomputed by the ops
+    layer from the accumulated clock planes: deaf while the local clock is
+    within a maximal lease span of the restart) makes it unreachable like
+    ``acc_up = 0``. A proposer restart drops its owner belief, abandons its
+    open round, and — via ``prop_rc``, the inclusive running restart count
+    — mints subsequent ballots with the restart counter carved into the
+    upper word (``state.RESTART_SHIFT``), so numeric ballot order equals
+    the event engine's (run, restart, proposer) ``Ballot`` order. ``None``
+    defaults trace no restart ops at all (honest path byte-identical); the
+    four arrive together or not at all.
     """
     promised, acc_lease, own_id, ownp = lease
     (preq, presp, presp_pay, poreq, poresp, rel_s,
@@ -293,6 +312,29 @@ def delayed_tick_math(
     ownp = jnp.where(own_live, ownp, 0)
     own_id = jnp.where(own_live, own_id, NO_PROPOSER)
 
+    # -- 1.5 crash/restart injection (§2: the diskless failure model) ------
+    if acc_restart is not None:
+        rst_a = acc_restart > 0                                    # [A, bn]
+        # a diskless acceptor comes back BLANK: its promises, accepted
+        # lease and its own not-yet-delivered responses are gone; requests
+        # in flight TO it live in the network and survive
+        promised = jnp.where(rst_a, 0, promised)
+        acc_lease = jnp.where(rst_a, 0, acc_lease)
+        presp = jnp.where(rst_a, 0, presp)
+        presp_pay = jnp.where(rst_a, NO_PROPOSER, presp_pay)
+        poresp = jnp.where(rst_a, 0, poresp)
+    if acc_deaf is not None:
+        # ... and stays deaf for a maximal lease span ON ITS OWN CLOCK (the
+        # window is precomputed from the accumulated clock planes); a deaf
+        # acceptor is unreachable exactly like acc_up = 0
+        up = up & ~(acc_deaf > 0)
+    if prop_restart is not None:
+        # a restarted proposer loses its volatile owner belief NOW (its
+        # open round is abandoned in phase 3 below)
+        own_rst = clock_select(prop_restart, own_id) > 0           # [1, bn]
+        ownp = jnp.where(own_rst, 0, ownp)
+        own_id = jnp.where(own_rst, NO_PROPOSER, own_id)
+
     # -- 2. release (§7, routed through the network) -----------------------
     # 2a. the local action: the releasing owner stops believing NOW (the
     #     §7 "switch to non-owner first" ordering) ...
@@ -321,6 +363,12 @@ def delayed_tick_math(
     # overwrites whatever round was open (Proposer._start_round).
     rnd_prop = ballot_proposer(rnd_ballot, P)                       # [1, bn]
     rel_kills = (rnd_ballot > 0) & has_rel & (rnd_prop == rel)
+    if prop_restart is not None:
+        # a restarted round owner abandons its open round (a crash loses
+        # the volatile _Round; stale responses can no longer match it)
+        rel_kills = rel_kills | (
+            (rnd_ballot > 0) & (clock_select(prop_restart, rnd_prop) > 0)
+        )
     # the abandon timer is a LOCAL timer: it fires once the round OWNER's
     # clock has advanced round_q4 local quarters past the attempt
     rnd_clk = clock_select(pclk, rnd_prop)                          # [1, bn]
@@ -328,7 +376,15 @@ def delayed_tick_math(
     att = attempt                                                   # [1, bn]
     has_att = att >= 0
     att_clk = clock_select(pclk, att)                               # [1, bn]
-    new_ballot = jnp.where(has_att, (t + 1) * P + att, 0)
+    if prop_rc is None:
+        new_ballot = jnp.where(has_att, (t + 1) * P + att, 0)
+    else:
+        # restart mode: carve the attempting proposer's restart counter
+        # into the ballot's upper word (state.RESTART_SHIFT) — numeric
+        # order equals core.ballot's (run, restart, proposer) order
+        rc_att = clock_select(prop_rc, att)                         # [1, bn]
+        upper = ((t + 1) << RESTART_SHIFT) | rc_att
+        new_ballot = jnp.where(has_att, upper * P + att, 0)
     keep = (rnd_ballot > 0) & ~timed_out & ~rel_kills & ~has_att
     rnd_ballot = jnp.where(has_att, new_ballot, jnp.where(keep, rnd_ballot, 0))
     rnd_phase = jnp.where(

@@ -41,9 +41,11 @@ from .netplane import (
     pack_link,
 )
 from .ref import link_matrix, sync_tick_math
-from .scenario import TickInputs, make_tick
+from .scenario import CORRUPTION_PLANES, RESTART_PLANES, TickInputs, make_tick
 from .state import (
     NO_PROPOSER,
+    PACK_MASK,
+    PACK_SHIFT,
     QUARTERS,
     LeaseArrayState,
     PackedLeaseState,
@@ -88,6 +90,43 @@ def _local_clock_planes(t0, T: int, clk0, planes: dict, n_proposers: int,
         one(planes.get("prop_rate"), n_proposers, pc0),
         one(planes.get("acc_rate"), n_acceptors, ac0),
     )
+
+
+def _restart_planes(rst0, arst, prst, aclk, lease_q4: int, guard: bool):
+    """Absolute per-tick crash/restart planes, precomputed like the clock
+    planes so restart state needs NO scan carry:
+
+      ``rc [T, P]``        INCLUSIVE running per-proposer restart count
+                           (a proposer restarting at tick t attempts at t
+                           with the bumped counter, like core/cell's
+                           persisted-counter bump);
+      ``deaf [T, A]``      1 while the acceptor is inside its post-restart
+                           deaf window: its local clock has not yet
+                           advanced a maximal lease span (``lease_q4``
+                           local quarter-ticks — M on ITS clock domain)
+                           past the latest restart (a running cummax of
+                           restart-minted horizons vs ``aclk``);
+      ``deaf_rem [T, A]``  local quarter-ticks of deaf window remaining
+                           (0 = not deaf; the margins scan's boundary
+                           distance).
+
+    ``rst0`` is the (rc0 [P], deaf_until0 [A]) restart history at t0
+    (None = fresh). ``guard=False`` (the §4 negative control) zeroes the
+    deaf window: restarted acceptors come back blank but answer
+    immediately — the unsafe diskless restart the paper's M-wait forbids.
+    """
+    rc0, du0 = (None, None) if rst0 is None else rst0
+    rc = jnp.cumsum(jnp.asarray(prst, jnp.int32), axis=0)
+    if rc0 is not None:
+        rc = rc + jnp.asarray(rc0, jnp.int32)[None, :]
+    minted = jnp.where(jnp.asarray(arst, jnp.int32) > 0, aclk + lease_q4, 0)
+    du = jax.lax.cummax(minted, axis=0)
+    if du0 is not None:
+        du = jnp.maximum(du, jnp.asarray(du0, jnp.int32)[None, :])
+    deaf_rem = jnp.maximum(du - aclk, 0)
+    if not guard:
+        deaf_rem = jnp.zeros_like(deaf_rem)
+    return rc, (deaf_rem > 0).astype(jnp.int32), deaf_rem
 
 
 def _pad_cells(arrays, multiple: int, pad_values):
@@ -136,6 +175,7 @@ def _window_scan_impl(
     net,
     t0,
     clk0,
+    rst0,
     planes: dict,
     *,
     majority: int,
@@ -146,12 +186,14 @@ def _window_scan_impl(
     sync: bool,
     block_n: int,
     window: int,
+    restart_guard: bool = True,
 ):
     """Shared unjitted body of the fused scan (also vmapped by
     ``engine.sweep``). ``planes`` is the Scenario plane dict ([T, ...]
     arrays); ``clk0`` the (prop [P], acc [A]) local-clock offsets at
-    ``t0`` (None = the rate-1 reading ``4·t0``). Returns
-    (state', net', owners [T, N], counts [T, N])."""
+    ``t0`` (None = the rate-1 reading ``4·t0``); ``rst0`` the
+    (restart-counter [P], deaf-until [A]) restart history at ``t0``
+    (None = fresh). Returns (state', net', owners [T, N], counts [T, N])."""
     if backend not in BACKENDS:
         raise ValueError(f"unknown lease-plane backend {backend!r}")
     P = state.n_proposers
@@ -178,6 +220,30 @@ def _window_scan_impl(
         za = jnp.zeros((T, A), jnp.int32)
         stale = za if stale is None else jnp.asarray(stale, jnp.int32)
         equiv = za if equiv is None else jnp.asarray(equiv, jnp.int32)
+    # the crash/restart planes: same omit-means-honest contract; a restart
+    # history (rst0) keeps restart mode on across incremental steps even
+    # when this dispatch's planes are quiet, so ballot encoding never
+    # switches mid-trace
+    arst = planes.get("acc_restart")
+    prst = planes.get("prop_restart")
+    restart = arst is not None or prst is not None or rst0 is not None
+    if restart:
+        if sync:
+            raise ValueError(
+                "restart planes (acc_restart/prop_restart) need the "
+                "delayed model; the synchronous tick cannot honor them"
+            )
+        arst = (
+            jnp.zeros((T, A), jnp.int32) if arst is None
+            else jnp.asarray(arst, jnp.int32)
+        )
+        prst = (
+            jnp.zeros((T, P), jnp.int32) if prst is None
+            else jnp.asarray(prst, jnp.int32)
+        )
+        rc, deaf, _ = _restart_planes(
+            rst0, arst, prst, aclk, lease_q4, restart_guard
+        )
     if not sync:
         link = pack_link(planes["delay"], planes["drop"])  # [T, P, A]
 
@@ -203,10 +269,18 @@ def _window_scan_impl(
             def body(carry, xs):
                 lease, netc, t = carry
                 a, r, u, pc, ac, lk = xs[:6]
-                adv = (
-                    {"stale": xs[6][:, None], "equiv": xs[7][:, None]}
-                    if corrupt else {}
-                )
+                i = 6
+                adv = {}
+                if corrupt:
+                    adv = {"stale": xs[i][:, None], "equiv": xs[i + 1][:, None]}
+                    i += 2
+                if restart:
+                    adv.update(
+                        acc_restart=xs[i][:, None],
+                        acc_deaf=xs[i + 1][:, None],
+                        prop_restart=xs[i + 2][:, None],
+                        prop_rc=xs[i + 3][:, None],
+                    )
                 lease, netc, count = delayed_tick_math(
                     lease, netc, t, a[None, :], r[None, :], u[:, None],
                     pc[:, None], ac[:, None], lk,
@@ -218,6 +292,8 @@ def _window_scan_impl(
             xs = (attempts, releases, acc_up, pclk, aclk, link)
             if corrupt:
                 xs += (stale, equiv)
+            if restart:
+                xs += (arst, deaf, prst, rc)
             (lease, netc, _), (owners, counts) = jax.lax.scan(
                 body, (tuple(packed), tuple(net), t0), xs
             )
@@ -240,9 +316,14 @@ def _window_scan_impl(
         new_net = net
     else:
         net_p = _pad_net(net, block_n)
+        rst_kw = (
+            dict(acc_restart=arst, acc_deaf=deaf, prop_restart=prst,
+                 prop_rc=rc)
+            if restart else {}
+        )
         padded, net_p, owners, counts = lease_window_delayed_pallas(
             padded, net_p, t0, attempts_p, releases_p, acc_up, pclk, aclk,
-            link, stale=stale, equiv=equiv,
+            link, stale=stale, equiv=equiv, **rst_kw,
             majority=majority, lease_q4=lease_q4, round_q4=round_q4,
             n_proposers=P, guard_q4=guard_q4, block_n=block_n,
             window=window, interpret=interpret,
@@ -258,7 +339,7 @@ _window_scan_jit = functools.partial(
     jax.jit,
     static_argnames=(
         "majority", "lease_q4", "round_q4", "guard_q4", "backend", "sync",
-        "block_n", "window",
+        "block_n", "window", "restart_guard",
     ),
 )(_window_scan_impl)
 
@@ -267,7 +348,7 @@ _window_scan_jit = functools.partial(
 MARGIN_BIG = 1 << 28
 
 #: the margin components, in the order the scan carry holds them
-MARGIN_NAMES = ("votes_gap", "tie_q4", "ghost_q4", "open_rounds")
+MARGIN_NAMES = ("votes_gap", "tie_q4", "ghost_q4", "deaf_q4", "open_rounds")
 
 
 def _margin_scan_impl(
@@ -281,6 +362,8 @@ def _margin_scan_impl(
     lease_q4: int,
     round_q4: int,
     guard_q4: int,
+    rst0=None,
+    restart_guard: bool = True,
 ):
     """The delayed jnp scan with §4 boundary-proximity margins folded into
     the carry — the body of ``engine.sweep(collect="margins")``. Margins
@@ -299,6 +382,12 @@ def _margin_scan_impl(
                       claim missed its own guarded timer (§3 step 5: the
                       ghost-lease guard refused the win; 1 = refused by a
                       single quarter-tick);
+      ``deaf_q4``     min local quarter-ticks of deaf window left when a
+                      post-restart deaf acceptor refused a due request
+                      that would have completed a *foreign* quorum (one
+                      vote short while another belief is live) — the
+                      restart species' boundary distance (1 = the M-wait
+                      saved §4 by a single quarter-tick);
       ``open_rounds`` max cells with a round open at once (contention).
 
     Min components start at ``MARGIN_BIG`` ("never got close"). Always
@@ -324,6 +413,21 @@ def _margin_scan_impl(
         za = jnp.zeros((T, A), jnp.int32)
         stale = za if stale is None else jnp.asarray(stale, jnp.int32)
         equiv = za if equiv is None else jnp.asarray(equiv, jnp.int32)
+    arst = planes.get("acc_restart")
+    prst = planes.get("prop_restart")
+    restart = arst is not None or prst is not None or rst0 is not None
+    if restart:
+        arst = (
+            jnp.zeros((T, A), jnp.int32) if arst is None
+            else jnp.asarray(arst, jnp.int32)
+        )
+        prst = (
+            jnp.zeros((T, P), jnp.int32) if prst is None
+            else jnp.asarray(prst, jnp.int32)
+        )
+        rc, deaf, deaf_rem = _restart_planes(
+            rst0, arst, prst, aclk, lease_q4, restart_guard
+        )
     big = jnp.int32(MARGIN_BIG)
 
     def vote_count(bits):  # popcount over the A vote bits (compile-time A)
@@ -335,10 +439,17 @@ def _margin_scan_impl(
     def body(carry, xs):
         lease, netc, t, m = carry
         a, r, u, pc, ac, lk = xs[:6]
-        adv = (
-            {"stale": xs[6][:, None], "equiv": xs[7][:, None]}
-            if corrupt else {}
-        )
+        i = 6
+        adv = {}
+        if corrupt:
+            adv = {"stale": xs[i][:, None], "equiv": xs[i + 1][:, None]}
+            i += 2
+        if restart:
+            adv.update(
+                acc_restart=xs[i][:, None], acc_deaf=xs[i + 1][:, None],
+                prop_restart=xs[i + 2][:, None], prop_rc=xs[i + 3][:, None],
+            )
+            deaf_rem_col = xs[i + 4][:, None]
         att_row, rel_row = a[None, :], r[None, :]
         pc_col = pc[:, None]
         # pre-tick: guarded-expiry tie distance at releases that name the
@@ -350,6 +461,36 @@ def _margin_scan_impl(
         )
         tie_clk_d = jnp.abs(packed_q4(ownp_pre) - own_clk)
         tie_q4 = jnp.min(jnp.where(names_owner, tie_clk_d, big))
+
+        # pre-tick: deaf-window boundary distance — a due request at a deaf
+        # acceptor, belonging to the open round, while that round is one
+        # vote short of a foreign quorum: the refusal the M-wait exists
+        # for. Margin = deaf quarter-ticks remaining on the acceptor's
+        # clock when it refused.
+        if restart:
+            preq_pre, poreq_pre = netc[0], netc[3]
+            rnd_ballot_pre = netc[6]
+            live_min_pre = (QUARTERS * t + 1) << PACK_SHIFT
+            req_due = lambda s: (s > 0) & (s < live_min_pre)
+            round_req = (
+                (req_due(preq_pre) & ((preq_pre & PACK_MASK) == rnd_ballot_pre))
+                | (req_due(poreq_pre) & ((poreq_pre & PACK_MASK) == rnd_ballot_pre))
+            )
+            rnd_prop_pre = ballot_proposer(rnd_ballot_pre, P)
+            foreign_pre = (
+                (rnd_ballot_pre > 0) & (ownp_pre > 0)
+                & (own_id_pre != rnd_prop_pre)
+            )
+            nv_pre = jnp.maximum(
+                vote_count(netc[10]), vote_count(netc[11])
+            )
+            one_short = nv_pre == (majority - 1)
+            saved = (
+                (deaf_rem_col > 0) & round_req & foreign_pre & one_short
+            )
+            deaf_q4 = jnp.min(jnp.where(saved, deaf_rem_col, big))
+        else:
+            deaf_q4 = big
 
         lease, netc, count = delayed_tick_math(
             lease, netc, t, att_row, rel_row, u[:, None],
@@ -383,14 +524,17 @@ def _margin_scan_impl(
             jnp.minimum(m[0], votes_gap),
             jnp.minimum(m[1], tie_q4),
             jnp.minimum(m[2], ghost_q4),
-            jnp.maximum(m[3], open_rounds),
+            jnp.minimum(m[3], deaf_q4),
+            jnp.maximum(m[4], open_rounds),
         )
         return (lease, netc, t + 1, m), (lease[2], count)
 
-    m0 = (big, big, big, jnp.int32(0))
+    m0 = (big, big, big, big, jnp.int32(0))
     xs = (attempts, releases, acc_up, pclk, aclk, link)
     if corrupt:
         xs += (stale, equiv)
+    if restart:
+        xs += (arst, deaf, prst, rc, deaf_rem)
     (_, _, _, m), (owners, counts) = jax.lax.scan(
         body, (tuple(packed), tuple(net), t0, m0), xs
     )
@@ -404,7 +548,8 @@ _WARNED_TRACED_SKIP = False
 
 
 def _guard_pack_budget(
-    t0, n_ticks, planes, *, n_proposers, lease_q4, sync, clk0=None
+    t0, n_ticks, planes, *, n_proposers, lease_q4, sync, clk0=None,
+    rst0=None,
 ):
     """Best-effort host-side overflow guard for the public entry points:
     a tick past ``state.max_pack_tick`` would silently corrupt the packed
@@ -412,11 +557,16 @@ def _guard_pack_budget(
     any consulted plane is a tracer (a caller jitting over time owns the
     check, like ``engine.step`` does). Fast clocks shrink the budget: the
     rate planes' maximum step and any clock offsets already ahead of the
-    rate-1 reading are both charged."""
+    rate-1 reading are both charged. Restart mode (any restart plane or a
+    restart history) charges the ballot carve: the budget shrinks by
+    RESTART_SHIFT bits plus the highest per-proposer restart count."""
     delay = None if sync else planes.get("delay")
-    consulted = (t0, delay, planes.get("prop_rate"), planes.get("acc_rate"))
+    consulted = (t0, delay, planes.get("prop_rate"), planes.get("acc_rate"),
+                 planes.get("acc_restart"), planes.get("prop_restart"))
     if clk0 is not None:
         consulted += tuple(clk0)
+    if rst0 is not None:
+        consulted += tuple(rst0)
     if any(isinstance(x, jax.core.Tracer) for x in consulted):
         global _WARNED_TRACED_SKIP
         if not _WARNED_TRACED_SKIP:
@@ -446,9 +596,22 @@ def _guard_pack_budget(
     if clk0 is not None:
         clk_max = max(int(np.asarray(c).max(initial=0)) for c in clk0)
         clk_slack = max(0, clk_max - max_rate * t0)
+    arst = planes.get("acc_restart")
+    prst = planes.get("prop_restart")
+    max_restarts = 0
+    if arst is not None or prst is not None or rst0 is not None:
+        rc_end = np.zeros(n_proposers, np.int64)
+        if prst is not None:
+            rc_end += np.asarray(prst, np.int64).reshape(
+                -1, n_proposers).sum(axis=0)
+        if rst0 is not None:
+            rc_end += np.asarray(rst0[0], np.int64)
+        # acc-only restart schedules still switch the ballot encoding, so
+        # charge at least one carve slot
+        max_restarts = max(1, int(rc_end.max(initial=0)))
     check_pack_budget(
         t0 + n_ticks, n_proposers, lease_q4, max_delay,
-        max_rate=max_rate, clk_slack=clk_slack,
+        max_rate=max_rate, clk_slack=clk_slack, max_restarts=max_restarts,
     )
 
 
@@ -463,6 +626,8 @@ def lease_window_scan(
     round_q4: int,
     guard_q4: int = None,
     clk0=None,
+    rst0=None,
+    restart_guard: bool = True,
     backend: str = "jnp",
     sync: bool = False,
     block_n: int = 512,
@@ -478,18 +643,21 @@ def lease_window_scan(
     drift-guarded own timespan (`state.guarded_lease_q4`; default: the
     full ``lease_q4``, the ε=0 case) and ``clk0`` the (prop [P], acc [A])
     accumulated local-clock offsets at ``t0`` (default: the rate-1
-    reading ``4·t0`` on every node). Returns
-    (new_state, new_net, owners [T, N], owner_counts [T, N]).
+    reading ``4·t0`` on every node). ``rst0`` is the (restart-counter [P],
+    deaf-until [A]) restart history at ``t0`` (None = fresh; its presence
+    keeps restart mode on even for quiet planes); ``restart_guard=False``
+    disables the post-restart deaf window — the §4 negative control.
+    Returns (new_state, new_net, owners [T, N], owner_counts [T, N]).
     """
     if guard_q4 is None:
         guard_q4 = lease_q4
-    # all-zero corruption planes are the honest acceptor: strip them
-    # host-side so the honest replay never compiles the corrupt variant
-    # (and a zero-corruption Scenario still runs under sync=True)
+    # all-zero corruption/restart planes are the honest engine: strip them
+    # host-side so the honest replay never compiles the fault variants
+    # (and a zero-fault Scenario still runs under sync=True)
     planes = {
         k: v for k, v in planes.items()
         if not (
-            k in ("acc_stale", "acc_equiv")
+            k in CORRUPTION_PLANES + RESTART_PLANES
             and not isinstance(v, jax.core.Tracer)
             and not np.asarray(v).any()
         )
@@ -497,13 +665,13 @@ def lease_window_scan(
     _guard_pack_budget(
         t0, int(jnp.shape(planes["attempts"])[0]), planes,
         n_proposers=state.n_proposers, lease_q4=lease_q4, sync=sync,
-        clk0=clk0,
+        clk0=clk0, rst0=rst0,
     )
     return _window_scan_jit(
-        state, net, t0, clk0, planes,
+        state, net, t0, clk0, rst0, planes,
         majority=majority, lease_q4=lease_q4, round_q4=round_q4,
         guard_q4=guard_q4, backend=backend, sync=sync, block_n=block_n,
-        window=window,
+        window=window, restart_guard=restart_guard,
     )
 
 
@@ -518,6 +686,8 @@ def lease_plane_tick(
     round_q4: int,
     guard_q4: int = None,
     clk0=None,
+    rst0=None,
+    restart_guard: bool = True,
     backend: str = "jnp",
     block_n: int = 512,
     sync: bool = False,
@@ -544,14 +714,18 @@ def lease_plane_tick(
 
     def _default_plane(k, v):
         # an all-DEFAULT_RATE rate plane is the in-graph default clock,
-        # and an all-zero corruption plane is the honest acceptor: omit
-        # either from the dispatch dict (one fewer host->device upload
-        # per step; the scan derives identical behavior bit-for-bit)
+        # and an all-zero corruption/restart plane is the honest engine:
+        # omit either from the dispatch dict (one fewer host->device
+        # upload per step; the scan derives identical behavior
+        # bit-for-bit). A restart history (rst0) pins the restart planes
+        # in, so ballot encoding never switches mid-trace.
         if isinstance(v, jax.core.Tracer):
             return False
         if k in ("prop_rate", "acc_rate"):
             return bool((np.asarray(v) == QUARTERS).all())
-        if k in ("acc_stale", "acc_equiv"):
+        if k in CORRUPTION_PLANES:
+            return not np.asarray(v).any()
+        if k in RESTART_PLANES and rst0 is None:
             return not np.asarray(v).any()
         return False
 
@@ -562,13 +736,13 @@ def lease_plane_tick(
     _guard_pack_budget(
         t, 1, tick.planes,
         n_proposers=state.n_proposers, lease_q4=lease_q4, sync=sync,
-        clk0=clk0,
+        clk0=clk0, rst0=rst0,
     )
     new_state, new_net, _, counts = _window_scan_jit(
-        state, net, t, clk0, planes,
+        state, net, t, clk0, rst0, planes,
         majority=majority, lease_q4=lease_q4, round_q4=round_q4,
         guard_q4=guard_q4, backend=backend, sync=sync, block_n=block_n,
-        window=window,
+        window=window, restart_guard=restart_guard,
     )
     return new_state, new_net, counts[0]
 

@@ -36,7 +36,12 @@ bit-for-bit by construction. `lease_step_ref` wraps it in the public
 This synchronous step is the zero-delay special case. The *delayed* model
 (`lease_step_delayed_ref`) threads the same protocol through the in-flight
 message plane (`netplane.py`): rounds span multiple ticks, responses arrive
-late, get lost, or land after the proposer abandoned the round.
+late, get lost, or land after the proposer abandoned the round. Crash and
+restart faults live there too: a diskless acceptor restart blanks its
+column (promises, accepted lease, in-flight responses) and holds it deaf
+for M local quarter-ticks before it may answer again (§3), while a
+proposer restart abandons its open rounds and bumps the restart counter
+carved into its packed ballots (§2; ``state.RESTART_SHIFT``).
 
 Clock drift (§4): every node-side deadline is minted from and compared
 against that node's LOCAL clock — the ``pclk``/``aclk`` columns fed per
@@ -219,15 +224,38 @@ def lease_step_delayed_ref(
     guard_q4: int = None,  # drift-guarded proposer timespan (default lease_q4)
     pclk=None,        # [P] int32 proposer local clocks (default: 4t, no drift)
     aclk=None,        # [A] int32 acceptor local clocks (default: 4t, no drift)
+    acc_restart=None,  # [A] 0/1: blank this acceptor (diskless crash+restart)
+    acc_deaf=None,     # [A] 0/1: acceptor inside its post-restart M-wait
+    prop_restart=None,  # [P] 0/1: bump this proposer's restart counter
+    prop_rc=None,      # [P] running restart counters (the ballot carve's rc)
 ) -> tuple[LeaseArrayState, NetPlaneState, jnp.ndarray]:
     """One tick of the delayed (in-flight message) model; pure-jnp oracle.
 
     Returns (new_state, new_net, owner_count[N]). The whole tick body lives
     in `netplane.delayed_tick_math`, which the Pallas kernel shares.
+
+    The crash/restart columns are delayed-model only — a restart blanks
+    the in-flight response slots and opens a multi-tick deaf window, both
+    of which need the net plane to exist (the sync core has no restart
+    path). Pass the per-tick columns of the scenario's ``acc_restart``/
+    ``prop_restart`` planes plus the engine-accumulated deaf/counter
+    columns; giving any of them threads all four (absent ones as zeros,
+    a bit-exact no-op).
     """
     A, N = state.highest_promised.shape
     P = state.n_proposers
     dp, da = _default_clocks(t, P, A)
+    adv = {}
+    if any(x is not None for x in (acc_restart, acc_deaf, prop_restart,
+                                   prop_rc)):
+        col = lambda x, rows: (
+            jnp.zeros((rows, 1), jnp.int32) if x is None
+            else jnp.asarray(x, jnp.int32).reshape(rows, 1)
+        )
+        adv = dict(
+            acc_restart=col(acc_restart, A), acc_deaf=col(acc_deaf, A),
+            prop_restart=col(prop_restart, P), prop_rc=col(prop_rc, P),
+        )
     lease, netp, count = delayed_tick_math(
         tuple(pack_state(state)), tuple(net), t,
         jnp.asarray(attempt, jnp.int32).reshape(1, N),
@@ -237,7 +265,7 @@ def lease_step_delayed_ref(
         da if aclk is None else jnp.asarray(aclk, jnp.int32).reshape(A, 1),
         pack_link(link_matrix(delay, P, A), link_matrix(drop, P, A)),
         majority=majority, lease_q4=lease_q4, round_q4=round_q4,
-        n_proposers=P, guard_q4=guard_q4,
+        n_proposers=P, guard_q4=guard_q4, **adv,
     )
     return (
         unpack_state(PackedLeaseState(*lease), P),

@@ -54,6 +54,7 @@ __all__ = [
     "PlaneSpec",
     "PLANES",
     "CORRUPTION_PLANES",
+    "RESTART_PLANES",
     "register_plane",
     "plane_table_md",
     "plane_digest",
@@ -152,11 +153,29 @@ register_plane(
     "accepted lease as open this tick",
     min_value=0,
 )
+register_plane(
+    "acc_restart", ("A",), 0,
+    "diskless acceptor crash+restart this tick: state blanks, then deaf "
+    "for a maximal lease span on its local clock",
+    min_value=0,
+)
+register_plane(
+    "prop_restart", ("P",), 0,
+    "proposer crash+restart this tick: abandons its round, drops its owner "
+    "belief, bumps its ballot restart counter",
+    min_value=0,
+)
 
 #: the adversarial corruption planes — Byzantine acceptor behaviors the
 #: honest protocol must never exhibit; the falsification engine enables
 #: them as negative controls proving the §4 alarm can fire at all
 CORRUPTION_PLANES = ("acc_stale", "acc_equiv")
+
+#: the crash/restart planes (paper §1 failure model): diskless acceptor
+#: restarts + proposer restart counters. All-zero planes are stripped from
+#: dispatch like the corruption planes, keeping the honest engine
+#: bit-identical with zero extra uploads
+RESTART_PLANES = ("acc_restart", "prop_restart")
 
 
 def plane_table_md(planes: Optional[dict[str, PlaneSpec]] = None) -> str:
@@ -349,6 +368,15 @@ class _PlaneBundle:
         Host-side only — not traceable."""
         return bool(any(
             np.asarray(self.planes[k]).any() for k in CORRUPTION_PLANES
+        ))
+
+    @property
+    def restarted(self) -> bool:
+        """True iff a crash/restart plane is nonzero anywhere (needs the
+        delayed model with the restart inputs threaded and switches ballots
+        to the restart-counter carve). Host-side only — not traceable."""
+        return bool(any(
+            np.asarray(self.planes[k]).any() for k in RESTART_PLANES
         ))
 
     def validate_for(

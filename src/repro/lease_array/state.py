@@ -46,6 +46,16 @@ PACK_SHIFT = 15  # low bits: ballot; high bits: a quarter-tick deadline
 PACK_MASK = (1 << PACK_SHIFT) - 1  # max packable ballot (32767)
 MAX_PACK_Q4 = (2**31 - 1) >> PACK_SHIFT  # max packable quarter-tick (65535)
 
+#: restart-mode ballot carve (diskless proposer restarts, paper §2): the
+#: ballot's run field is shifted left by RESTART_SHIFT and the low bits of
+#: the upper word hold a per-proposer restart counter, mirroring the event
+#: engine's ``core.ballot.Ballot`` (run, restart, proposer) lexicographic
+#: order numerically: ``ballot = (((t+1) << RESTART_SHIFT) | rc) * P + p``.
+#: The carve spends ballot-budget bits, so ``max_pack_tick`` shrinks in
+#: restart mode — see its ``max_restarts=`` term.
+RESTART_SHIFT = 2
+MAX_RESTARTS = (1 << RESTART_SHIFT) - 1  # restart counters must stay below the carve
+
 
 class LeaseArrayState(NamedTuple):
     """One lease plane. All arrays int32; see module docstring for layout."""
@@ -138,9 +148,18 @@ def clock_select(clk, ids):
     return v
 
 
-def ballot_of(t, proposer, n_proposers: int):
-    """Globally unique ballot for an attempt by ``proposer`` at tick ``t``."""
-    return (t + 1) * n_proposers + proposer
+def ballot_of(t, proposer, n_proposers: int, restart_counter=None):
+    """Globally unique ballot for an attempt by ``proposer`` at tick ``t``.
+
+    With ``restart_counter`` (restart mode) the run field is carved as
+    ``(t+1) << RESTART_SHIFT | rc`` so numeric order equals the event
+    engine's (run, restart, proposer) lexicographic ``Ballot`` order; the
+    proposer stays the low mod-P field either way, so ``ballot_proposer``
+    needs no mode switch."""
+    if restart_counter is None:
+        return (t + 1) * n_proposers + proposer
+    upper = ((t + 1) << RESTART_SHIFT) | restart_counter
+    return upper * n_proposers + proposer
 
 
 # ---------------------------------------------------------------------------
@@ -173,6 +192,7 @@ def max_pack_tick(
     max_delay_ticks: int = 0,
     max_rate: int = QUARTERS,
     clk_slack: int = 0,
+    max_restarts: int = 0,
 ) -> int:
     """Highest tick the packed layout can represent: the last attempt's
     ballot must fit in PACK_SHIFT bits and the latest deadline any tick can
@@ -181,8 +201,16 @@ def max_pack_tick(
     With drifting clocks node deadlines live in *local* quarter-ticks,
     which a fast clock mints at up to ``max_rate`` per tick; ``clk_slack``
     is how far ahead of ``max_rate * t`` an engine's accumulated clocks
-    already run (0 for a fresh engine)."""
-    by_ballot = (PACK_MASK - (n_proposers - 1)) // n_proposers - 1
+    already run (0 for a fresh engine).
+
+    ``max_restarts > 0`` switches to the restart-mode ballot carve (see
+    RESTART_SHIFT): the run field loses RESTART_SHIFT bits of headroom to
+    the restart counter, so the tick budget shrinks by ~4x."""
+    upper_budget = (PACK_MASK - (n_proposers - 1)) // n_proposers
+    if max_restarts:
+        by_ballot = ((upper_budget - int(max_restarts)) >> RESTART_SHIFT) - 1
+    else:
+        by_ballot = upper_budget - 1
     rate = max(int(max_rate), QUARTERS)  # deliver-at slots tick at QUARTERS
     by_q4 = (
         MAX_PACK_Q4 - lease_q4 - QUARTERS * max_delay_ticks - int(clk_slack)
@@ -197,18 +225,27 @@ def check_pack_budget(
     max_delay_ticks: int = 0,
     max_rate: int = QUARTERS,
     clk_slack: int = 0,
+    max_restarts: int = 0,
 ) -> None:
     """Raise if ticking through ``t_end`` would overflow the packed layout
     (a ballot or deadline minted past :func:`max_pack_tick` silently
     corrupts neighbouring fields — never let one form)."""
+    if max_restarts > MAX_RESTARTS:
+        raise ValueError(
+            f"{max_restarts} restarts of one proposer exceed the "
+            f"{RESTART_SHIFT}-bit restart-counter carve (max {MAX_RESTARTS}); "
+            f"split the schedule across engine epochs"
+        )
     limit = max_pack_tick(
-        n_proposers, lease_q4, max_delay_ticks, max_rate, clk_slack
+        n_proposers, lease_q4, max_delay_ticks, max_rate, clk_slack,
+        max_restarts,
     )
     if t_end > limit:
         raise ValueError(
             f"tick {t_end} exceeds the packed int32 layout's budget "
             f"({limit} ticks at P={n_proposers}, lease_q4={lease_q4}, "
-            f"max delay {max_delay_ticks}, max clock rate {max_rate}/4); "
+            f"max delay {max_delay_ticks}, max clock rate {max_rate}/4, "
+            f"max restarts {max_restarts}); "
             f"split the workload across engines or shorten the trace"
         )
 

@@ -67,7 +67,7 @@ Exact-match construction (why this works, not just approximately):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace as _dc_replace
 from typing import Optional
 
 import numpy as np
@@ -83,7 +83,13 @@ from ..core.messages import (
 )
 from ..sim.network import NetConfig
 from .scenario import PLANES, Scenario, _coerce_plane, _dim_sizes
-from .state import DEFAULT_RATE, NO_PROPOSER, guarded_lease_q4, lease_quarters
+from .state import (
+    DEFAULT_RATE,
+    MAX_RESTARTS,
+    NO_PROPOSER,
+    guarded_lease_q4,
+    lease_quarters,
+)
 
 #: drifted clock-rate steps the referee can replay exactly: a node at rate
 #: ``r`` quarter-ticks per tick places every timer landing at a fraction
@@ -129,6 +135,12 @@ class Trace:
     prop_rate: Optional[np.ndarray] = None  # [P] int
     acc_rate: Optional[np.ndarray] = None   # [A] int
     drift_eps: float = 0.0  # ε the proposers' drift guard assumes
+    #: crash/restart schedules (§2's diskless failure model): a 1 at
+    #: ``[t, a]`` blanks acceptor ``a`` at tick ``t`` and holds it deaf for
+    #: a maximal lease span on ITS clock; a 1 at ``[t, p]`` makes proposer
+    #: ``p`` forget everything but its (bumped) stable restart counter
+    acc_restarts: Optional[np.ndarray] = None   # [T, A] 0/1
+    prop_restarts: Optional[np.ndarray] = None  # [T, P] 0/1
 
     @property
     def n_ticks(self) -> int:
@@ -140,6 +152,14 @@ class Trace:
         return bool(
             (self.delay is not None and self.delay.any())
             or (self.drop is not None and self.drop.any())
+        )
+
+    @property
+    def restarted(self) -> bool:
+        """True if the trace carries any crash/restart event."""
+        return bool(
+            (self.acc_restarts is not None and self.acc_restarts.any())
+            or (self.prop_restarts is not None and self.prop_restarts.any())
         )
 
     @property
@@ -186,6 +206,8 @@ class Trace:
             drop=self.drop,
             prop_rate=prop_rate,
             acc_rate=acc_rate,
+            acc_restart=self.acc_restarts,
+            prop_restart=self.prop_restarts,
         )
 
     def link_planes(self) -> tuple[np.ndarray, np.ndarray]:
@@ -215,6 +237,7 @@ def random_trace(
     asymmetric: bool = False,
     round_ticks: Optional[int] = None,
     drift_eps: float = 0.0,
+    restarts: float = 0.0,
 ) -> Trace:
     """Randomized trace: per (tick, cell) at most one attempting proposer
     (the no-same-instant-race construction above); releases name a random
@@ -240,6 +263,14 @@ def random_trace(
     local quarter-ticks per tick (ε = 0.25 → {3, 4, 5}), capped at
     ``MAX_REFEREE_RATE`` so the event-sim replay stays exact, and the
     trace records ε for the proposers' §4 guard discount.
+
+    With ``restarts > 0`` the trace also carries crash/restart schedules
+    (the §2 diskless failure model): each acceptor crashes per tick with
+    that probability (blank + deaf for a maximal lease span, double
+    restarts inside one deaf window allowed — they extend it), and each
+    proposer with half of it, capped at ``state.MAX_RESTARTS`` total per
+    proposer so the restart-counter carve in the packed ballot encoding
+    never overflows (the engine refuses hotter schedules).
     """
     rng = np.random.default_rng(seed)
     prop_rate = acc_rate = None
@@ -288,11 +319,25 @@ def random_trace(
         space(releases, max_delay_ticks + 1)
     if p_drop > 0.0:
         drop = rng.random(link_shape) < p_drop
+    acc_restarts = prop_restarts = None
+    if restarts > 0.0:
+        acc_restarts = (
+            rng.random((n_ticks, n_acceptors)) < restarts
+        ).astype(np.int32)
+        prop_restarts = (
+            rng.random((n_ticks, n_proposers)) < restarts / 2
+        ).astype(np.int32)
+        # the ballot carve holds MAX_RESTARTS per proposer: keep the first
+        # MAX_RESTARTS draws, drop the rest (the engine refuses overflows)
+        for p in range(n_proposers):
+            hits = np.flatnonzero(prop_restarts[:, p])
+            prop_restarts[hits[MAX_RESTARTS:], p] = 0
     return Trace(
         n_cells, n_acceptors, n_proposers, lease_ticks,
         attempts, releases, acc_up,
         delay=delay, drop=drop, round_ticks=int(round_ticks),
         prop_rate=prop_rate, acc_rate=acc_rate, drift_eps=float(drift_eps),
+        acc_restarts=acc_restarts, prop_restarts=prop_restarts,
     )
 
 
@@ -313,7 +358,10 @@ def trace_from_scenario(
     Two scenario features have no event-sim pin and raise here:
     per-tick *varying* clock rates (``NodeClock`` holds one constant rate
     per node) and nonzero acc_stale/acc_equiv corruption planes (the
-    reference acceptors cannot be made Byzantine). Note the exactness
+    reference acceptors cannot be made Byzantine). Crash/restart planes DO
+    convert — ``LeaseNode.crash``/``restart`` pin them exactly — as long
+    as they are binary and stay under the per-proposer restart-counter
+    carve (checked below). Note the exactness
     caveat: a survivor that re-attempts a cell while that cell's previous
     round is still in flight overwrites the array plane's slot (loss the
     protocol tolerates), which the event sim does not reproduce — the
@@ -340,6 +388,29 @@ def trace_from_scenario(
             )
         rates.append(arr[0].copy())
     prop_rate, acc_rate = rates
+    # crash/restart planes convert faithfully — but only 0/1 schedules:
+    # a plane value > 1 would mean several restarts of one node inside a
+    # single tick, which the event-sim referee replays as one (its crash/
+    # restart calls are tick-granular), so refuse rather than mis-pin
+    restart_planes = []
+    for name in ("acc_restart", "prop_restart"):
+        arr = np.asarray(p[name], np.int32)
+        if arr.max(initial=0) > 1:
+            raise ValueError(
+                f"scenario {name} plane carries a value > 1 (several "
+                "restarts of one node in one tick); the event-sim referee "
+                "is tick-granular — binary restart schedules only"
+            )
+        restart_planes.append(arr.copy() if arr.any() else None)
+    acc_restarts, prop_restarts = restart_planes
+    if prop_restarts is not None and (
+        prop_restarts.sum(axis=0).max(initial=0) > MAX_RESTARTS
+    ):
+        raise ValueError(
+            f"scenario prop_restart plane restarts one proposer more than "
+            f"MAX_RESTARTS={MAX_RESTARTS} times; the packed ballot "
+            "restart-counter carve cannot replay it"
+        )
     return Trace(
         scenario.n_cells, scenario.n_acceptors, scenario.n_proposers,
         int(lease_ticks),
@@ -351,16 +422,22 @@ def trace_from_scenario(
         round_ticks=int(round_ticks),
         prop_rate=prop_rate, acc_rate=acc_rate,
         drift_eps=float(drift_eps),
+        acc_restarts=acc_restarts, prop_restarts=prop_restarts,
     )
 
 
-def replay_array(trace: Trace, *, backend: str = "jnp", netplane: Optional[bool] = None):
+def replay_array(
+    trace: Trace, *, backend: str = "jnp", netplane: Optional[bool] = None,
+    restart_guard: bool = True,
+):
     """Owners [T, N] + per-tick owner counts via the vectorized plane.
 
     ``netplane=None`` picks the model automatically: the delayed in-flight
-    plane iff the trace carries nonzero delay/drop planes, else the
-    synchronous zero-delay step (they agree bit-for-bit on zero-delay
+    plane iff the trace carries nonzero delay/drop/restart planes, else
+    the synchronous zero-delay step (they agree bit-for-bit on zero-delay
     traces; ``netplane=True`` forces the delayed path to prove it).
+    ``restart_guard=False`` disables the post-restart deaf window — the
+    chaos suite's negative control proving the §3 M-wait necessary.
     """
     from .engine import LeaseArrayEngine
 
@@ -372,6 +449,7 @@ def replay_array(trace: Trace, *, backend: str = "jnp", netplane: Optional[bool]
         round_ticks=trace.round_ticks,
         drift_eps=trace.drift_eps,
         backend=backend,
+        restart_guard=restart_guard,
     )
     return eng.run_trace(trace.scenario(), netplane=netplane)
 
@@ -385,8 +463,21 @@ def _pin_network_to_trace(
     ``t + delay[t, p, a]`` — phase legs at ``+ DELIVER_EPS``, §7 release
     legs at ``+ REL_EPS`` (the array tick delivers due discards before any
     phase message). Anything else (LearnHints) stays instantaneous and
-    loss-free."""
+    loss-free.
+
+    Crash/restart pin: an acceptor restart physically destroys that
+    node's un-sent state, which in the array plane blanks its in-flight
+    *response* slots. The network here holds responses outside the node,
+    so the drop policy replays the blanking: a response leg from acceptor
+    ``a`` sent at ``t_s``, due at ``t_d = t_s + delay``, is dropped iff a
+    restart of ``a`` falls in ``(t_s, t_d]`` (the blank at phase 1.5 of
+    tick ``t_r`` precedes the delivery phase, so ``t_r == t_d`` still
+    kills the leg; a leg minted the restart tick itself cannot exist —
+    the acceptor is already deaf). Request legs TOWARD a restarting
+    acceptor survive in the network and die at delivery iff it is still
+    deaf, exactly like ``acc_up`` downtime."""
     delay, dropm = trace.link_planes()
+    arst = trace.acc_restarts
     last = trace.n_ticks - 1
 
     def leg(src: str, dst: str) -> tuple[int, int]:
@@ -410,7 +501,16 @@ def _pin_network_to_trace(
         if not isinstance(msg, PLANE_MESSAGES):
             return False
         p, a = leg(src, dst)
-        return bool(dropm[tick_of(now), p, a])
+        t = tick_of(now)
+        if bool(dropm[t, p, a]):
+            return True
+        if arst is not None and isinstance(
+            msg, (PrepareResponse, ProposeResponse)
+        ):
+            t_d = t + int(delay[t, p, a])
+            if arst[t + 1:t_d + 1, a].any():
+                return True  # the sender restarts before this leg lands
+        return False
 
     net.set_delay_policy(delay_policy)
     net.set_drop_policy(drop_policy)
@@ -473,8 +573,31 @@ def replay_event_sim(trace: Trace, *, strict_monitor: bool = True) -> np.ndarray
         strict_monitor=strict_monitor,
         combined_roles=False,
     )
-    acc_addrs = [n.addr for n in cell.nodes if n.acceptor is not None]
-    props = {n.node_id: n.proposer for n in cell.nodes if n.proposer is not None}
+    acc_nodes = [n for n in cell.nodes if n.acceptor is not None]
+    acc_addrs = [n.addr for n in acc_nodes]
+    prop_nodes = {n.node_id: n for n in cell.nodes if n.proposer is not None}
+    props = {i: n.proposer for i, n in prop_nodes.items()}
+    # Crash/restart pins (§2/§3): an acceptor's deaf window is a maximal
+    # lease span on ITS clock — lease_q4 local quarters = lease_q4/r
+    # global seconds (LeaseNode.restart waits cfg.max_lease_time global
+    # seconds, so pin it per node; the fraction lease_q4/r mod 1 is either
+    # 0 — the rejoin fires at the tick boundary, before that tick's
+    # flips/attempts, the array's deaf-expiry-first order — or >= 1/r >=
+    # 1/MAX_REFEREE_RATE > TICK_EPS, landing the rejoin strictly after
+    # the tick's sampling, i.e. the NEXT tick processes requests, exactly
+    # the array's ceil(lease_q4/r) deaf span). Proposers have no deaf
+    # rule: they rejoin instantly (handled in the loop below).
+    lease_q4 = lease_quarters(trace.lease_ticks)
+    for a, node in enumerate(acc_nodes):
+        r = DEFAULT_RATE if trace.acc_rate is None else int(trace.acc_rate[a])
+        # lease_timespan is dead weight on a pure-acceptor node (spans ride
+        # in the Propose messages); zero it so the T < M validator accepts
+        # the exact quantized deaf wait, which can undercut the global T
+        node.cfg = _dc_replace(
+            cfg, max_lease_time=lease_q4 / r, lease_timespan=0.0
+        )
+    for node in prop_nodes.values():
+        node.skip_restart_wait = True
     # Pin the §4 guard to the array plane's quarter-tick quantization: the
     # proposer's own timer runs guard_q4 local quarters. The timer STARTS
     # at the majority-open delivery instant (tick + DELIVER_EPS), so its
@@ -501,14 +624,31 @@ def replay_event_sim(trace: Trace, *, strict_monitor: bool = True) -> np.ndarray
         {n.addr: n.node_id for n in cell.nodes if n.proposer is not None},
     )
     owners = np.full((trace.n_ticks, trace.n_cells), NO_PROPOSER, np.int32)
-    up_now = np.ones(trace.n_acceptors, bool)
 
     for t in range(trace.n_ticks):
-        cell.env.run_until(float(t))  # in-between expiries fire here
-        for a, addr in enumerate(acc_addrs):
-            if trace.acc_up[t, a] != up_now[a]:
-                cell.env.network.set_down(addr, not trace.acc_up[t, a])
-                up_now[a] = trace.acc_up[t, a]
+        cell.env.run_until(float(t))  # in-between expiries + rejoins fire here
+        for a, node in enumerate(acc_nodes):
+            # re-assert reachability every tick: a deaf-window rejoin may
+            # have just un-downed a node the plane still wants unreachable
+            cell.env.network.set_down(
+                node.addr, bool(not trace.acc_up[t, a]) or node.crashed
+            )
+        # crash/restart injection: after reachability flips, before
+        # releases/attempts — the array tick's phase 1.5
+        if trace.acc_restarts is not None:
+            for a in np.flatnonzero(trace.acc_restarts[t]):
+                node = acc_nodes[int(a)]
+                node.crash()
+                node.restart()  # blank + deaf; re-restarts extend the window
+        if trace.prop_restarts is not None:
+            for pid in np.flatnonzero(trace.prop_restarts[t]):
+                node = prop_nodes[int(pid)]
+                node.crash()  # belief dropped, timers cancelled, monitor told
+                node.restart()  # stable restart counter bumped, RAM gone
+                # instant rejoin: the attempt calls below are synchronous,
+                # so the zero-wait rejoin event must be flushed by hand
+                node.crashed = False
+                cell.env.network.set_down(node.addr, False)
         # releases strictly before attempts (same order as the array step)
         for n in np.flatnonzero(trace.releases[t] >= 0):
             props[int(trace.releases[t, n])].release(cell_resource(n))

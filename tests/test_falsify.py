@@ -22,7 +22,7 @@ from repro.lease_array.falsify import (
     shrink,
 )
 from repro.lease_array.falsify.search import replace_config
-from repro.lease_array.scenario import PLANES, CORRUPTION_PLANES
+from repro.lease_array.scenario import PLANES, CORRUPTION_PLANES, RESTART_PLANES
 from repro.lease_array.trace import trace_from_scenario, replay_event_sim
 
 BACKENDS = ["jnp", "pallas"]
@@ -36,12 +36,13 @@ def _cfg(**kw):
 
 def test_corpus_loads_and_names_species():
     corpus = load_corpus()
-    assert set(corpus) == {"tie", "ghost"}
+    assert set(corpus) == {"tie", "ghost", "restart"}
     assert corpus["tie"][1]["species"] == "guarded-expiry-tie"
     assert corpus["ghost"][1]["species"] == "ghost-lease"
+    assert corpus["restart"][1]["species"] == "deaf-window-boundary"
 
 
-@pytest.mark.parametrize("name", ["tie", "ghost"])
+@pytest.mark.parametrize("name", ["tie", "ghost", "restart"])
 def test_corpus_fixture_ranks_top_percentile(name):
     """The margin scorer must keep ranking each known species within the
     top percentile of a random batch evaluated under the same engine —
@@ -125,16 +126,45 @@ def test_mutation_closed_under_validation():
 
 
 def test_mutation_only_touches_enabled_planes():
-    """Honest mutation spaces never write the corruption planes."""
+    """Honest mutation spaces never write the corruption planes, and
+    restart-disabled spaces never write the crash/restart planes."""
     cfg = _cfg(pop_size=64, corrupt=False)
     space = cfg.mutation_space()
-    assert not set(space.op_names()) & {"flip_stale", "flip_equiv"}
+    assert not set(space.op_names()) & {
+        "flip_stale", "flip_equiv",
+        "crash_insert", "crash_shift", "deaf_boundary_nudge",
+    }
     planes = _seed_planes(cfg, seed=1)
     rng = np.random.default_rng(1)
     for _ in range(10):
         planes, _ = mutate(planes, rng, space)
-    for k in CORRUPTION_PLANES:
+    for k in CORRUPTION_PLANES + RESTART_PLANES:
         assert not planes[k].any()
+
+
+def test_restart_mutation_closed_under_carve():
+    """With the crash ops enabled, arbitrarily many mutation rounds keep
+    every member's per-proposer restart total inside the RESTART_SHIFT
+    carve (check_pack_budget's refusal boundary) and every plane legal."""
+    from repro.lease_array.state import MAX_RESTARTS
+
+    cfg = _cfg(pop_size=32, restarts=True)
+    space = cfg.mutation_space()
+    assert set(space.op_names()) >= {
+        "crash_insert", "crash_shift", "deaf_boundary_nudge",
+    }
+    rng = np.random.default_rng(11)
+    planes = _seed_planes(cfg, seed=11)
+    for _ in range(25):
+        planes, _ = mutate(planes, rng, space)
+    assert planes["prop_restart"].sum(axis=1).max() <= MAX_RESTARTS
+    assert set(np.unique(planes["acc_restart"])) <= {0, 1}
+    for b in range(cfg.pop_size):
+        sc = Scenario({k: np.asarray(v)[b] for k, v in planes.items()})
+        sc.validate_for(
+            n_cells=cfg.n_cells, n_acceptors=cfg.n_acceptors,
+            n_proposers=cfg.n_proposers,
+        )
 
 
 def test_mutants_flow_through_vmapped_sweep():

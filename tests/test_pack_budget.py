@@ -13,6 +13,7 @@ pytest.importorskip("jax")
 from repro.analysis.staticcheck import derived_max_pack_tick  # noqa: E402
 from repro.lease_array.state import (  # noqa: E402
     MAX_PACK_Q4,
+    MAX_RESTARTS,
     PACK_MASK,
     PACK_SHIFT,
     QUARTERS,
@@ -86,13 +87,20 @@ def test_slack_shifts_q4_bound_exactly():
 # -------------------------------------- hand bound vs the interval theorem
 @pytest.mark.parametrize("n_proposers", [2, 3, 8, 16])
 @pytest.mark.parametrize("max_rate", [QUARTERS, MAX_REFEREE_RATE])
-def test_hand_bound_agrees_with_interval_bound(n_proposers, max_rate):
+@pytest.mark.parametrize("max_restarts", [0, 1, MAX_RESTARTS])
+def test_hand_bound_agrees_with_interval_bound(
+    n_proposers, max_rate, max_restarts
+):
     """The static analyzer re-derives the same last-safe tick from the
     traced jaxpr with no knowledge of the formula — the hand bound is
-    neither optimistic (unsound) nor pessimistic (wasteful), to the tick."""
-    hand = max_pack_tick(n_proposers, LEASE_Q4, 0, max_rate, 0)
+    neither optimistic (unsound) nor pessimistic (wasteful), to the tick,
+    in both the honest encoding and the restart-counter carve
+    (docs/restarts.md)."""
+    hand = max_pack_tick(
+        n_proposers, LEASE_Q4, 0, max_rate, 0, max_restarts
+    )
     assert derived_max_pack_tick(
-        n_proposers, LEASE_Q4, 0, max_rate, 0
+        n_proposers, LEASE_Q4, 0, max_rate, 0, max_restarts=max_restarts
     ) == hand
 
 

@@ -1,0 +1,198 @@
+"""Restart edge cases (ISSUE 9, S3): the boundaries where the diskless
+restart rules could plausibly be off by one.
+
+Four families: a majority restart landing on the exact guarded-expiry
+tick of the live lease (with a rival attacking the same tick) must keep
+the referee and the array bit-identical on either side of the boundary;
+an acceptor restart mid-prepare forgets its promise and cancels its
+expiry timer (the blankness that makes the M-wait necessary, plus the
+stale-timer race); a double restart inside one M window extends the deaf
+window instead of rejoining at the FIRST deadline (the stale-rejoin
+guard in ``core.cell.LeaseNode``); and the packed restart-counter carve
+orders ballots exactly as the event engine's lexicographic ``Ballot``."""
+import numpy as np
+import pytest
+
+from repro.configs import CellConfig
+from repro.core import build_cell
+from repro.core.acceptor import Acceptor
+from repro.core.ballot import Ballot, BallotGenerator
+from repro.core.messages import (
+    Answer,
+    Lease,
+    PrepareRequest,
+    PrepareResponse,
+    Proposal,
+    ProposeRequest,
+    ProposeResponse,
+)
+from repro.lease_array.state import MAX_RESTARTS, ballot_of
+from repro.lease_array.trace import Trace, replay_array, replay_event_sim
+from repro.sim.network import NetConfig
+
+NET = NetConfig(delay_min=0.01, delay_max=0.02)
+CFG = CellConfig(n_acceptors=3, max_lease_time=60.0, lease_timespan=20.0)
+
+
+# ------------------------------------ restart ON the guarded-expiry tick
+
+@pytest.mark.parametrize("nudge", [-1, 0, 1])
+def test_restart_straddling_guarded_expiry_tick(nudge):
+    """Every acceptor restarts exactly at (and one tick either side of)
+    the tick the incumbent's guarded lease expires, while a rival
+    prepares on that same tick. Whichever side of the boundary the
+    restart lands on, the event-sim referee and the array plane must
+    agree bit-for-bit and §4 must hold — the deaf window and the guarded
+    expiry may NOT disagree about the edge tick."""
+    T, N, A, P, L = 14, 2, 3, 3, 3
+    t_edge = L + 1 + nudge  # first tick past the guarded belief, +/- 1
+    att = np.full((T, N), -1, np.int32)
+    att[0, :] = 0
+    att[t_edge, :] = 1
+    rst = np.zeros((T, A), np.int32)
+    rst[t_edge, :] = 1
+    tr = Trace(
+        N, A, P, L, att, np.full((T, N), -1, np.int32),
+        np.ones((T, A), bool), acc_restarts=rst,
+    )
+    ref = replay_event_sim(tr)
+    ow, cn = replay_array(tr)
+    assert np.array_equal(ref, np.asarray(ow)), nudge
+    assert int(np.max(np.asarray(cn))) <= 1, nudge
+
+
+# --------------------------------------------------- restart mid-prepare
+
+class _Timer:
+    def __init__(self):
+        self.cancelled = False
+
+    def cancel(self):
+        self.cancelled = True
+
+
+def _bare_acceptor():
+    """An Acceptor on hand-cranked plumbing: timers are inert handles we
+    can fire by hand, sends are recorded."""
+    timers, sent = [], []
+
+    def set_timer(delay, fn):
+        h = _Timer()
+        timers.append((h, delay, fn))
+        return h
+
+    acc = Acceptor(0, set_timer=set_timer, send=lambda dst, m: sent.append(m))
+    return acc, timers, sent
+
+
+def test_restart_mid_prepare_forgets_the_promise():
+    """A restart between promise and propose blanks the promise: the
+    acceptor then accepts a STRICTLY LOWER ballot it had already promised
+    away — exactly the §3 hazard, which only the node-level M-wait (not
+    the acceptor) defends against."""
+    acc, _, sent = _bare_acceptor()
+    hi, lo = Ballot(5, 0, 1), Ballot(2, 0, 0)
+    acc.on_prepare_request(PrepareRequest("R", hi), "p1")
+    assert sent[-1] == PrepareResponse("R", hi, Answer.ACCEPT, None)
+    acc.on_prepare_request(PrepareRequest("R", lo), "p0")
+    assert sent[-1].answer == Answer.REJECT  # the promise is doing its job
+
+    acc.restart()
+    assert acc._res == {}  # diskless: nothing survives
+
+    acc.on_prepare_request(PrepareRequest("R", lo), "p0")
+    assert sent[-1] == PrepareResponse("R", lo, Answer.ACCEPT, None)
+
+
+def test_restart_mid_lease_cancels_timer_and_stale_fire_is_harmless():
+    """Accepting a proposal arms the expiry timer; a restart must cancel
+    it AND survive the race where the simulator already popped the
+    callback — a stale ``_on_timeout`` after the restart may not raise or
+    resurrect state."""
+    acc, timers, sent = _bare_acceptor()
+    b = Ballot(3, 0, 2)
+    prop = Proposal(b, Lease(2, 20.0))
+    acc.on_propose_request(ProposeRequest("R", b, prop), "p2")
+    assert sent[-1] == ProposeResponse("R", b, Answer.ACCEPT)
+    (handle, delay, fire), = timers
+    assert delay == 20.0 and not handle.cancelled
+    assert acc._res["R"].accepted is prop
+
+    acc.restart()
+    assert handle.cancelled
+    fire()  # the popped-but-cancelled race
+    assert acc._res.get("R") is None or acc._res["R"].accepted is None
+
+
+# ------------------------------------- double restart inside one M window
+
+def test_double_restart_extends_the_deaf_window():
+    """Two crash/restarts inside one M window: the node must stay deaf
+    through the FIRST rejoin deadline (the stale closure fires and must
+    yield to the extended window) and rejoin only at the second."""
+    cell = build_cell(CFG, n_proposers=4, seed=7, net=NET,
+                      strict_monitor=False)
+    node = cell.nodes[0]
+    cell.env.run_until(1.0)
+    node.crash()
+    cell.env.run_until(1.5)
+    node.restart()
+    first_deadline = node.rejoin_deadline
+    assert first_deadline == pytest.approx(1.5 + CFG.max_lease_time)
+    cell.env.run_until(5.0)
+    node.crash()  # second crash while still deaf
+    cell.env.run_until(5.5)
+    node.restart()
+    assert node.rejoin_deadline == pytest.approx(5.5 + CFG.max_lease_time)
+    cell.env.run_until(first_deadline + 0.25)
+    assert node.crashed  # the FIRST rejoin closure fired stale: still deaf
+    cell.env.run_until(node.rejoin_deadline + 0.25)
+    assert not node.crashed
+
+
+def test_double_restart_bumps_the_stable_counter_twice():
+    """The proposer role's restart counter lives on stable storage and
+    increments once per restart — two restarts, two bumps, and the
+    post-restart generator starts a fresh run under the newest counter."""
+    cell = build_cell(CFG, n_proposers=4, seed=7, net=NET,
+                      strict_monitor=False)
+    node = cell.nodes[0]
+    assert node.proposer.ballots.restart == 0
+    for t in (1.0, 2.0):
+        cell.env.run_until(t)
+        node.crash()
+        cell.env.run_until(t + 0.5)
+        node.restart()
+    assert node.proposer.ballots.restart == 2
+    assert node.proposer.ballots.run == 0
+    stored = cell.env.stable.load(node.addr)
+    assert stored["restart_counter"] == 2
+
+
+# --------------------------------------- restart-counter ballot ordering
+
+def test_ballot_generator_never_repeats_across_restart():
+    gen = BallotGenerator(proposer_id=1, restart_counter=0)
+    before = {gen.next() for _ in range(5)}
+    gen.restart, gen.run = 1, 0  # what LeaseNode.restart does
+    after = {gen.next() for _ in range(5)}
+    assert not before & after  # globally unique across the restart
+
+
+def test_packed_carve_orders_like_the_event_ballot():
+    """``state.ballot_of(t, p, P, rc)`` must order ballots EXACTLY as the
+    event engine's lexicographic ``Ballot(run, restart, proposer)`` on
+    the full (t, rc, p) grid — the numeric carve is the same total order,
+    so array-plane arbitration and referee arbitration can never split a
+    tie differently. All values distinct (global uniqueness)."""
+    P = 4
+    grid = [
+        (ballot_of(t, p, P, restart_counter=rc), Ballot(t + 1, rc, p))
+        for t in range(6)
+        for rc in range(MAX_RESTARTS + 1)
+        for p in range(P)
+    ]
+    nums = [n for n, _ in grid]
+    assert len(set(nums)) == len(nums)
+    by_num = [b for _, b in sorted(grid, key=lambda kv: kv[0])]
+    assert by_num == sorted(by_num)
