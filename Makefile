@@ -2,7 +2,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-all test-fast check falsify-smoke bench-smoke bench-delay bench-drift bench-json bench-compare bench dev-deps
+.PHONY: test test-all test-fast check falsify-smoke bench-smoke bench-delay bench-drift bench-renew bench-json bench-compare bench dev-deps
 
 test:  ## fast default: skip the long @slow differential replays
 	python -m pytest -x -q -m "not slow"
@@ -26,6 +26,8 @@ falsify-smoke:  ## seeded fixed-budget falsification contract (docs/falsificatio
 	python -m repro.lease_array.falsify --mode honest --seed 7 --pop 128 --generations 6 --expect none --out falsify_honest.json
 	python -m repro.lease_array.falsify --mode corrupt --restarts --seed 7 --pop 128 --generations 6 --expect violation --out falsify_corrupt_restart.json
 	python -m repro.lease_array.falsify --mode honest --restarts --seed 7 --pop 128 --generations 6 --expect none --out falsify_honest_restart.json
+	python -m repro.lease_array.falsify --mode corrupt --extends --seed 0 --pop 128 --generations 6 --expect violation --out falsify_corrupt_extend.json
+	python -m repro.lease_array.falsify --mode honest --extends --seed 0 --pop 128 --generations 6 --expect none --out falsify_honest_extend.json
 
 bench-smoke:  ## quick end-to-end signal: the vectorized lease-plane bench
 	python -c "from benchmarks.bench_lease_array import run; \
@@ -38,6 +40,10 @@ bench-delay:  ## netplane smoke: delay-depth sweep of the in-flight plane
 bench-drift:  ## drifted-clock smoke: the eps=0.25 netplane scan row
 	python -c "from benchmarks.bench_lease_array import run_drift; \
 	  [print(f'{n},{u:.2f},\"{d}\"') for n, u, d in run_drift()]"
+
+bench-renew:  ## §6 renewal storm (quiescence-skip A/B, owned_frac >= 0.95 at delay<=4) + deposed-owner failover handoff
+	python -c "from benchmarks.bench_lease_array import run_renew; \
+	  [print(f'{n},{u:.2f},\"{d}\"') for n, u, d in run_renew()]"
 
 bench-json:  ## all lease-plane modes -> machine-readable BENCH_lease_array.json
 	python -m benchmarks.bench_lease_array

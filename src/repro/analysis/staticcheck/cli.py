@@ -71,11 +71,13 @@ def _check_intervals() -> list[Finding]:
 
 
 def _check_purity() -> list[Finding]:
-    from .purity import check_tick_cores, check_window_kernels
+    from .purity import check_honest_strip, check_tick_cores, check_window_kernels
 
-    return check_tick_cores(
-        _P, _A, _LEASE_Q4
-    ) + check_window_kernels(n_cells=1024, n_ticks=32)
+    return (
+        check_tick_cores(_P, _A, _LEASE_Q4)
+        + check_window_kernels(n_cells=1024, n_ticks=32)
+        + check_honest_strip()
+    )
 
 
 def _check_launch() -> list[Finding]:

@@ -33,7 +33,6 @@ from .findings import Finding
 SHIM_ALLOWLIST = frozenset({
     "src/repro/lease_array/ops.py",
     "src/repro/lease_array/__init__.py",
-    "tests/test_scenario.py",
     "tests/test_deprecations.py",
 })
 SHIM_NAMES = frozenset({"lease_plane_step", "lease_plane_step_delayed"})

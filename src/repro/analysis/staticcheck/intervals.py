@@ -118,6 +118,7 @@ class TickConfig:
     #: restart-carve encoding (state.RESTART_SHIFT): the highest per-
     #: proposer restart counter any tick can carry
     max_restarts: int = 0
+    extend: bool = False  # thread the §6 extends plane
 
     @property
     def majority(self) -> int:
@@ -173,6 +174,9 @@ _RESTART_TAIL = (
     ("acc_restart", "bool"), ("acc_deaf", "bool"),
     ("prop_restart", "rc"), ("prop_rc", "rc"),
 )
+#: the §6 extend variant: one extra [1, bn] proposer-id plane (the owner
+#: extending its own live lease) merged into the attempt stream
+_EXTEND_TAIL = (("extend", "pid"),)
 
 
 @functools.lru_cache(maxsize=None)
@@ -189,6 +193,7 @@ def trace_tick_core(
     block_n: int = 8,
     corrupt: bool = False,
     restart: bool = False,
+    extend: bool = False,
 ):
     """``jax.make_jaxpr`` of one tick core with the protocol constants
     closed over, on tiny block shapes (intervals are shape-oblivious
@@ -227,6 +232,8 @@ def trace_tick_core(
         lease, net = args[:4], args[4:16]
         rest = list(args[16:])
         adv = {}
+        if extend:
+            adv["extend"] = rest.pop()
         if restart:
             arst, deaf, prst, prc = rest[-4:]
             rest = rest[:-4]
@@ -252,6 +259,8 @@ def trace_tick_core(
             sds((A, 1), i32), sds((A, 1), i32),
             sds((P, 1), i32), sds((P, 1), i32),
         ]
+    if extend:
+        extra = extra + [sds((1, bn), i32)]
     return jax.make_jaxpr(fn)(
         *lease_shapes, *net_shapes, *common, sds((P, A), i32), *extra
     )
@@ -518,7 +527,7 @@ def _core_and_layout(cfg: TickConfig, legs: str):
     closed = trace_tick_core(
         cfg.n_proposers, cfg.n_acceptors, cfg.eff_lease_q4, cfg.round_q4,
         cfg.eff_guard_q4, cfg.majority, sync=cfg.sync, legs=legs,
-        corrupt=cfg.corrupt, restart=cfg.restart,
+        corrupt=cfg.corrupt, restart=cfg.restart, extend=cfg.extend,
     )
     if cfg.sync:
         layout = _SYNC_ARGS
@@ -526,6 +535,8 @@ def _core_and_layout(cfg: TickConfig, legs: str):
         layout = _CORRUPT_ARGS if cfg.corrupt else _DELAYED_ARGS
         if cfg.restart:
             layout = layout + _RESTART_TAIL
+        if cfg.extend:
+            layout = layout + _EXTEND_TAIL
     return closed, layout
 
 

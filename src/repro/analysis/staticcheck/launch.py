@@ -211,4 +211,10 @@ def check_window_launches(
         delayed=True, n_acceptors=A, n_proposers=P,
         what="lease_window_delayed_pallas",
     )
+    findings += check_launch_plan(
+        delayed_launch_plan(A, n_cells, P, n_ticks,
+                            block_n=block_n, window=window, extend=True),
+        delayed=True, n_acceptors=A, n_proposers=P,
+        what="lease_window_delayed_pallas[extend]",
+    )
     return findings

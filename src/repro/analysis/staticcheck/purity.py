@@ -136,6 +136,15 @@ def check_tick_cores(
         trace_tick_core(*args, sync=False, legs="gather", corrupt=True),
         pallas_path=False, what="delayed_tick_math[legs_gather,corrupt]",
     )
+    # the §6 extend variant runs the same backends: same rules
+    findings += check_jaxpr_purity(
+        trace_tick_core(*args, sync=False, legs="select", extend=True),
+        pallas_path=True, what="delayed_tick_math[legs_select,extend]",
+    )
+    findings += check_jaxpr_purity(
+        trace_tick_core(*args, sync=False, legs="gather", extend=True),
+        pallas_path=False, what="delayed_tick_math[legs_gather,extend]",
+    )
     return findings
 
 
@@ -197,6 +206,14 @@ def check_window_kernels(
     )(packed, net, t0, *planes.values(), sds((T, P, A), i32),
       sds((T, A), i32), sds((T, A), i32))
 
+    extend_jaxpr = jax.make_jaxpr(
+        lambda p, n, t, a, r, u, pc, ac, lk, ex:
+        lease_window_delayed_pallas(
+            p, n, t, a, r, u, pc, ac, lk, round_q4=4, extends=ex, **kw
+        )
+    )(packed, net, t0, *planes.values(), sds((T, P, A), i32),
+      sds((T, N), i32))
+
     findings = check_jaxpr_purity(
         sync_jaxpr, pallas_path=True, what="lease_window_sync_pallas"
     )
@@ -207,4 +224,70 @@ def check_window_kernels(
         corrupt_jaxpr, pallas_path=True,
         what="lease_window_delayed_pallas[corrupt]",
     )
+    findings += check_jaxpr_purity(
+        extend_jaxpr, pallas_path=True,
+        what="lease_window_delayed_pallas[extend]",
+    )
+    return findings
+
+
+def check_honest_strip(
+    n_cells: int = 16,
+    n_acceptors: int = 3,
+    n_proposers: int = 4,
+    n_ticks: int = 4,
+) -> list[Finding]:
+    """The all-default ``extends`` plane (and the corruption/restart
+    planes with it) must leave the honest dispatch jaxpr BYTE-IDENTICAL
+    to one that never mentioned the plane: ``ops.strip_default_planes``
+    is the host-side gate ``lease_window_scan`` applies before its jit,
+    so honest replays never compile (or cache-miss on) the fault
+    variants. Traces the real impl both ways and diffs the jaxprs."""
+    import jax
+    import numpy as np
+
+    from ...lease_array import ops
+    from ...lease_array.netplane import init_netplane
+    from ...lease_array.scenario import PLANES, Scenario
+    from ...lease_array.state import init_state
+
+    A, P, N, T = n_acceptors, n_proposers, n_cells, n_ticks
+    honest = Scenario.build(
+        T, n_cells=N, n_acceptors=A, n_proposers=P,
+        delay=np.ones((T, A), np.int32),  # delayed model: extends' home
+    )
+    planes = dict(honest.planes)
+    assert (np.asarray(planes["extends"]) == PLANES["extends"].default).all()
+    without = ops.strip_default_planes(
+        {k: v for k, v in planes.items() if k != "extends"}
+    )
+    stripped = ops.strip_default_planes(planes)
+
+    state = init_state(N, A, P)
+    net = init_netplane(N, A)
+    kw = dict(majority=A // 2 + 1, lease_q4=13, round_q4=8, guard_q4=13,
+              backend="jnp", sync=False, block_n=8, window=2,
+              restart_guard=True, skip_stable=True)
+
+    def jaxpr_of(pl):
+        return str(jax.make_jaxpr(
+            lambda s, n_, t, p: ops._window_scan_impl(
+                s, n_, t, None, None, p, **kw
+            )
+        )(state, net, np.int32(0), pl))
+
+    findings: list[Finding] = []
+    if "extends" in stripped:
+        findings.append(Finding(
+            "purity", "honest-strip", "ops.strip_default_planes",
+            "an all-default extends plane survived the host-side strip; "
+            "every honest replay would compile the extend variant",
+        ))
+    elif jaxpr_of(stripped) != jaxpr_of(without):
+        findings.append(Finding(
+            "purity", "honest-strip", "ops._window_scan_impl",
+            "the honest dispatch jaxpr with a stripped all-default "
+            "extends plane differs from one traced without the plane — "
+            "the strip no longer restores the honest computation",
+        ))
     return findings

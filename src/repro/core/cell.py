@@ -72,6 +72,7 @@ class LeaseNode:
                 restart_counter=restart,
                 monitor=monitor,
                 hint_addrs=[a for a in (hint_addrs or []) if a != self.addr],
+                local_now=lambda: env.local_now(self.addr),
             )
 
     # ---------------------------------------------------------------- faults

@@ -51,6 +51,7 @@ class _Round:
     highest_seen: Optional[Ballot] = None
     lease_timer: object = None
     round_timer: object = None
+    lease_deadline: Optional[float] = None  # local clock, guarded (§3 step 3)
 
 
 @dataclass
@@ -62,6 +63,7 @@ class _ResState:
     owner: bool = False
     owner_round_id: int = -1
     last_success_ballot: Optional[Ballot] = None
+    owner_deadline: Optional[float] = None  # local clock, guarded expiry
     renew_timer: object = None
     retry_timer: object = None
 
@@ -79,6 +81,7 @@ class Proposer:
         restart_counter: int = 0,
         monitor=None,
         hint_addrs: Optional[list[str]] = None,
+        local_now: Optional[Callable[[], float]] = None,
     ) -> None:
         self.node_id = node_id
         self.acceptors = list(acceptor_addrs)
@@ -86,6 +89,9 @@ class Proposer:
         self._set_timer = set_timer
         self._send = send
         self._backoff = random_backoff
+        # optional LOCAL clock read (same drifted clock the timers run on);
+        # used only to keep failed-extend retries inside the lease window
+        self._local_now = local_now
         self.ballots = BallotGenerator(node_id, restart_counter)
         self.monitor = monitor
         self.hint_addrs = hint_addrs or []
@@ -178,6 +184,8 @@ class Proposer:
         # majority open: start OUR timer first, then broadcast the proposal
         rnd.phase = PROPOSING
         t_own = self._guarded_timespan(st.timespan)
+        if self._local_now is not None:
+            rnd.lease_deadline = self._local_now() + t_own
         rnd.lease_timer = self._set_timer(
             t_own, lambda r=msg.resource, i=rnd.round_id: self._on_lease_timeout(r, i)
         )
@@ -202,6 +210,7 @@ class Proposer:
         self._cancel(rnd, "round_timer")
         st.owner_round_id = rnd.round_id
         st.last_success_ballot = rnd.ballot
+        st.owner_deadline = rnd.lease_deadline
         was_owner = st.owner
         if not was_owner:
             self._set_owner(msg.resource, st, True)
@@ -222,6 +231,7 @@ class Proposer:
         st = self._state(resource)
         if st.owner and st.owner_round_id == round_id:
             self._set_owner(resource, st, False)
+            st.owner_deadline = None
             if st.want:
                 self._schedule_retry(resource)
         elif (
@@ -264,6 +274,12 @@ class Proposer:
         if fast:
             lo, hi = lo / 4, hi / 4
         delay = self._backoff(lo, hi)
+        if fast and self._local_now is not None and st.owner_deadline is not None:
+            # a failed-extend retry landing after the guarded expiry turns
+            # the extend into a cold acquire and a handoff; retry no later
+            # than halfway into what's left of our own lease window
+            remaining = st.owner_deadline - self._local_now()
+            delay = min(delay, max(remaining / 2, 0.0))
         st.retry_timer = self._set_timer(delay, lambda r=resource: self._retry(r))
 
     def _retry(self, resource: str) -> None:

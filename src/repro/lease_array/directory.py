@@ -8,10 +8,19 @@ count, stall (straggler: leases silently expire), drain (graceful §7
 release), elastic retargeting, coverage/owner queries.
 
 Policy per tick (host-side numpy; the protocol itself runs in the array):
-  - active owners whose lease is inside the renew margin attempt an extend,
+  - active owners whose lease is inside the renew margin extend in-flight
+    (§6, the ``extends`` plane: a fresh round gated on the live belief),
   - draining or over-target workers release their extra shards,
   - unowned cells are attempted by workers with a deficit, spread
     round-robin with a per-worker stride to reduce collisions.
+
+The renew margin must clear the worst-case round trip: an extend is a
+full fresh round (§6) — prepares out, promises back, proposes out,
+accepts back — so its accepts land up to ``4·max_delay + 1`` ticks after
+issue. A margin below that (the old ``lease_ticks // 2`` default ignored
+link delay entirely; an earlier fix used the half-trip ``2·max_delay+1``)
+lets every lease lapse mid-renewal — the renewal-collapse geometry the
+regression test pins (owned_frac 0.05 instead of ≥ 0.95).
 """
 from __future__ import annotations
 
@@ -42,21 +51,51 @@ class LeaseArrayDirectory:
         renew_margin: int | None = None,
         max_workers: int = 32,
         backend: str = "jnp",
+        max_delay_ticks: int = 0,
     ) -> None:
         self.n_shards = n_shards
         self.max_workers = max_workers
-        self.renew_margin = (
-            renew_margin if renew_margin is not None else max(lease_ticks // 2, 1)
-        )
+        self.max_delay_ticks = int(max_delay_ticks)
+        # an extend is a FULL fresh round (§6): prepares + promises +
+        # proposes + accepts, up to 4·max_delay + 1 ticks end to end.
+        # Renewals scheduled any later than that before expiry can NEVER
+        # land in time (the half-trip 2·max_delay+1 looks plausible but
+        # only covers one leg pair — it still collapses at delay ≥ 2).
+        rtt = 4 * self.max_delay_ticks + 1
+        if rtt >= lease_ticks:
+            raise ValueError(
+                f"a {lease_ticks}-tick lease cannot be renewed over links "
+                f"with up to {max_delay_ticks}-tick legs (extend round "
+                f"{rtt} >= lease); lengthen the lease or shorten the links"
+            )
+        if renew_margin is None:
+            renew_margin = max(lease_ticks // 2, rtt, 1)
+        elif renew_margin < rtt:
+            raise ValueError(
+                f"renew_margin={renew_margin} is below the worst-case "
+                f"extend round ({rtt} ticks at max_delay_ticks="
+                f"{max_delay_ticks}): every renewal would start too late "
+                f"to land before expiry"
+            )
+        self.renew_margin = renew_margin
         self.engine = LeaseArrayEngine(
             n_shards,
             n_acceptors=n_acceptors,
             n_proposers=max_workers,
             lease_ticks=lease_ticks,
             backend=backend,
+            # the abandon deadline must outlive a full prepare+propose
+            # round over the slowest links, or no round ever completes
+            round_ticks=4 * self.max_delay_ticks + 1,
         )
         self.workers: dict[int, ArrayWorker] = {}
         self._owners = np.full(n_shards, NO_PROPOSER, np.int32)
+        # per-cell pacing: an attempt/extend OVERWRITES any open round
+        # (netplane phase 3), so re-issuing every tick livelocks at
+        # delay ≥ 1 — today's collapse. Hold off a full prepare+propose
+        # round trip (4·delay + 1 ticks) before re-driving a cell.
+        self._round_trip = rtt
+        self._cooldown = np.zeros(n_shards, np.int32)
 
     # ------------------------------------------------------------------ API
     def add_worker(self, worker_id: int, target: int) -> ArrayWorker:
@@ -94,7 +133,9 @@ class LeaseArrayDirectory:
     def _tick_once(self) -> np.ndarray:
         attempt = np.full(self.n_shards, NO_PROPOSER, np.int32)
         release = np.full(self.n_shards, NO_PROPOSER, np.int32)
+        extend = np.full(self.n_shards, NO_PROPOSER, np.int32)
         owners = self._owners
+        self._cooldown = np.maximum(self._cooldown - 1, 0)
         ticks_left = self.engine.ticks_left()
         by_slot = {w.slot: w for w in self.workers.values()}
         counts = np.bincount(
@@ -113,14 +154,18 @@ class LeaseArrayDirectory:
             if owned < w.target:
                 deficits[w.slot] = w.target - owned
 
-        # owners inside the renew margin extend (stalled/draining don't)
+        # owners inside the renew margin extend in-flight (§6: the extends
+        # plane re-proposes under the live belief; stalled/draining don't)
         for cell in np.flatnonzero(
-            (owners >= 0) & (ticks_left <= self.renew_margin)
+            (owners >= 0)
+            & (ticks_left <= self.renew_margin)
+            & (self._cooldown == 0)
         ):
             w = by_slot.get(int(owners[cell]))
             if w is not None and not w.stalled and not w.draining:
                 if release[cell] != w.slot:  # not shedding this one
-                    attempt[cell] = w.slot
+                    extend[cell] = w.slot
+                    self._cooldown[cell] = self._round_trip
 
         # spread unowned cells over deficit workers round-robin (vectorized:
         # the per-cell Python loop would rival the batched step itself)
@@ -129,13 +174,20 @@ class LeaseArrayDirectory:
             wants = np.array([deficits[int(s)] for s in slots])
             rank = np.concatenate([np.arange(w) for w in wants])
             seq = np.repeat(slots, wants)[np.argsort(rank, kind="stable")]
-            free = np.flatnonzero((owners < 0) & (attempt < 0))
+            free = np.flatnonzero(
+                (owners < 0) & (attempt < 0) & (self._cooldown == 0)
+            )
             k = min(len(seq), len(free))
             attempt[free[:k]] = seq[:k]
+            self._cooldown[free[:k]] = self._round_trip
+        planes = dict(attempts=attempt, releases=release, extends=extend)
+        if self.max_delay_ticks:
+            planes["delay"] = np.full(
+                self.engine.n_acceptors, self.max_delay_ticks, np.int32
+            )
         tick = make_tick(
             n_cells=self.engine.n_cells, n_acceptors=self.engine.n_acceptors,
-            n_proposers=self.engine.n_proposers,
-            attempts=attempt, releases=release,
+            n_proposers=self.engine.n_proposers, **planes,
         )
         return self.engine.step(tick).astype(np.int32)
 

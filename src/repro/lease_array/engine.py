@@ -53,6 +53,8 @@ from .ops import _margin_scan_impl, _window_scan_impl, lease_plane_tick
 from .ref import owner_row
 from .scenario import (
     CORRUPTION_PLANES,
+    EXTEND_PLANES,
+    PLANES,
     RESTART_PLANES,
     Scenario,
     TickInputs,
@@ -164,9 +166,10 @@ def _scenario_scanner(
     jitted = jax.jit(scan_fn)
 
     def strip_and_scan(state, net, t0, clk0, planes):
-        # all-zero corruption/restart planes are the honest path: drop
-        # them host-side (same contract as ops.lease_window_scan) so the
-        # sync step never sees them and the honest trace stays corrupt-free
+        # all-default corruption/restart/extends planes are the honest
+        # path: drop them host-side (same contract as
+        # ops.lease_window_scan) so the sync step never sees them and the
+        # honest trace stays fault-free
         for k in RESTART_PLANES:
             v = planes.get(k)
             if (
@@ -181,9 +184,9 @@ def _scenario_scanner(
         planes = {
             k: v for k, v in planes.items()
             if not (
-                k in CORRUPTION_PLANES + RESTART_PLANES
+                k in CORRUPTION_PLANES + RESTART_PLANES + EXTEND_PLANES
                 and not isinstance(v, jax.core.Tracer)
-                and not np.asarray(v).any()
+                and (np.asarray(v) == PLANES[k].default).all()
             )
         }
         return jitted(state, net, t0, clk0, planes)
@@ -235,7 +238,7 @@ def _cell_sharding_specs(planes_keys):
 def _trace_fn(
     majority: int, lease_q4: int, round_q4: int, guard_q4: int, backend: str,
     sync: bool, block_n: int, window: int, n_devices: int, planes_keys: tuple,
-    restart_guard: bool = True,
+    restart_guard: bool = True, skip_stable: bool = True,
 ):
     """The fused scenario replay, jitted; with >1 device the cell axis is
     shard_map-ed across a 1-D device mesh (cells are independent — the
@@ -247,6 +250,7 @@ def _trace_fn(
             majority=majority, lease_q4=lease_q4, round_q4=round_q4,
             guard_q4=guard_q4, backend=backend, sync=sync, block_n=block_n,
             window=window, restart_guard=restart_guard,
+            skip_stable=skip_stable,
         )
 
     if n_devices > 1:
@@ -266,7 +270,7 @@ def _trace_fn(
 def _sweep_fn(
     majority: int, lease_q4: int, round_q4: int, guard_q4: int, backend: str,
     sync: bool, block_n: int, window: int, collect: str, n_devices: int,
-    restart_guard: bool = True,
+    restart_guard: bool = True, skip_stable: bool = True,
 ):
     """One-dispatch batched scenario replay: vmap over the stacked planes
     (state broadcast), reductions inside the jit so a summary sweep never
@@ -293,6 +297,7 @@ def _sweep_fn(
                 majority=majority, lease_q4=lease_q4, round_q4=round_q4,
                 guard_q4=guard_q4, backend=backend, sync=sync,
                 block_n=block_n, window=window, restart_guard=restart_guard,
+                skip_stable=skip_stable,
             )
         out = {
             "max_owner_count": counts.max(),
@@ -335,6 +340,7 @@ class LeaseArrayEngine:
         backend: str = "jnp",
         window: int = 16,
         restart_guard: bool = True,
+        skip_stable: bool = True,
     ) -> None:
         if n_acceptors < 1 or n_proposers < 1:
             raise ValueError("need at least one acceptor and one proposer")
@@ -368,6 +374,10 @@ class LeaseArrayEngine:
         #: negative control: restarted acceptors answer immediately with
         #: blank state, which provably breaks §4 under crash schedules
         self.restart_guard = bool(restart_guard)
+        #: quiescence fast path in the Pallas window kernels: stable
+        #: (block, window) pairs collapse to owner-row broadcasts.
+        #: Bit-identical results either way; False is the A/B bench control
+        self.skip_stable = bool(skip_stable)
         # restart history carried across dispatches (mirrors the clocks):
         # per-proposer restart counters and each acceptor's deaf-until
         # reading on ITS local clock. flips _restart_active once any
@@ -576,6 +586,7 @@ class LeaseArrayEngine:
                 or np.asarray(tick.drop).any()
                 or tick.corrupted
                 or tick.restarted
+                or tick.extended
             ):
                 self._netplane_active = True
         self._check_pack_budget(
@@ -599,6 +610,7 @@ class LeaseArrayEngine:
             clk0=self._clk0(), rst0=self._rst0(),
             restart_guard=self.restart_guard, backend=self.backend,
             sync=not self._netplane_active, window=self.window,
+            skip_stable=self.skip_stable,
         )
         self.t += 1
         if self._restart_active:
@@ -679,7 +691,9 @@ class LeaseArrayEngine:
         T = scenario.n_ticks
         restarted = scenario.restarted
         sync = self._pick_model(
-            netplane, scenario.delayed or scenario.corrupted or restarted
+            netplane,
+            scenario.delayed or scenario.corrupted or restarted
+            or scenario.extended,
         )
         if T == 0:
             empty = np.zeros((0, self.n_cells), np.int32)
@@ -694,15 +708,15 @@ class LeaseArrayEngine:
         self._static_bound_check(self.t + T, dmax, rmax, mr)
         if restarted:
             self._restart_active = True  # pins the restart ballot encoding
-        # all-zero corruption/restart planes stay host-side: the honest
-        # replay never compiles the faulted tick variants (bit-identical
-        # jaxpr, zero extra uploads); once restart mode is pinned, rst0
-        # (not the planes) keeps it on across quiet dispatches
+        # all-default corruption/restart/extends planes stay host-side:
+        # the honest replay never compiles the faulted tick variants
+        # (bit-identical jaxpr, zero extra uploads); once restart mode is
+        # pinned, rst0 (not the planes) keeps it on across quiet dispatches
         planes = {
             k: jnp.asarray(v) for k, v in scenario.planes.items()
             if not (
-                k in CORRUPTION_PLANES + RESTART_PLANES
-                and not np.asarray(v).any()
+                k in CORRUPTION_PLANES + RESTART_PLANES + EXTEND_PLANES
+                and (np.asarray(v) == PLANES[k].default).all()
             )
         }
         n_dev = len(jax.devices())
@@ -711,7 +725,7 @@ class LeaseArrayEngine:
         fn = _trace_fn(
             self.majority, self.lease_q4, self.round_q4, self.guard_q4,
             self.backend, sync, 512, self.window, n_dev, tuple(planes),
-            self.restart_guard,
+            self.restart_guard, self.skip_stable,
         )
         self.state, self.net, owners, counts = fn(
             self.state, self.net, jnp.int32(self.t), self._clk0(),
@@ -811,6 +825,18 @@ class LeaseArrayEngine:
                 restarted = True
             else:
                 drop_keys.append(k)
+        # all-sentinel extends planes drop the same way (their default is
+        # NO_PROPOSER, not zero): an extend-free sweep never compiles the
+        # §6 gate
+        extended = False
+        for k in EXTEND_PLANES:
+            plane = stacked.planes.get(k)
+            if plane is None:
+                continue
+            if (np.asarray(plane) != PLANES[k].default).any():
+                extended = True
+            else:
+                drop_keys.append(k)
         # in collect="owners" mode the [B, T, N] attempts/releases planes
         # are DONATED to the dispatch (XLA reuses their buffers for the
         # output cubes); copy those leaves when they are already device
@@ -831,9 +857,11 @@ class LeaseArrayEngine:
         if T == 0:
             raise ValueError("sweep scenarios must have at least one tick")
         # a sweep is read-only: pick the model without flipping the engine
-        # (corruption and restart planes only exist in the delayed tick)
+        # (corruption, restart and extends planes only exist in the
+        # delayed tick)
         sync = self._pick_model(
-            netplane, delayed or corrupt or restarted, mutate=False
+            netplane, delayed or corrupt or restarted or extended,
+            mutate=False,
         )
         mr = self._max_restarts(stacked.planes.get("prop_restart"))
         self._check_pack_budget(self.t + T, dmax, rmax, mr)
@@ -844,7 +872,7 @@ class LeaseArrayEngine:
         fn = _sweep_fn(
             self.majority, self.lease_q4, self.round_q4, self.guard_q4,
             backend or self.backend, sync, 512, self.window, collect, n_dev,
-            self.restart_guard,
+            self.restart_guard, self.skip_stable,
         )
         out = fn(
             self.state, self.net, jnp.int32(self.t), self._clk0(),

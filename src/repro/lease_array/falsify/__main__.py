@@ -48,6 +48,12 @@ def main(argv=None) -> int:
              "restarts + proposer restart counters) — honest faults in "
              "either mode, so --expect stays mode-driven",
     )
+    ap.add_argument(
+        "--extends", action="store_true",
+        help="also explore the §6 extends plane (owner in-flight "
+             "renewals) — honest behavior in either mode, so --expect "
+             "stays mode-driven",
+    )
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--pop", type=int, default=256)
     ap.add_argument("--generations", type=int, default=8)
@@ -69,7 +75,7 @@ def main(argv=None) -> int:
     cfg = FalsifyConfig(
         seed=args.seed, pop_size=args.pop, generations=args.generations,
         backend=args.backend, corrupt=args.mode == "corrupt",
-        restarts=args.restarts,
+        restarts=args.restarts, extends=args.extends,
     )
     res = search(cfg, log=lambda m: print(f"[falsify] {m}", flush=True))
 

@@ -21,7 +21,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from ..scenario import CORRUPTION_PLANES, RESTART_PLANES
+from ..scenario import CORRUPTION_PLANES, EXTEND_PLANES, RESTART_PLANES
 from ..state import DEFAULT_RATE, MAX_RESTARTS, NO_PROPOSER
 
 __all__ = ["MUTATION_OPS", "MutationSpace", "mutate"]
@@ -43,6 +43,7 @@ class MutationSpace:
     rate_hi: int = 5       # clock-rate ceiling
     corrupt: bool = False  # also mutate the acc_stale/acc_equiv planes
     restart: bool = False  # also mutate the acc_restart/prop_restart planes
+    extend: bool = False   # also mutate the §6 extends plane
     #: per-proposer restart ceiling (the packed ballot's RESTART_SHIFT
     #: carve); crash inserts that would overflow it are dropped, keeping
     #: every mutant inside check_pack_budget's refusal boundary
@@ -51,9 +52,10 @@ class MutationSpace:
 
     def op_names(self) -> tuple[str, ...]:
         cor, rst = set(CORRUPTION_PLANES), set(RESTART_PLANES)
+        ext = set(EXTEND_PLANES)
         names = tuple(
             n for n, (_, planes) in MUTATION_OPS.items()
-            if not set(planes) & (cor | rst)
+            if not set(planes) & (cor | rst | ext)
         )
         if self.corrupt:
             names += tuple(
@@ -64,6 +66,11 @@ class MutationSpace:
             names += tuple(
                 n for n, (_, planes) in MUTATION_OPS.items()
                 if set(planes) & rst
+            )
+        if self.extend:
+            names += tuple(
+                n for n, (_, planes) in MUTATION_OPS.items()
+                if set(planes) & ext
             )
         return names
 
@@ -159,6 +166,27 @@ def _op_flip_equiv(planes, b, rng, sp):
     e[b, t, a] = 1 - e[b, t, a]
 
 
+def _op_flip_extend(planes, b, rng, sp):
+    """Retarget one (tick, cell) §6 extend slot: new proposer id or none.
+    Most writes are inert (the gate requires the LIVE owner); the hits
+    probe a renewal round against everything else in flight."""
+    t, n = _coords(rng, b, sp.n_ticks, sp.n_cells)
+    planes["extends"][b, t, n] = rng.integers(
+        NO_PROPOSER, sp.n_proposers, b.size
+    )
+
+
+def _op_shift_extend(planes, b, rng, sp):
+    """Move one cell's extend by ±1 tick — the renewal round slides
+    against expiry ties, releases and deaf windows."""
+    t, n = _coords(rng, b, sp.n_ticks, sp.n_cells)
+    t2 = np.clip(t + rng.choice((-1, 1), b.size), 0, sp.n_ticks - 1)
+    e = planes["extends"]
+    v = e[b, t, n].copy()
+    e[b, t, n] = NO_PROPOSER
+    e[b, t2, n] = v
+
+
 def _op_crash_insert(planes, b, rng, sp):
     """Toggle one node restart (crash/restart plane operators only join
     the pool when MutationSpace.restart is set): an acceptor — blank +
@@ -214,6 +242,8 @@ MUTATION_OPS = {
     "flip_acc_up": (_op_flip_acc_up, ("acc_up",)),
     "flip_stale": (_op_flip_stale, ("acc_stale",)),
     "flip_equiv": (_op_flip_equiv, ("acc_equiv",)),
+    "flip_extend": (_op_flip_extend, ("extends",)),
+    "shift_extend": (_op_shift_extend, ("extends",)),
     "crash_insert": (_op_crash_insert, ("acc_restart", "prop_restart")),
     "crash_shift": (_op_crash_shift, ("acc_restart",)),
     "deaf_boundary_nudge": (_op_deaf_boundary_nudge, ("acc_restart",)),

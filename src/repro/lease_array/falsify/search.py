@@ -87,6 +87,11 @@ class FalsifyConfig:
     #: so the search must NOT find a violation through them
     restarts: bool = False
     p_restart: float = 0.03
+    #: enable the §6 extends plane: owner in-flight renewals — honest
+    #: behavior (the gate requires the live owner), so the search must
+    #: NOT find a violation through them either
+    extends: bool = False
+    p_extend: float = 0.15
 
     @property
     def rate_bounds(self) -> tuple[int, int]:
@@ -103,6 +108,7 @@ class FalsifyConfig:
             n_acceptors=self.n_acceptors, n_proposers=self.n_proposers,
             delay_hi=self.max_delay, rate_lo=lo, rate_hi=hi,
             corrupt=self.corrupt, restart=self.restarts,
+            extend=self.extends,
             lease_ticks=self.lease_ticks,
         )
 
@@ -177,6 +183,10 @@ def random_population(rng: np.random.Generator, cfg: FalsifyConfig) -> dict:
     planes = {
         "attempts": ids(cfg.p_attempt),
         "releases": ids(cfg.p_release),
+        "extends": (
+            ids(cfg.p_extend) if cfg.extends
+            else np.full((B, T, N), NO_PROPOSER, i32)
+        ),
         "acc_up": (rng.random((B, T, A)) >= cfg.p_down).astype(i32),
         "delay": rng.integers(0, cfg.max_delay + 1, (B, T, P, A)).astype(i32),
         "drop": (rng.random((B, T, P, A)) < cfg.p_drop).astype(i32),

@@ -61,13 +61,15 @@ except Exception:  # pragma: no cover
 
 from .netplane import NetPlaneState, delayed_tick_math, legs_select
 from .ref import sync_tick_math
-from .state import PackedLeaseState
+from .state import PACK_SHIFT, PackedLeaseState, clock_select
 
 N_LEASE = len(PackedLeaseState._fields)
 N_NET = len(NetPlaneState._fields)
 
 #: index of own_id inside PackedLeaseState — the per-tick owner row
 _OWN_ID = PackedLeaseState._fields.index("owner_id")
+#: index of the packed owner lease — the quiescence check reads its expiry
+_OWN_LEASE = PackedLeaseState._fields.index("owner_lease")
 
 # BlockSpecs for the packed lease plane ([A, bn] x2 then [1, bn] x2)
 _LEASE_ROWS = (None, None, 1, 1)  # None -> the plane keeps its A rows
@@ -142,10 +144,13 @@ def _window_geometry(n_cells: int, n_ticks: int, block_n: int, window: int):
 def _launch_plan(
     rows, n_acceptors: int, n_cells: int, n_proposers: int, n_ticks: int,
     block_n: int, window: int, bcast_rows: tuple[tuple[int, int], ...],
+    n_cell_planes: int = 2,
 ) -> LaunchPlan:
     """Shared plan builder: ``rows`` describes the resident state planes
-    (None -> A rows), ``bcast_rows`` the trailing cell-independent streams
-    as (rows, cols) pairs."""
+    (None -> A rows), ``n_cell_planes`` how many [T, N] cell-plane streams
+    follow them (attempts/releases, plus the §6 extends stream), and
+    ``bcast_rows`` the trailing cell-independent streams as (rows, cols)
+    pairs."""
     A, N, T = n_acceptors, n_cells, n_ticks
     block_n, tw, n_windows = _window_geometry(N, T, block_n, window)
     grid = (N // block_n, n_windows)
@@ -154,11 +159,11 @@ def _launch_plan(
     cell_spec = _cell_plane_spec(tw, 1, block_n)
     cell_shape = (n_windows, tw, 1, N)
     in_specs = (
-        (_scalar_spec(2), *state_specs, cell_spec, cell_spec)
+        (_scalar_spec(2), *state_specs, *(cell_spec,) * n_cell_planes)
         + tuple(_bcast_plane_spec(tw, r, c) for r, c in bcast_rows)
     )
     in_shapes = (
-        ((2,), *state_shapes, cell_shape, cell_shape)
+        ((2,), *state_shapes, *(cell_shape,) * n_cell_planes)
         + tuple((n_windows, tw, r, c) for r, c in bcast_rows)
     )
     return LaunchPlan(
@@ -189,15 +194,17 @@ def sync_launch_plan(
 def delayed_launch_plan(
     n_acceptors: int, n_cells: int, n_proposers: int, n_ticks: int,
     *, block_n: int = 512, window: int = 16, corrupt: bool = False,
-    restart: bool = False,
+    restart: bool = False, extend: bool = False,
 ) -> LaunchPlan:
     """Launch geometry of ``lease_window_delayed_pallas``: lease + netplane
     state, the same streams as sync, plus the fused [P, A] link matrices.
-    ``corrupt`` appends the two adversarial [A, 1] corruption columns
-    (stale-ballot / equivocation masks) to the streamed planes; ``restart``
-    appends the four crash/restart columns (acceptor restart + deaf-window
-    masks [A, 1], proposer restart + running restart counters [P, 1]) —
-    the honest launch is geometry-identical to the pre-falsifier kernel."""
+    ``extend`` inserts the §6 extends stream as a THIRD [T, N] cell plane
+    right after releases (the owner-extension proposer ids). ``corrupt``
+    appends the two adversarial [A, 1] corruption columns (stale-ballot /
+    equivocation masks) to the streamed planes; ``restart`` appends the
+    four crash/restart columns (acceptor restart + deaf-window masks
+    [A, 1], proposer restart + running restart counters [P, 1]) — the
+    honest launch is geometry-identical to the pre-falsifier kernel."""
     A, P = n_acceptors, n_proposers
     bcast = ((A, 1), (P, 1), (A, 1), (P, A))
     if corrupt:
@@ -206,7 +213,7 @@ def delayed_launch_plan(
         bcast += ((A, 1), (A, 1), (P, 1), (P, 1))
     return _launch_plan(
         _LEASE_ROWS + _NET_ROWS, A, n_cells, P, n_ticks, block_n, window,
-        bcast_rows=bcast,
+        bcast_rows=bcast, n_cell_planes=3 if extend else 2,
     )
 
 
@@ -258,18 +265,69 @@ def _sync_window_kernel(
         r[...] = v
 
 
+def _quiescent(
+    st_refs, att_ref, rel_ref, ext_ref, pclk_ref, aclk_ref,
+    stale_ref, equiv_ref, rst_refs, tw: int,
+):
+    """True iff this (cell block, window) pair provably cannot change the
+    resident state: no message in flight, no open round, no scheduled
+    attempt/release/extend (all-sentinel slabs — the zero tail padding of a
+    partial last window reads as proposer 0 and correctly disqualifies it),
+    no scheduled fault, and every lease — the owner row on the owner's
+    clock, each acceptor's on its own — stays live through the window's
+    LAST local-clock reading. Ticks inside such a window are pure owner
+    samples: phase 1 expires nothing, phases 2-4 see only empty slots and
+    sentinel rows."""
+    rnd_ballot = st_refs[N_LEASE + 6]
+    quiet = (
+        jnp.all(att_ref[...] < 0)
+        & jnp.all(rel_ref[...] < 0)
+        & jnp.all(rnd_ballot[...] == 0)
+    )
+    if ext_ref is not None:
+        quiet &= jnp.all(ext_ref[...] < 0)
+    # the five in-flight slot planes (presp_pay is inert while presp == 0)
+    for i in (0, 1, 3, 4, 5):
+        quiet &= jnp.all(st_refs[N_LEASE + i][...] == 0)
+    if stale_ref is not None:
+        quiet &= jnp.all(stale_ref[...] == 0) & jnp.all(equiv_ref[...] == 0)
+    if rst_refs is not None:
+        arst_ref, _, prst_ref, _ = rst_refs
+        quiet &= jnp.all(arst_ref[...] == 0) & jnp.all(prst_ref[...] == 0)
+    # leases must outlive the window on their holder's LOCAL clock: clocks
+    # only advance, so the slab's last reading is the window's worst case
+    own_id = st_refs[_OWN_ID][...]
+    ownp = st_refs[_OWN_LEASE][...]
+    own_clk_end = clock_select(pclk_ref[tw - 1], own_id)
+    quiet &= jnp.all(
+        (ownp == 0) | (ownp >= ((own_clk_end + 1) << PACK_SHIFT))
+    )
+    acc_lease = st_refs[1][...]
+    aclk_end = aclk_ref[tw - 1]
+    quiet &= jnp.all(
+        (acc_lease == 0) | (acc_lease >= ((aclk_end + 1) << PACK_SHIFT))
+    )
+    return quiet
+
+
 def _delayed_window_kernel(
     sc_ref,
     *refs,
     majority: int, lease_q4: int, round_q4: int, guard_q4: int,
     n_proposers: int, tw: int, corrupt: bool = False, restart: bool = False,
+    extend: bool = False, skip_stable: bool = True,
 ):
     n_state = N_LEASE + N_NET
-    n_in = n_state + 6 + (2 if corrupt else 0) + (4 if restart else 0)
+    n_cell = 3 if extend else 2
+    n_in = (
+        n_state + n_cell + 4 + (2 if corrupt else 0) + (4 if restart else 0)
+    )
     ins, outs = refs[:n_in], refs[n_in:]
-    att_ref, rel_ref, up_ref, pclk_ref, aclk_ref, link_ref = \
-        ins[n_state:n_state + 6]
-    extra = n_state + 6
+    att_ref, rel_ref = ins[n_state:n_state + 2]
+    ext_ref = ins[n_state + 2] if extend else None
+    up_ref, pclk_ref, aclk_ref, link_ref = \
+        ins[n_state + n_cell:n_state + n_cell + 4]
+    extra = n_state + n_cell + 4
     stale_ref = equiv_ref = None
     if corrupt:
         stale_ref, equiv_ref = ins[extra:extra + 2]
@@ -286,6 +344,8 @@ def _delayed_window_kernel(
             {"stale": stale_ref[tau], "equiv": equiv_ref[tau]}
             if corrupt else {}
         )
+        if extend:
+            adv["extend"] = ext_ref[tau]
         if restart:
             arst_ref, deaf_ref, prst_ref, rc_ref = rst_refs
             adv.update(
@@ -304,11 +364,34 @@ def _delayed_window_kernel(
         cnt_ref[tau] = count
         return (*lease, *net)
 
-    carry = jax.lax.fori_loop(
-        0, n_ticks, body, tuple(r[...] for r in st_refs)
+    def run_window():
+        carry = jax.lax.fori_loop(
+            0, n_ticks, body, tuple(r[...] for r in st_refs)
+        )
+        for r, v in zip(st_refs, carry):
+            r[...] = v
+
+    if not skip_stable:
+        run_window()
+        return
+
+    skip = _quiescent(
+        st_refs, att_ref, rel_ref, ext_ref, pclk_ref, aclk_ref,
+        stale_ref, equiv_ref, rst_refs, tw,
     )
-    for r, v in zip(st_refs, carry):
-        r[...] = v
+
+    @pl.when(skip)
+    def _():
+        # quiescent fast path: the window is pure owner sampling — the
+        # resident state is untouched and every tick reads the same row
+        own_row = st_refs[_OWN_ID][...]
+        cnt_row = (st_refs[_OWN_LEASE][...] > 0).astype(jnp.int32)
+        own_ref[...] = jnp.broadcast_to(own_row[None], own_ref.shape)
+        cnt_ref[...] = jnp.broadcast_to(cnt_row[None], cnt_ref.shape)
+
+    @pl.when(jnp.logical_not(skip))
+    def _():
+        run_window()
 
 
 def _windowed(plane, n_windows: int, tw: int, rows: int, n: int):
@@ -400,6 +483,8 @@ def lease_window_delayed_pallas(
     block_n: int = 512,
     window: int = 16,
     interpret: bool = True,  # False on real TPUs
+    extends=None,  # [T, N] §6 owner-extension proposer ids (None = honest)
+    skip_stable: bool = True,  # compile the quiescence fast path
     stale=None,  # [T, A] adversarial stale-ballot mask (None = honest)
     equiv=None,  # [T, A] adversarial equivocation mask (None = honest)
     acc_restart=None,   # [T, A] acceptor crash+restart mask (None = honest)
@@ -409,21 +494,28 @@ def lease_window_delayed_pallas(
 ) -> tuple[PackedLeaseState, NetPlaneState, jax.Array, jax.Array]:
     """Replay T delayed-model ticks in ONE kernel launch (state AND the
     in-flight netplane stay VMEM-resident across windows). Returns
-    (packed_state', net', owners [T, N], counts [T, N]). Passing either
-    corruption mask streams both as extra [A, 1] broadcast columns and
-    compiles the corrupted tick body; passing any restart input streams
-    all four crash/restart columns likewise; the honest launch is
-    unchanged."""
+    (packed_state', net', owners [T, N], counts [T, N]). Passing
+    ``extends`` streams the §6 owner-extension ids as a third [T, N]
+    cell plane and compiles the extend gate. Passing either corruption
+    mask streams both as extra [A, 1] broadcast columns and compiles the
+    corrupted tick body; passing any restart input streams all four
+    crash/restart columns likewise; the honest launch is unchanged.
+    ``skip_stable`` compiles the per-(block, window) quiescence check:
+    windows whose cell block provably cannot change (no traffic, no
+    events, no expiry in reach) collapse to owner-row broadcasts instead
+    of running the tick loop — bit-identical results, a fraction of the
+    VPU work on steady-state phases (``False`` is the A/B bench control)."""
     A, N = packed.promised.shape
     P = n_proposers
     T = attempts.shape[0]
+    extend = extends is not None
     corrupt = stale is not None or equiv is not None
     restart = any(
         x is not None for x in (acc_restart, acc_deaf, prop_restart, prop_rc)
     )
     plan = delayed_launch_plan(
         A, N, P, T, block_n=block_n, window=window, corrupt=corrupt,
-        restart=restart,
+        restart=restart, extend=extend,
     )
     tw, n_windows = plan.tw, plan.n_windows
 
@@ -432,6 +524,7 @@ def lease_window_delayed_pallas(
         majority=majority, lease_q4=lease_q4, round_q4=round_q4,
         guard_q4=lease_q4 if guard_q4 is None else guard_q4,
         n_proposers=P, tw=tw, corrupt=corrupt, restart=restart,
+        extend=extend, skip_stable=skip_stable,
     )
     row_plane = lambda p: _windowed(
         jnp.asarray(p, jnp.int32), n_windows, tw, 1, N
@@ -452,6 +545,7 @@ def lease_window_delayed_pallas(
         *packed,
         *net,
         row_plane(attempts), row_plane(releases),
+        *((row_plane(extends),) if extend else ()),
         col_plane(jnp.asarray(acc_up).astype(jnp.int32), A),
         col_plane(pclk, P), col_plane(aclk, A),
         _windowed(jnp.asarray(link, jnp.int32), n_windows, tw, P, A),

@@ -229,6 +229,7 @@ def delayed_tick_math(
     n_proposers: int,
     guard_q4: int = None,  # proposer's guarded own timer (default: no drift)
     legs=legs_gather,  # per-leg link strategy (select inside Pallas)
+    extend=None,       # [1, bn] int32 proposer id extending its own lease (§6)
     stale=None,        # [A, 1|bn] adversarial: honor below-promise ballots
     equiv=None,        # [A, 1|bn] adversarial: report a live lease as open
     acc_restart=None,  # [A, 1|bn] diskless acceptor crash+restart this tick
@@ -255,6 +256,17 @@ def delayed_tick_math(
     accumulated local quarter-ticks; per-cell owner/round rows read the
     relevant proposer's entry via `state.clock_select`). All-``4t`` clock
     planes reproduce the rate-1 engine bit-for-bit.
+
+    ``extend`` is the §6 owner-extension plane: an owner re-proposes
+    in-flight to renew before expiry. The id is gated on the proposer's
+    OWN belief AFTER this tick's expiry/restart/release phases (so a
+    same-tick §7 release wins and the extend is a no-op, exactly like
+    ``Proposer._renew``'s ``st.want and st.owner`` guard), then merged
+    into the attempt row — an extend is a full fresh §3 round whose
+    prepare responses count the owner's live proposal as open (phase 4c
+    below). A non-owner extend id is a no-op. An explicit attempt on the
+    same cell takes precedence. ``None`` traces no extend ops at all
+    (honest path byte-identical).
 
     ``stale``/``equiv`` are the adversarial corruption masks (the
     falsification engine's negative controls — Byzantine acceptors in the
@@ -374,6 +386,13 @@ def delayed_tick_math(
     rnd_clk = clock_select(pclk, rnd_prop)                          # [1, bn]
     timed_out = (rnd_ballot > 0) & (rnd_clk >= rnd_deadline)
     att = attempt                                                   # [1, bn]
+    if extend is not None:
+        # §6: an extend is a fresh round started by the live owner — gated
+        # on the local belief AFTER expiry/restart/release above, so a
+        # same-tick §7 release (or a crash, or a lapsed timer) turns the
+        # extend into a no-op. Attempts take precedence on collisions.
+        ext_ok = (att < 0) & (extend >= 0) & (own_id == extend) & (ownp > 0)
+        att = jnp.where(ext_ok, extend, att)
     has_att = att >= 0
     att_clk = clock_select(pclk, att)                               # [1, bn]
     if prop_rc is None:

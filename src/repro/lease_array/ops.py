@@ -41,7 +41,14 @@ from .netplane import (
     pack_link,
 )
 from .ref import link_matrix, sync_tick_math
-from .scenario import CORRUPTION_PLANES, RESTART_PLANES, TickInputs, make_tick
+from .scenario import (
+    CORRUPTION_PLANES,
+    EXTEND_PLANES,
+    PLANES,
+    RESTART_PLANES,
+    TickInputs,
+    make_tick,
+)
 from .state import (
     NO_PROPOSER,
     PACK_MASK,
@@ -187,6 +194,7 @@ def _window_scan_impl(
     block_n: int,
     window: int,
     restart_guard: bool = True,
+    skip_stable: bool = True,
 ):
     """Shared unjitted body of the fused scan (also vmapped by
     ``engine.sweep``). ``planes`` is the Scenario plane dict ([T, ...]
@@ -220,6 +228,18 @@ def _window_scan_impl(
         za = jnp.zeros((T, A), jnp.int32)
         stale = za if stale is None else jnp.asarray(stale, jnp.int32)
         equiv = za if equiv is None else jnp.asarray(equiv, jnp.int32)
+    # the §6 extends plane: same omit-means-honest contract (all-default
+    # -1 planes are stripped by the callers, so honest replays never
+    # compile the extend gate)
+    ext = planes.get("extends")
+    extend = ext is not None
+    if extend:
+        if sync:
+            raise ValueError(
+                "the extends plane (§6 owner extension) needs the delayed "
+                "model; the synchronous tick cannot honor it"
+            )
+        ext = jnp.asarray(ext, jnp.int32)
     # the crash/restart planes: same omit-means-honest contract; a restart
     # history (rst0) keeps restart mode on across incremental steps even
     # when this dispatch's planes are quiet, so ballot encoding never
@@ -271,8 +291,11 @@ def _window_scan_impl(
                 a, r, u, pc, ac, lk = xs[:6]
                 i = 6
                 adv = {}
+                if extend:
+                    adv["extend"] = xs[i][None, :]
+                    i += 1
                 if corrupt:
-                    adv = {"stale": xs[i][:, None], "equiv": xs[i + 1][:, None]}
+                    adv.update(stale=xs[i][:, None], equiv=xs[i + 1][:, None])
                     i += 2
                 if restart:
                     adv.update(
@@ -290,6 +313,8 @@ def _window_scan_impl(
                 return (lease, netc, t + 1), (lease[2], count)
 
             xs = (attempts, releases, acc_up, pclk, aclk, link)
+            if extend:
+                xs += (ext,)
             if corrupt:
                 xs += (stale, equiv)
             if restart:
@@ -303,9 +328,12 @@ def _window_scan_impl(
 
     interpret = backend == "pallas"
     padded, n = _pad_packed(packed, block_n)
-    (attempts_p, releases_p), _ = _pad_cells(
-        [attempts, releases], block_n, (NO_PROPOSER, NO_PROPOSER)
+    cell_planes = [attempts, releases] + ([ext] if extend else [])
+    cell_planes, _ = _pad_cells(
+        cell_planes, block_n, (NO_PROPOSER,) * len(cell_planes)
     )
+    attempts_p, releases_p = cell_planes[:2]
+    ext_p = cell_planes[2] if extend else None
     if sync:
         padded, owners, counts = lease_window_sync_pallas(
             padded, t0, attempts_p, releases_p, acc_up, pclk, aclk,
@@ -323,10 +351,10 @@ def _window_scan_impl(
         )
         padded, net_p, owners, counts = lease_window_delayed_pallas(
             padded, net_p, t0, attempts_p, releases_p, acc_up, pclk, aclk,
-            link, stale=stale, equiv=equiv, **rst_kw,
+            link, extends=ext_p, stale=stale, equiv=equiv, **rst_kw,
             majority=majority, lease_q4=lease_q4, round_q4=round_q4,
             n_proposers=P, guard_q4=guard_q4, block_n=block_n,
-            window=window, interpret=interpret,
+            window=window, interpret=interpret, skip_stable=skip_stable,
         )
         new_net = NetPlaneState(*(a[:, :n] for a in net_p))
     new_state = unpack_state(
@@ -339,7 +367,7 @@ _window_scan_jit = functools.partial(
     jax.jit,
     static_argnames=(
         "majority", "lease_q4", "round_q4", "guard_q4", "backend", "sync",
-        "block_n", "window", "restart_guard",
+        "block_n", "window", "restart_guard", "skip_stable",
     ),
 )(_window_scan_impl)
 
@@ -413,6 +441,10 @@ def _margin_scan_impl(
         za = jnp.zeros((T, A), jnp.int32)
         stale = za if stale is None else jnp.asarray(stale, jnp.int32)
         equiv = za if equiv is None else jnp.asarray(equiv, jnp.int32)
+    ext = planes.get("extends")
+    extend = ext is not None
+    if extend:
+        ext = jnp.asarray(ext, jnp.int32)
     arst = planes.get("acc_restart")
     prst = planes.get("prop_restart")
     restart = arst is not None or prst is not None or rst0 is not None
@@ -441,8 +473,13 @@ def _margin_scan_impl(
         a, r, u, pc, ac, lk = xs[:6]
         i = 6
         adv = {}
+        ext_row = None
+        if extend:
+            ext_row = xs[i][None, :]
+            adv["extend"] = ext_row
+            i += 1
         if corrupt:
-            adv = {"stale": xs[i][:, None], "equiv": xs[i + 1][:, None]}
+            adv.update(stale=xs[i][:, None], equiv=xs[i + 1][:, None])
             i += 2
         if restart:
             adv.update(
@@ -452,13 +489,19 @@ def _margin_scan_impl(
             deaf_rem_col = xs[i + 4][:, None]
         att_row, rel_row = a[None, :], r[None, :]
         pc_col = pc[:, None]
-        # pre-tick: guarded-expiry tie distance at releases that name the
-        # live owner — its packed expiry vs its local clock right now
+        # pre-tick: guarded-expiry tie distance at releases — and, in
+        # extend mode, at extends — that name the live owner: its packed
+        # expiry vs its local clock right now (an extend racing its own
+        # guarded expiry is the §6 twin of the PR 5 release tie)
         own_id_pre, ownp_pre = lease[2], lease[3]
         own_clk = clock_select(pc_col, own_id_pre)
         names_owner = (
             (rel_row >= 0) & (own_id_pre == rel_row) & (ownp_pre > 0)
         )
+        if extend:
+            names_owner = names_owner | (
+                (ext_row >= 0) & (own_id_pre == ext_row) & (ownp_pre > 0)
+            )
         tie_clk_d = jnp.abs(packed_q4(ownp_pre) - own_clk)
         tie_q4 = jnp.min(jnp.where(names_owner, tie_clk_d, big))
 
@@ -481,6 +524,14 @@ def _margin_scan_impl(
                 (rnd_ballot_pre > 0) & (ownp_pre > 0)
                 & (own_id_pre != rnd_prop_pre)
             )
+            if extend:
+                # extend mode: a deaf refusal of the owner's OWN extend
+                # round (one vote short) is the §6 boundary — the extend
+                # that almost completed before the M-wait swallowed it
+                foreign_pre = foreign_pre | (
+                    (rnd_ballot_pre > 0) & (ownp_pre > 0)
+                    & (own_id_pre == rnd_prop_pre)
+                )
             nv_pre = jnp.maximum(
                 vote_count(netc[10]), vote_count(netc[11])
             )
@@ -531,6 +582,8 @@ def _margin_scan_impl(
 
     m0 = (big, big, big, big, jnp.int32(0))
     xs = (attempts, releases, acc_up, pclk, aclk, link)
+    if extend:
+        xs += (ext,)
     if corrupt:
         xs += (stale, equiv)
     if restart:
@@ -615,6 +668,23 @@ def _guard_pack_budget(
     )
 
 
+def strip_default_planes(planes: dict) -> dict:
+    """Drop optional fault planes sitting entirely at their registered
+    default. All-default corruption/restart/extends planes ARE the honest
+    engine, so stripping them host-side keeps the honest replay from
+    compiling the fault variants — staticcheck's ``check_honest_strip``
+    pins the resulting dispatch-jaxpr byte-identity. Tracers are never
+    stripped (their values are unknown at trace time)."""
+    return {
+        k: v for k, v in planes.items()
+        if not (
+            k in CORRUPTION_PLANES + RESTART_PLANES + EXTEND_PLANES
+            and not isinstance(v, jax.core.Tracer)
+            and (np.asarray(v) == PLANES[k].default).all()
+        )
+    }
+
+
 def lease_window_scan(
     state: LeaseArrayState,
     net,
@@ -632,6 +702,7 @@ def lease_window_scan(
     sync: bool = False,
     block_n: int = 512,
     window: int = 16,
+    skip_stable: bool = True,
 ) -> tuple[LeaseArrayState, NetPlaneState, jax.Array, jax.Array]:
     """Replay a whole [T]-tick scenario-plane dict in ONE dispatch.
 
@@ -647,21 +718,13 @@ def lease_window_scan(
     deaf-until [A]) restart history at ``t0`` (None = fresh; its presence
     keeps restart mode on even for quiet planes); ``restart_guard=False``
     disables the post-restart deaf window — the §4 negative control.
+    ``skip_stable=False`` disables the Pallas quiescence fast path (the
+    A/B bench control; results are bit-identical either way).
     Returns (new_state, new_net, owners [T, N], owner_counts [T, N]).
     """
     if guard_q4 is None:
         guard_q4 = lease_q4
-    # all-zero corruption/restart planes are the honest engine: strip them
-    # host-side so the honest replay never compiles the fault variants
-    # (and a zero-fault Scenario still runs under sync=True)
-    planes = {
-        k: v for k, v in planes.items()
-        if not (
-            k in CORRUPTION_PLANES + RESTART_PLANES
-            and not isinstance(v, jax.core.Tracer)
-            and not np.asarray(v).any()
-        )
-    }
+    planes = strip_default_planes(planes)
     _guard_pack_budget(
         t0, int(jnp.shape(planes["attempts"])[0]), planes,
         n_proposers=state.n_proposers, lease_q4=lease_q4, sync=sync,
@@ -672,6 +735,7 @@ def lease_window_scan(
         majority=majority, lease_q4=lease_q4, round_q4=round_q4,
         guard_q4=guard_q4, backend=backend, sync=sync, block_n=block_n,
         window=window, restart_guard=restart_guard,
+        skip_stable=skip_stable,
     )
 
 
@@ -692,6 +756,7 @@ def lease_plane_tick(
     block_n: int = 512,
     sync: bool = False,
     window: int = 16,
+    skip_stable: bool = True,
 ) -> tuple[LeaseArrayState, NetPlaneState, jax.Array]:
     """Advance all cells one tick.
 
@@ -725,6 +790,8 @@ def lease_plane_tick(
             return bool((np.asarray(v) == QUARTERS).all())
         if k in CORRUPTION_PLANES:
             return not np.asarray(v).any()
+        if k in EXTEND_PLANES:
+            return bool((np.asarray(v) == PLANES[k].default).all())
         if k in RESTART_PLANES and rst0 is None:
             return not np.asarray(v).any()
         return False
@@ -743,6 +810,7 @@ def lease_plane_tick(
         majority=majority, lease_q4=lease_q4, round_q4=round_q4,
         guard_q4=guard_q4, backend=backend, sync=sync, block_n=block_n,
         window=window, restart_guard=restart_guard,
+        skip_stable=skip_stable,
     )
     return new_state, new_net, counts[0]
 

@@ -224,6 +224,7 @@ def lease_step_delayed_ref(
     guard_q4: int = None,  # drift-guarded proposer timespan (default lease_q4)
     pclk=None,        # [P] int32 proposer local clocks (default: 4t, no drift)
     aclk=None,        # [A] int32 acceptor local clocks (default: 4t, no drift)
+    extend=None,      # [N] int32 proposer id extending its own lease (§6)
     acc_restart=None,  # [A] 0/1: blank this acceptor (diskless crash+restart)
     acc_deaf=None,     # [A] 0/1: acceptor inside its post-restart M-wait
     prop_restart=None,  # [P] 0/1: bump this proposer's restart counter
@@ -246,6 +247,8 @@ def lease_step_delayed_ref(
     P = state.n_proposers
     dp, da = _default_clocks(t, P, A)
     adv = {}
+    if extend is not None:
+        adv["extend"] = jnp.asarray(extend, jnp.int32).reshape(1, N)
     if any(x is not None for x in (acc_restart, acc_deaf, prop_restart,
                                    prop_rc)):
         col = lambda x, rows: (

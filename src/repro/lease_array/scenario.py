@@ -55,6 +55,7 @@ __all__ = [
     "PLANES",
     "CORRUPTION_PLANES",
     "RESTART_PLANES",
+    "EXTEND_PLANES",
     "register_plane",
     "plane_table_md",
     "plane_digest",
@@ -165,6 +166,12 @@ register_plane(
     "belief, bumps its ballot restart counter",
     min_value=0,
 )
+register_plane(
+    "extends", ("N",), NO_PROPOSER,
+    "proposer id extending its own live lease on each cell this tick "
+    "(§6 in-flight re-propose; -1 = none, non-owners are a no-op)",
+    proposer_ids=True,
+)
 
 #: the adversarial corruption planes — Byzantine acceptor behaviors the
 #: honest protocol must never exhibit; the falsification engine enables
@@ -176,6 +183,12 @@ CORRUPTION_PLANES = ("acc_stale", "acc_equiv")
 #: dispatch like the corruption planes, keeping the honest engine
 #: bit-identical with zero extra uploads
 RESTART_PLANES = ("acc_restart", "prop_restart")
+
+#: the §6 owner-extension plane: an owner re-proposes in-flight to renew
+#: its lease before expiry. All-default (-1 everywhere) is stripped from
+#: dispatch host-side like the corruption/restart planes, so the honest
+#: jaxpr stays byte-identical
+EXTEND_PLANES = ("extends",)
 
 
 def plane_table_md(planes: Optional[dict[str, PlaneSpec]] = None) -> str:
@@ -377,6 +390,16 @@ class _PlaneBundle:
         to the restart-counter carve). Host-side only — not traceable."""
         return bool(any(
             np.asarray(self.planes[k]).any() for k in RESTART_PLANES
+        ))
+
+    @property
+    def extended(self) -> bool:
+        """True iff the §6 extends plane schedules any owner extension
+        (needs the delayed model with the extend input threaded).
+        Host-side only — not traceable."""
+        return bool(any(
+            (np.asarray(self.planes[k]) != PLANES[k].default).any()
+            for k in EXTEND_PLANES
         ))
 
     def validate_for(

@@ -141,6 +141,11 @@ class Trace:
     #: ``p`` forget everything but its (bumped) stable restart counter
     acc_restarts: Optional[np.ndarray] = None   # [T, A] 0/1
     prop_restarts: Optional[np.ndarray] = None  # [T, P] 0/1
+    #: §6 owner-extension schedule: proposer id extending its own live
+    #: lease on each cell this tick (-1 = none). An extend is a full fresh
+    #: round gated on the extender's own live belief — non-owner extends
+    #: are no-ops in BOTH engines, so a generator may guess owners freely
+    extends: Optional[np.ndarray] = None        # [T, N] int32
 
     @property
     def n_ticks(self) -> int:
@@ -160,6 +165,13 @@ class Trace:
         return bool(
             (self.acc_restarts is not None and self.acc_restarts.any())
             or (self.prop_restarts is not None and self.prop_restarts.any())
+        )
+
+    @property
+    def extended(self) -> bool:
+        """True if the trace schedules any §6 owner extension."""
+        return bool(
+            self.extends is not None and (self.extends != NO_PROPOSER).any()
         )
 
     @property
@@ -208,6 +220,7 @@ class Trace:
             acc_rate=acc_rate,
             acc_restart=self.acc_restarts,
             prop_restart=self.prop_restarts,
+            extends=self.extends,
         )
 
     def link_planes(self) -> tuple[np.ndarray, np.ndarray]:
@@ -238,6 +251,7 @@ def random_trace(
     round_ticks: Optional[int] = None,
     drift_eps: float = 0.0,
     restarts: float = 0.0,
+    renew: float = 0.0,
 ) -> Trace:
     """Randomized trace: per (tick, cell) at most one attempting proposer
     (the no-same-instant-race construction above); releases name a random
@@ -271,6 +285,18 @@ def random_trace(
     proposer with half of it, capped at ``state.MAX_RESTARTS`` total per
     proposer so the restart-counter carve in the packed ballot encoding
     never overflows (the engine refuses hotter schedules).
+
+    With ``renew > 0`` the trace also carries a §6 owner-extension
+    schedule (the ``extends`` plane): after every attempt, the attempting
+    proposer keeps re-proposing the cell every
+    ``max(4·max_delay + 1, round(lease_ticks·renew))`` ticks — the
+    ``Proposer.cfg.renew_fraction`` cadence, floored to the slot-isolation
+    gap — until the next attempt or its own release touches the cell.
+    The generator never simulates who actually won: a non-owner extend is
+    a no-op in BOTH engines (the array's ``ext_ok`` gate and the
+    referee's ``st.owner`` guard), and an extend is suppressed whenever
+    a later attempt on the cell would land inside the extend round's
+    in-flight window (the same spacing construction as attempts).
     """
     rng = np.random.default_rng(seed)
     prop_rate = acc_rate = None
@@ -319,6 +345,34 @@ def random_trace(
         space(releases, max_delay_ticks + 1)
     if p_drop > 0.0:
         drop = rng.random(link_shape) < p_drop
+    extends = None
+    if renew > 0.0:
+        gap = 4 * max_delay_ticks + 1
+        interval = max(gap, int(round(lease_ticks * renew)), 1)
+        extends = np.full((n_ticks, n_cells), NO_PROPOSER, np.int32)
+        # next attempt at-or-after each tick, per cell (backward scan):
+        # an extend too close before a future attempt would have its
+        # in-flight round slots overwritten — suppress it instead
+        INF = np.int64(1) << 60
+        next_att = np.full((n_ticks + 1, n_cells), INF, np.int64)
+        for t in range(n_ticks - 1, -1, -1):
+            next_att[t] = np.where(attempts[t] >= 0, t, next_att[t + 1])
+        last_prop = np.full(n_cells, NO_PROPOSER, np.int64)
+        next_ext = np.full(n_cells, INF, np.int64)
+        for t in range(n_ticks):
+            hit = attempts[t] >= 0
+            # a fresh attempt restarts the cadence from its own tick ...
+            last_prop = np.where(hit, attempts[t], last_prop)
+            next_ext = np.where(hit, t + interval, next_ext)
+            # ... its own release ends it (the owner stops wanting it)
+            quit_ = (releases[t] >= 0) & (releases[t] == last_prop)
+            last_prop = np.where(quit_, NO_PROPOSER, last_prop)
+            due = (
+                (last_prop >= 0) & (t >= next_ext) & ~hit
+                & (next_att[t + 1] - t >= gap)
+            )
+            extends[t] = np.where(due, last_prop, NO_PROPOSER)
+            next_ext = np.where(due, t + interval, next_ext)
     acc_restarts = prop_restarts = None
     if restarts > 0.0:
         acc_restarts = (
@@ -338,6 +392,7 @@ def random_trace(
         delay=delay, drop=drop, round_ticks=int(round_ticks),
         prop_rate=prop_rate, acc_rate=acc_rate, drift_eps=float(drift_eps),
         acc_restarts=acc_restarts, prop_restarts=prop_restarts,
+        extends=extends,
     )
 
 
@@ -411,6 +466,7 @@ def trace_from_scenario(
             f"MAX_RESTARTS={MAX_RESTARTS} times; the packed ballot "
             "restart-counter carve cannot replay it"
         )
+    ext = np.asarray(p["extends"], np.int32)
     return Trace(
         scenario.n_cells, scenario.n_acceptors, scenario.n_proposers,
         int(lease_ticks),
@@ -423,6 +479,7 @@ def trace_from_scenario(
         prop_rate=prop_rate, acc_rate=acc_rate,
         drift_eps=float(drift_eps),
         acc_restarts=acc_restarts, prop_restarts=prop_restarts,
+        extends=ext.copy() if (ext != NO_PROPOSER).any() else None,
     )
 
 
@@ -652,6 +709,25 @@ def replay_event_sim(trace: Trace, *, strict_monitor: bool = True) -> np.ndarray
         # releases strictly before attempts (same order as the array step)
         for n in np.flatnonzero(trace.releases[t] >= 0):
             props[int(trace.releases[t, n])].release(cell_resource(n))
+        # §6 extends after releases (a same-tick release already cleared
+        # st.owner, so the extend is a no-op — the array's phase-3 gate
+        # evaluated after phase 2a), before attempts; a colliding attempt
+        # takes precedence exactly like the array's ``ext_ok`` requires
+        # ``att < 0``, and a non-owner extend is a no-op in both engines
+        if trace.extends is not None:
+            for n in np.flatnonzero(trace.extends[t] >= 0):
+                if trace.attempts[t, n] >= 0:
+                    continue
+                p = props[int(trace.extends[t, n])]
+                st = p._state(cell_resource(n))
+                if not st.owner:
+                    continue
+                st.want, st.renew, st.timespan = (
+                    True, False, cfg.lease_timespan
+                )
+                st.round = None
+                p.ballots.run = t  # next() -> run = t+1, like an attempt
+                p._start_round(cell_resource(n))
         for n in np.flatnonzero(trace.attempts[t] >= 0):
             p = props[int(trace.attempts[t, n])]
             st = p._state(cell_resource(n))

@@ -67,6 +67,13 @@ class SimEnv:
         g = self.clocks[node].local_duration_to_global(local_delay)
         return self.sched.after(g, fn)
 
+    def local_now(self, node: str) -> float:
+        """The node's own drifted clock reading — the same clock its timers
+        run on, never global time (PaxosLease assumes no synchronized
+        clocks; a local monotonic read is the same power as a local timer).
+        """
+        return self.clocks[node].global_duration_to_local(self.sched.now)
+
     def random_backoff(self, lo: float, hi: float) -> float:
         return self.rng.uniform(lo, hi)
 

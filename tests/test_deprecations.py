@@ -3,8 +3,9 @@
 Every legacy form keeps working bit-for-bit — it builds the Scenario /
 TickInputs pytree and forwards — but now announces itself with a real
 DeprecationWarning, and the new forms stay silent. This file is on the
-convention lint's shim allowlist: it exists to exercise the deprecated
-spellings on purpose.
+convention lint's shim allowlist and holds THE one intentional exercise
+of each shim; everything else in tests/ runs the Scenario forms and
+would fail the suite-wide ``error::DeprecationWarning`` filter.
 """
 import warnings
 
@@ -12,11 +13,14 @@ import numpy as np
 import pytest
 
 jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
 
 from repro.lease_array import (  # noqa: E402
     LeaseArrayEngine,
     Scenario,
+    lease_quarters,
     make_tick,
+    random_trace,
 )
 from repro.lease_array.netplane import init_netplane  # noqa: E402
 from repro.lease_array.ops import (  # noqa: E402
@@ -27,10 +31,11 @@ from repro.lease_array.ops import (  # noqa: E402
 from repro.lease_array.state import NO_PROPOSER, init_state  # noqa: E402
 
 N, A, P = 8, 3, 2
+NA = NO_PROPOSER
 
 
-def _engine():
-    return LeaseArrayEngine(N, n_acceptors=A, n_proposers=P)
+def _engine(n_cells=N):
+    return LeaseArrayEngine(n_cells, n_acceptors=A, n_proposers=P)
 
 
 def _planes(T):
@@ -39,19 +44,34 @@ def _planes(T):
     return attempts
 
 
-# ------------------------------------------------------------ engine.step
-def test_step_legacy_kwargs_warn_and_still_work():
-    eng = _engine()
-    attempt = np.zeros(N, np.int32)
+# ------------------------------------------- shim 1: engine.step per-plane
+def test_step_legacy_kwargs_and_positionals_warn_and_match_tickinputs():
+    """The pre-Scenario step spellings — per-plane kwargs, the bare
+    positional attempt row, and the full positional signature — all warn
+    and stay bit-identical to the TickInputs form."""
+    a = np.zeros(N, np.int32)
     with pytest.warns(DeprecationWarning, match="per-plane .*step"):
-        owners = eng.step(attempt=attempt)
-    assert (np.asarray(owners) == 0).all()
+        old = np.asarray(_engine().step(attempt=a))
+    tick = make_tick(n_cells=N, n_acceptors=A, n_proposers=P, attempts=a)
+    new = np.asarray(_engine().step(tick))
+    np.testing.assert_array_equal(old, new)
 
-
-def test_step_legacy_positional_plane_warns():
-    eng = _engine()
     with pytest.warns(DeprecationWarning, match="make_tick"):
-        eng.step(np.zeros(N, np.int32))
+        bare = np.asarray(_engine().step(a))  # bare positional attempt row
+    np.testing.assert_array_equal(bare, new)
+
+    # the full pre-Scenario signature: step(attempt, release, acc_up, ...)
+    e = _engine(2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        e.step(np.array([0, 1], np.int32))
+        own = e.step(None, np.array([0, NA], np.int32), np.ones(A, np.int32))
+    assert own.tolist() == [NA, 1]
+    with pytest.raises(TypeError, match="not both"):
+        e.step(np.array([0, NA], np.int32), attempt=np.array([0, NA], np.int32))
+    with pytest.raises(TypeError, match="inside the TickInputs"):
+        e.step(make_tick(n_cells=2, n_acceptors=A, n_proposers=P),
+               release=np.array([0, NA], np.int32))
 
 
 def test_step_tickinputs_form_is_silent():
@@ -71,27 +91,40 @@ def test_bare_step_is_silent():
         eng.step()
 
 
-def test_step_legacy_matches_tickinputs():
-    a = np.zeros(N, np.int32)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        old = np.asarray(_engine().step(attempt=a))
-    tick = make_tick(n_cells=N, n_acceptors=A, n_proposers=P, attempts=a)
-    new = np.asarray(_engine().step(tick))
-    np.testing.assert_array_equal(old, new)
-
-
-# -------------------------------------------------------- engine.run_trace
-def test_run_trace_legacy_planes_warn_and_still_work():
+# --------------------------------------- shim 2: engine.run_trace raw planes
+def test_run_trace_legacy_planes_warn_and_match_scenario():
+    """Raw plane arrays (positional or attempts=) warn and replay
+    bit-identically to the Scenario form — including the delayed model
+    driven through the legacy delay/drop kwargs."""
     T = 6
     with pytest.warns(DeprecationWarning, match="raw plane arrays"):
-        owners, _ = _engine().run_trace(_planes(T))
-    assert (np.asarray(owners)[0] == 0).all()
+        old, old_c = _engine().run_trace(_planes(T))
+    sc = Scenario.build(T, n_cells=N, n_acceptors=A, n_proposers=P,
+                        attempts=_planes(T))
+    new, new_c = _engine().run_trace(sc)
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+    np.testing.assert_array_equal(np.asarray(old_c), np.asarray(new_c))
 
-
-def test_run_trace_attempts_kwarg_warns():
     with pytest.warns(DeprecationWarning, match="raw plane arrays"):
-        _engine().run_trace(attempts=_planes(4))
+        kw, _ = _engine().run_trace(attempts=_planes(T))
+    np.testing.assert_array_equal(np.asarray(kw), np.asarray(new))
+    with pytest.raises(TypeError, match="not both"):
+        _engine().run_trace(_planes(T), attempts=_planes(T))
+
+    tr = random_trace(3, n_ticks=40, n_cells=6, n_acceptors=3, n_proposers=3,
+                      lease_ticks=2, p_release=0.1, max_delay_ticks=1,
+                      p_drop=0.1)
+    e1 = LeaseArrayEngine(6, n_acceptors=3, n_proposers=3, lease_ticks=2,
+                          round_ticks=tr.round_ticks)
+    o1, c1 = e1.run_trace(tr.scenario())
+    e2 = LeaseArrayEngine(6, n_acceptors=3, n_proposers=3, lease_ticks=2,
+                          round_ticks=tr.round_ticks)
+    with pytest.warns(DeprecationWarning, match="raw plane arrays"):
+        o2, c2 = e2.run_trace(
+            tr.attempts, tr.releases, tr.acc_up,
+            delay=tr.delay, drop=tr.drop,
+        )
+    assert np.array_equal(o1, o2) and np.array_equal(c1, c2)
 
 
 def test_run_trace_scenario_form_is_silent():
@@ -104,42 +137,73 @@ def test_run_trace_scenario_form_is_silent():
     assert (np.asarray(owners)[0] == 0).all()
 
 
-def test_run_trace_legacy_matches_scenario():
-    T = 6
+# ---------------------------------------------- shim 3: ops.lease_plane_step
+def test_lease_plane_step_shim_warns_matches_tick_and_stays_traceable():
+    state = init_state(4, 3, 2)
+    att = np.array([0, 1, NA, NA], np.int32)
+    rel = np.full(4, NA, np.int32)
+    up = np.ones(3, np.int32)
+    with pytest.warns(DeprecationWarning, match="lease_plane_step is deprecated"):
+        old_state, old_count = lease_plane_step(
+            state, 0, att, rel, up, majority=2, lease_q4=lease_quarters(2),
+        )
+    tick = make_tick(n_cells=4, n_acceptors=3, n_proposers=2,
+                     attempts=att, releases=rel, acc_up=up)
+    new_state, _, new_count = lease_plane_tick(
+        state, None, 0, tick,
+        majority=2, lease_q4=lease_quarters(2), round_q4=0, sync=True,
+    )
+    assert all(np.array_equal(a, b) for a, b in zip(old_state, new_state))
+    assert np.array_equal(old_count, new_count)
+
+    # pre-Scenario callers traced the @jax.jit shim inside their own scans
     with warnings.catch_warnings():
         warnings.simplefilter("ignore", DeprecationWarning)
-        old, old_c = _engine().run_trace(_planes(T))
-    sc = Scenario.build(T, n_cells=N, n_acceptors=A, n_proposers=P,
-                        attempts=_planes(T))
-    new, new_c = _engine().run_trace(sc)
-    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
-    np.testing.assert_array_equal(np.asarray(old_c), np.asarray(new_c))
+        traced = jax.jit(lambda s, a: lease_plane_step(
+            s, 0, a, jnp.asarray(rel), jnp.asarray(up),
+            majority=2, lease_q4=lease_quarters(2),
+        ))
+        _, count = traced(state, jnp.asarray(att))
+    assert count.tolist() == [1, 1, 0, 0]
 
 
-# ------------------------------------------------- the lease_plane_* shims
-def test_lease_plane_step_shim_warns():
-    state = init_state(N, A, P)
-    with pytest.warns(DeprecationWarning, match="lease_plane_step is deprecated"):
-        state, count = lease_plane_step(
-            state, 0, np.zeros(N, np.int32),
-            np.full(N, NO_PROPOSER, np.int32), np.ones(A, np.int32),
-            majority=2, lease_q4=13,
-        )
-    assert int(np.asarray(count).max()) >= 0
-
-
-def test_lease_plane_step_delayed_shim_warns():
-    state, net = init_state(N, A, P), init_netplane(N, A)
+# -------------------------------------- shim 4: ops.lease_plane_step_delayed
+def test_lease_plane_step_delayed_shim_warns_matches_tick_and_stays_traceable():
+    state, net = init_state(4, 3, 2), init_netplane(4, 3)
+    att = np.array([0, NA, NA, NA], np.int32)
+    none = np.full(4, NA, np.int32)
+    up = np.ones(3, np.int32)
     with pytest.warns(DeprecationWarning,
                       match="lease_plane_step_delayed is deprecated"):
-        lease_plane_step_delayed(
-            state, net, 0, np.zeros(N, np.int32),
-            np.full(N, NO_PROPOSER, np.int32), np.ones(A, np.int32),
-            np.zeros(A, np.int32), np.zeros(A, np.int32),
-            majority=2, lease_q4=13, round_q4=8,
+        st1, net1, c1 = lease_plane_step_delayed(
+            state, net, 0, att, none, up,
+            np.array([1, 1, 1]), np.zeros(3, np.int32),
+            majority=2, lease_q4=lease_quarters(2), round_q4=8,
         )
+    # the [A] form is the P-broadcast of the [P, A] link matrix
+    tick = make_tick(n_cells=4, n_acceptors=3, n_proposers=2,
+                     attempts=att, acc_up=up, delay=np.ones((2, 3), np.int32))
+    st2, net2, c2 = lease_plane_tick(
+        state, net, 0, tick,
+        majority=2, lease_q4=lease_quarters(2), round_q4=8,
+    )
+    assert all(np.array_equal(a, b) for a, b in zip(st1, st2))
+    assert all(np.array_equal(a, b) for a, b in zip(net1, net2))
+    assert np.array_equal(c1, c2)
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        traced_d = jax.jit(lambda s, n, a: lease_plane_step_delayed(
+            s, n, 0, a, jnp.asarray(none), jnp.asarray(up),
+            jnp.ones(3, jnp.int32), jnp.zeros(3, jnp.int32),
+            majority=2, lease_q4=lease_quarters(2), round_q4=8,
+        ))
+        st3, net3, c3 = traced_d(state, net, jnp.asarray(att))
+    assert c3.tolist() == [0, 0, 0, 0]  # request still in flight
+    assert (np.asarray(net3.preq_b) > 0).any()
 
 
+# ------------------------------------------------------- modern forms: silent
 def test_lease_plane_tick_is_silent():
     state, net = init_state(N, A, P), init_netplane(N, A)
     tick = make_tick(n_cells=N, n_acceptors=A, n_proposers=P,

@@ -36,13 +36,14 @@ def _cfg(**kw):
 
 def test_corpus_loads_and_names_species():
     corpus = load_corpus()
-    assert set(corpus) == {"tie", "ghost", "restart"}
+    assert set(corpus) == {"tie", "ghost", "restart", "extend"}
     assert corpus["tie"][1]["species"] == "guarded-expiry-tie"
     assert corpus["ghost"][1]["species"] == "ghost-lease"
     assert corpus["restart"][1]["species"] == "deaf-window-boundary"
+    assert corpus["extend"][1]["species"] == "extend-expiry-tie"
 
 
-@pytest.mark.parametrize("name", ["tie", "ghost", "restart"])
+@pytest.mark.parametrize("name", ["tie", "ghost", "restart", "extend"])
 def test_corpus_fixture_ranks_top_percentile(name):
     """The margin scorer must keep ranking each known species within the
     top percentile of a random batch evaluated under the same engine —

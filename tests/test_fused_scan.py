@@ -227,11 +227,12 @@ def test_pack_budget_guard():
     silently corrupting packed planes."""
     eng = LeaseArrayEngine(2, n_acceptors=3, n_proposers=4, lease_ticks=2)
     limit = max_pack_tick(4, lease_quarters(2))
+    idle = Scenario.build(2, n_cells=2, n_acceptors=3, n_proposers=4)
     eng.t = limit  # pretend the engine already ran to the edge
     with pytest.raises(ValueError, match="packed int32"):
-        eng.run_trace(np.full((2, 2), NO_PROPOSER, np.int32))
+        eng.run_trace(idle)
     eng.t = limit - 2
-    eng.run_trace(np.full((2, 2), NO_PROPOSER, np.int32))  # inside: fine
+    eng.run_trace(idle)  # inside: fine
 
 
 def test_window_scan_direct_api():

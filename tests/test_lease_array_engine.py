@@ -16,6 +16,7 @@ from repro.lease_array import (
     LeaseArrayEngine,
     init_state,
     lease_quarters,
+    make_tick,
     random_trace,
     replay_array,
 )
@@ -34,10 +35,18 @@ def eng(n_cells=8, **kw):
     return LeaseArrayEngine(n_cells, **kw)
 
 
+def tick(e, **planes):
+    """One validated TickInputs sized for engine ``e`` (registry names)."""
+    return make_tick(
+        n_cells=e.n_cells, n_acceptors=e.n_acceptors,
+        n_proposers=e.n_proposers, **planes,
+    )
+
+
 # ----------------------------------------------------------- protocol steps
 def test_acquire_hold_expire():
     e = eng(n_cells=4)
-    own = e.step(attempt=A([0, 1, NA, NA]))
+    own = e.step(tick(e, attempts=A([0, 1, NA, NA])))
     assert own.tolist() == [0, 1, NA, NA]
     # held without renewal for lease_ticks ticks, then expires
     for _ in range(e.lease_ticks):
@@ -48,11 +57,11 @@ def test_acquire_hold_expire():
 
 def test_extend_resets_clock_and_contender_is_shut_out():
     e = eng(n_cells=1)
-    assert e.step(attempt=A([0]))[0] == 0
+    assert e.step(tick(e, attempts=A([0])))[0] == 0
     # a contender's higher ballot gets promises but no open majority
-    assert e.step(attempt=A([1]))[0] == 0
+    assert e.step(tick(e, attempts=A([1])))[0] == 0
     # the owner extends (§6): its own accepted proposal counts as open
-    assert e.step(attempt=A([0]))[0] == 0
+    assert e.step(tick(e, attempts=A([0])))[0] == 0
     for _ in range(e.lease_ticks):
         assert e.step()[0] == 0  # clock restarted at the extend tick
     assert e.step()[0] == NA
@@ -60,33 +69,33 @@ def test_extend_resets_clock_and_contender_is_shut_out():
 
 def test_release_frees_cell_immediately():
     e = eng(n_cells=2)
-    e.step(attempt=A([0, 1]))
-    assert e.step(release=A([0, NA])).tolist() == [NA, 1]
+    e.step(tick(e, attempts=A([0, 1])))
+    assert e.step(tick(e, releases=A([0, NA]))).tolist() == [NA, 1]
     # released cell is acquirable by someone else the very next tick
-    assert e.step(attempt=A([2, NA])).tolist() == [2, 1]
+    assert e.step(tick(e, attempts=A([2, NA]))).tolist() == [2, 1]
 
 
 def test_release_by_non_owner_is_noop():
     e = eng(n_cells=1)
-    e.step(attempt=A([0]))
-    assert e.step(release=A([3]))[0] == 0
+    e.step(tick(e, attempts=A([0])))
+    assert e.step(tick(e, releases=A([3])))[0] == 0
 
 
 def test_quorum_loss_blocks_acquisition():
     e = eng(n_cells=1, n_acceptors=5)
     down3 = A([0, 0, 0, 1, 1])  # 3 of 5 unreachable -> no majority
-    assert e.step(attempt=A([0]), acc_up=down3)[0] == NA
-    assert e.step(attempt=A([0]))[0] == 0  # healed -> wins
+    assert e.step(tick(e, attempts=A([0]), acc_up=down3))[0] == NA
+    assert e.step(tick(e, attempts=A([0])))[0] == 0  # healed -> wins
 
 
 def test_promises_survive_lease_expiry():
     e = eng(n_cells=1)
-    e.step(attempt=A([3]))
+    e.step(tick(e, attempts=A([3])))
     for _ in range(e.lease_ticks + 1):
         e.step()
     assert e.owners()[0] == NA
     # later-tick ballots are higher, so a fresh acquire still works
-    assert e.step(attempt=A([0]))[0] == 0
+    assert e.step(tick(e, attempts=A([0])))[0] == 0
     promised = np.asarray(e.state.highest_promised)
     assert (promised > 0).all()  # never reset by expiry
 
@@ -94,7 +103,7 @@ def test_promises_survive_lease_expiry():
 # ------------------------------------------------------- engine queries
 def test_ticks_left_owned_unowned_expiring():
     e = eng(n_cells=3, lease_ticks=3)
-    e.step(attempt=A([0, 1, NA]))
+    e.step(tick(e, attempts=A([0, 1, NA])))
     # owned cells: won at t=0, expiry quarter 4*3+1=13; unowned cell: 0
     # at t=1: (13 - 4) // 4 = 2 whole ticks beyond the current one
     assert e.ticks_left().tolist() == [2, 2, 0]
@@ -113,28 +122,28 @@ def test_ticks_left_owned_unowned_expiring():
 
 def test_ticks_left_resets_on_extend():
     e = eng(n_cells=1, lease_ticks=4)
-    e.step(attempt=A([2]))
+    e.step(tick(e, attempts=A([2])))
     for _ in range(3):
         e.step()
     assert e.ticks_left().tolist() == [0]
-    e.step(attempt=A([2]))  # §6 extend restarts the clock
+    e.step(tick(e, attempts=A([2])))  # §6 extend restarts the clock
     assert e.ticks_left().tolist() == [3]
 
 
 def test_row_rejects_ghost_proposer():
     e = eng(n_cells=2, n_proposers=4)
     with pytest.raises(ValueError, match=r"proposer id 4 out of range.*4 proposers"):
-        e.step(attempt=A([4, NA]))
+        e.step(tick(e, attempts=A([4, NA])))
     with pytest.raises(ValueError, match="out of range"):
-        e.step(release=A([NA, 99]))
+        e.step(tick(e, releases=A([NA, 99])))
 
 
 def test_row_rejects_below_sentinel():
     e = eng(n_cells=2)
     with pytest.raises(ValueError, match="out of range"):
-        e.step(attempt=A([-2, 0]))
+        e.step(tick(e, attempts=A([-2, 0])))
     # the sentinel itself and valid ids are fine
-    assert e.step(attempt=A([NA, 0])).tolist() == [NA, 0]
+    assert e.step(tick(e, attempts=A([NA, 0]))).tolist() == [NA, 0]
 
 
 # -------------------------------------------------- kernel vs oracle, width
@@ -154,7 +163,7 @@ def test_pallas_matches_jnp_oracle(n_cells):
 def test_single_batched_step_at_4096_cells(backend):
     e = eng(n_cells=4096, n_proposers=8, backend=backend)
     attempt = np.arange(4096, dtype=np.int32) % 8
-    own = e.step(attempt=attempt)
+    own = e.step(tick(e, attempts=attempt))
     assert (own == attempt).all()  # uncontended: everyone wins its cell
     assert np.asarray(e.last_owner_count).max() <= 1
 

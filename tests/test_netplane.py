@@ -5,7 +5,7 @@ LeaseArrayEngine.step with explicit per-tick delay/drop schedules."""
 import jax.numpy as jnp
 import numpy as np
 
-from repro.lease_array import LeaseArrayEngine, NO_PROPOSER, pack_slot
+from repro.lease_array import LeaseArrayEngine, NO_PROPOSER, make_tick, pack_slot
 from repro.lease_array.netplane import R_IDLE, R_PREPARING, R_PROPOSING
 
 A = np.array
@@ -18,13 +18,21 @@ def eng(n_cells=1, **kw):
     return LeaseArrayEngine(n_cells, **kw)
 
 
+def tick(e, **planes):
+    """One validated TickInputs sized for engine ``e`` (registry names)."""
+    return make_tick(
+        n_cells=e.n_cells, n_acceptors=e.n_acceptors,
+        n_proposers=e.n_proposers, **planes,
+    )
+
+
 def test_response_after_abandon_is_ignored():
     """Round abandoned at t0 + round_ticks; the prepare responses land
     later and must not resurrect it — but the acceptors still processed
     the requests (promises were raised)."""
     e = eng(round_ticks=2)
     # requests take 3 ticks; the round is abandoned at t=2, requests land t=3
-    assert e.step(attempt=A([0]), delay=A([3, 3, 3])).tolist() == [NO_PROPOSER]
+    assert e.step(tick(e, attempts=A([0]), delay=A([3, 3, 3]))).tolist() == [NO_PROPOSER]
     assert int(e.net.rnd_phase[0, 0]) == R_PREPARING
     e.step()  # t=1: request still in flight
     assert int(np.asarray(e.net.preq_b).max()) > 0
@@ -44,7 +52,7 @@ def test_duplicate_prepare_response_cannot_double_count_quorum():
     plane's rnd_open mask must be equally duplicate-proof."""
     e = eng(round_ticks=10)  # majority = 2 of 3
     # acceptor 0 answers fast; acceptors 1, 2 are 5 ticks away
-    e.step(attempt=A([0]), delay=A([1, 5, 5]))  # t=0
+    e.step(tick(e, attempts=A([0]), delay=A([1, 5, 5])))  # t=0
     e.step()  # t=1: acc0 processes the request, response (0 delay) arrives
     assert int(e.net.rnd_open[0, 0]) == 1
     assert int(np.asarray(e.net.rnd_open).sum()) == 1
@@ -72,7 +80,7 @@ def test_full_partition_tick_leaves_acceptors_untouched():
     acceptors never see the round at all."""
     e = eng(round_ticks=4)
     before = np.asarray(e.state.highest_promised).copy()
-    e.step(attempt=A([0]), drop=A([1, 1, 1]))
+    e.step(tick(e, attempts=A([0]), drop=A([1, 1, 1])))
     assert int(np.asarray(e.net.preq_b).max()) == 0, "requests never sent"
     for _ in range(6):
         assert e.step().tolist() == [NO_PROPOSER]
@@ -85,8 +93,8 @@ def test_dropped_response_leg_still_raises_promise():
     still processed the requests (promises raised), like the event
     acceptor answering into a lossy socket."""
     e = eng(round_ticks=4)
-    e.step(attempt=A([1]), delay=A([1, 1, 1]))  # t=0: requests in flight
-    e.step(drop=A([1, 1, 1]))  # t=1: requests land; every response is lost
+    e.step(tick(e, attempts=A([1]), delay=A([1, 1, 1])))  # t=0: requests in flight
+    e.step(tick(e, drop=A([1, 1, 1])))  # t=1: requests land; every response is lost
     promised = np.asarray(e.state.highest_promised)
     assert (promised == 3).all(), "ballot (0+1)*2+1 = 3 promised everywhere"
     assert int(np.asarray(e.net.presp_b).max()) == 0, "responses lost at send"
@@ -100,7 +108,7 @@ def test_response_arriving_while_proposing_is_ignored():
     ignores PrepareResponses once phase != PREPARING)."""
     e = eng(round_ticks=10)
     # acc0 and acc1 answer immediately (majority!), acc2 is 4 ticks away
-    e.step(attempt=A([0]), delay=A([0, 0, 4]))  # t=0: quorum of 2 -> owner
+    e.step(tick(e, attempts=A([0]), delay=A([0, 0, 4])))  # t=0: quorum of 2 -> owner
     assert e.owners().tolist() == [0]
     assert int(e.net.rnd_ballot[0, 0]) == 0, "round completed and cleared"
     opens_before = int(np.asarray(e.net.rnd_open).sum())
@@ -116,9 +124,9 @@ def test_accepts_after_own_lease_window_do_not_grant_ownership():
     elapsed, the proposer must NOT become owner — otherwise it would hold a
     'lease' that outlives every acceptor's timer (a §4 hazard)."""
     e = eng(round_ticks=10, lease_ticks=2)
-    e.step(attempt=A([0]), delay=A([1, 1, 1]))  # t=0: requests out
-    e.step(delay=A([1, 1, 1]))  # t=1: requests land, responses out
-    e.step(delay=A([4, 4, 4]))  # t=2: majority opens -> timer starts,
+    e.step(tick(e, attempts=A([0]), delay=A([1, 1, 1])))  # t=0: requests out
+    e.step(tick(e, delay=A([1, 1, 1])))  # t=1: requests land, responses out
+    e.step(tick(e, delay=A([4, 4, 4])))  # t=2: majority opens -> timer starts,
     #                                  propose requests crawl (4 ticks)
     assert int(e.net.rnd_phase[0, 0]) == R_PROPOSING
     assert int(e.net.rnd_expiry[0, 0]) == 4 * 2 + 4 * 2 + 1  # expires ~t=4
@@ -161,14 +169,14 @@ def test_multi_tick_round_timing():
     propose out t=2..3, accepts t=4 -> ownership visible at tick 4, and
     the proposer's own timer started at the propose tick (t=2)."""
     e = eng(round_ticks=10, lease_ticks=3)
-    e.step(attempt=A([0]), delay=A([1, 1, 1]))          # t=0
+    e.step(tick(e, attempts=A([0]), delay=A([1, 1, 1])))          # t=0
     assert e.owners().tolist() == [NO_PROPOSER]
-    e.step(delay=A([1, 1, 1]))                           # t=1: preq lands, resp sent (1 tick)
+    e.step(tick(e, delay=A([1, 1, 1])))                           # t=1: preq lands, resp sent (1 tick)
     assert e.owners().tolist() == [NO_PROPOSER]
-    e.step(delay=A([1, 1, 1]))                           # t=2: opens -> propose sent (1 tick)
+    e.step(tick(e, delay=A([1, 1, 1])))                           # t=2: opens -> propose sent (1 tick)
     assert int(e.net.rnd_phase[0, 0]) == R_PROPOSING
     assert e.owners().tolist() == [NO_PROPOSER]
-    e.step(delay=A([1, 1, 1]))                           # t=3: accepts sent (1 tick)
+    e.step(tick(e, delay=A([1, 1, 1])))                           # t=3: accepts sent (1 tick)
     assert e.owners().tolist() == [NO_PROPOSER]
     own = e.step()                                       # t=4: accepts land -> owner
     assert own.tolist() == [0]

@@ -145,6 +145,73 @@ def test_reject_majority_aborts_and_jumps_ballot():
     assert st.round.ballot > high
 
 
+def test_failed_extend_fast_retry_clamped_inside_lease_window():
+    """A failed-extend fast retry (backoff/4) scheduled AFTER the guarded
+    lease timer fires silently converts the extend into a cold acquire and
+    a handoff. With a local clock wired in, the retry is clamped to half
+    of what is left of our own lease window."""
+    clock = [0.0]
+    cfg = CellConfig(n_acceptors=3, max_lease_time=60.0, lease_timespan=10.0,
+                     backoff_min=32.0, backoff_max=48.0)
+    r = Recorder(cfg)
+    r.p._local_now = lambda: clock[0]
+
+    r.p.acquire("R")
+    st = r.p._state("R")
+    b1 = st.round.ballot
+    for a in ("a0", "a1"):
+        r.p.on_prepare_response(PrepareResponse("R", b1, Answer.ACCEPT, None), a)
+    for a in ("a0", "a1"):
+        r.p.on_propose_response(ProposeResponse("R", b1, Answer.ACCEPT), a)
+    assert r.p.is_owner("R")
+    assert st.owner_deadline == pytest.approx(10.0)  # minted at step 3
+
+    # 4s into the lease, the renewal round's prepares are reject-majoritied
+    clock[0] = 4.0
+    r.p._renew("R")
+    b2 = st.round.ballot
+    r.log.clear()
+    high = Ballot(40, 0, 9)
+    for a in ("a0", "a1"):
+        r.p.on_prepare_response(
+            PrepareResponse("R", b2, Answer.REJECT, None, promised=high), a)
+    assert r.p.stats["aborted"] == 1 and r.p.is_owner("R")
+    (_, delay), = [e for e in r.log if e[0] == "timer"]
+    # backoff_min/4 = 8s would land at t=12, after the guarded expiry at
+    # t=10; the clamp pulls it to half the remaining window instead
+    assert delay == pytest.approx((st.owner_deadline - clock[0]) / 2) == 3.0
+    assert delay < cfg.backoff_min / 4
+    # the retry still runs and opens a fresh round past the seen ballot
+    retry = [t for t in r.timers if not t[0].cancelled][-1]
+    retry[2]()
+    assert st.round.ballot > high
+
+
+def test_failed_extend_fast_retry_unclamped_without_local_clock():
+    """Negative control: no local clock wired in — the fast retry is the
+    bare backoff/4, which can outlive the lease window (the old bug)."""
+    cfg = CellConfig(n_acceptors=3, max_lease_time=60.0, lease_timespan=10.0,
+                     backoff_min=32.0, backoff_max=48.0)
+    r = Recorder(cfg)
+    r.p.acquire("R")
+    st = r.p._state("R")
+    b1 = st.round.ballot
+    for a in ("a0", "a1"):
+        r.p.on_prepare_response(PrepareResponse("R", b1, Answer.ACCEPT, None), a)
+    for a in ("a0", "a1"):
+        r.p.on_propose_response(ProposeResponse("R", b1, Answer.ACCEPT), a)
+    assert st.owner_deadline is None  # no clock, no guarded deadline
+    r.p._renew("R")
+    b2 = st.round.ballot
+    r.log.clear()
+    high = Ballot(40, 0, 9)
+    for a in ("a0", "a1"):
+        r.p.on_prepare_response(
+            PrepareResponse("R", b2, Answer.REJECT, None, promised=high), a)
+    (_, delay), = [e for e in r.log if e[0] == "timer"]
+    assert delay == pytest.approx(cfg.backoff_min / 4)  # 8s > lease remnant
+
+
 def test_t_less_than_m_enforced():
     r = Recorder()
     with pytest.raises(AssertionError):

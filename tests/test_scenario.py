@@ -1,10 +1,8 @@
 """The Scenario-plane API: defaulting, validation, slicing, concatenation,
-vmap batching, the ghost-proposer regression on run_trace, the §4
+vmap batching, the ghost-proposer regression on run_trace, and the §4
 at-most-one-owner property under random asymmetric [T, P, A] link
-scenarios, and the deprecation shims for the old one-kwarg-per-fault
-API (see docs/scenario_api.md)."""
-import warnings
-
+scenarios (see docs/scenario_api.md; the deprecation shims for the old
+one-kwarg-per-fault API live in test_deprecations.py)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -17,13 +15,9 @@ from repro.lease_array import (
     TickInputs,
     init_netplane,
     init_state,
-    lease_plane_step,
-    lease_plane_step_delayed,
-    lease_plane_tick,
     lease_quarters,
     make_tick,
     random_trace,
-    replay_array,
 )
 from repro.lease_array.engine import _scenario_scanner
 from repro.lease_array.scenario import PLANES, register_plane
@@ -82,12 +76,14 @@ def test_run_trace_rejects_ghost_proposer_ids():
     step does — out-of-range ids silently leased cells to ghost proposers.
     Both paths now validate in scenario.validate_proposer_ids."""
     e = LeaseArrayEngine(4, n_acceptors=3, n_proposers=2)
-    bad = np.full((3, 4), NA, np.int32)
-    bad[1, 2] = 2  # == n_proposers: a ghost
+    bad = Scenario.build(3, **GEOM)
+    bad.planes["attempts"][1, 2] = 2  # == n_proposers: a ghost
     with pytest.raises(ValueError, match=r"proposer id 2 out of range.*2 proposers"):
         e.run_trace(bad)
+    rel = Scenario.build(3, **GEOM)
+    rel.planes["releases"][0, 1] = -7
     with pytest.raises(ValueError, match="out of range"):
-        e.run_trace(np.full((3, 4), NA, np.int32), releases=np.full((3, 4), -7, np.int32))
+        e.run_trace(rel)
     assert e.t == 0  # nothing advanced
 
 
@@ -140,21 +136,6 @@ def test_concat_joins_ticks_and_checks_geometry():
     other = Scenario.build(2, n_cells=8, n_acceptors=3, n_proposers=2)
     with pytest.raises(ValueError, match="cannot concat"):
         a.concat(other)
-
-
-def test_scenario_replay_matches_legacy_kwargs_path():
-    tr = random_trace(3, n_ticks=40, n_cells=6, n_acceptors=3, n_proposers=3,
-                      lease_ticks=2, p_release=0.1, max_delay_ticks=1, p_drop=0.1)
-    e1 = LeaseArrayEngine(6, n_acceptors=3, n_proposers=3, lease_ticks=2,
-                          round_ticks=tr.round_ticks)
-    o1, c1 = e1.run_trace(tr.scenario())
-    e2 = LeaseArrayEngine(6, n_acceptors=3, n_proposers=3, lease_ticks=2,
-                          round_ticks=tr.round_ticks)
-    o2, c2 = e2.run_trace(
-        tr.attempts, tr.releases, tr.acc_up,
-        delay=tr.delay, drop=tr.drop,
-    )
-    assert np.array_equal(o1, o2) and np.array_equal(c1, c2)
 
 
 # ------------------------------------------------------------- vmap batching
@@ -234,67 +215,7 @@ def test_at_most_one_owner_hypothesis_property():
     prop()
 
 
-# ---------------------------------------------------------- deprecation shims
-def test_lease_plane_step_shim_matches_tick():
-    state = init_state(4, 3, 2)
-    att, rel = A([0, 1, NA, NA], np.int32), np.full(4, NA, np.int32)
-    up = np.ones(3, np.int32)
-    with pytest.warns(DeprecationWarning, match="lease_plane_step is deprecated"):
-        old_state, old_count = lease_plane_step(
-            state, 0, att, rel, up, majority=2, lease_q4=lease_quarters(2),
-        )
-    tick = make_tick(attempts=att, releases=rel, acc_up=up, **GEOM)
-    new_state, _, new_count = lease_plane_tick(
-        state, None, 0, tick,
-        majority=2, lease_q4=lease_quarters(2), round_q4=0, sync=True,
-    )
-    assert all(np.array_equal(a, b) for a, b in zip(old_state, new_state))
-    assert np.array_equal(old_count, new_count)
-
-
-def test_lease_plane_step_delayed_shim_accepts_legacy_symmetric_links():
-    state, net = init_state(4, 3, 2), init_netplane(4, 3)
-    att = A([0, NA, NA, NA], np.int32)
-    none = np.full(4, NA, np.int32)
-    up = np.ones(3, np.int32)
-    with pytest.warns(DeprecationWarning):
-        st1, net1, c1 = lease_plane_step_delayed(
-            state, net, 0, att, none, up, A([1, 1, 1]), np.zeros(3, np.int32),
-            majority=2, lease_q4=lease_quarters(2), round_q4=8,
-        )
-    # the [A] form is the P-broadcast of the [P, A] link matrix
-    tick = make_tick(attempts=att, acc_up=up,
-                     delay=np.ones((2, 3), np.int32), **GEOM)
-    st2, net2, c2 = lease_plane_tick(
-        state, net, 0, tick,
-        majority=2, lease_q4=lease_quarters(2), round_q4=8,
-    )
-    assert all(np.array_equal(a, b) for a, b in zip(st1, st2))
-    assert all(np.array_equal(a, b) for a, b in zip(net1, net2))
-    assert np.array_equal(c1, c2)
-
-
-def test_engine_step_accepts_bare_positional_attempt_row():
-    e = LeaseArrayEngine(4, n_acceptors=3, n_proposers=2)
-    own = e.step(A([0, 1, NA, NA], np.int32))  # pre-Scenario positional form
-    assert own.tolist() == [0, 1, NA, NA]
-    tick = make_tick(attempts=A([NA, NA, 0, NA], np.int32), **GEOM)
-    assert e.step(tick).tolist() == [0, 1, 0, NA]
-
-
-def test_engine_step_accepts_all_legacy_positionals():
-    # the full pre-Scenario signature: step(attempt, release, acc_up, ...)
-    e = LeaseArrayEngine(2, n_acceptors=3, n_proposers=2)
-    e.step(A([0, 1], np.int32))
-    own = e.step(None, A([0, NA], np.int32), np.ones(3, np.int32))
-    assert own.tolist() == [NA, 1]
-    with pytest.raises(TypeError, match="not both"):
-        e.step(A([0, NA], np.int32), attempt=A([0, NA], np.int32))
-    with pytest.raises(TypeError, match="inside the TickInputs"):
-        e.step(make_tick(n_cells=2, n_acceptors=3, n_proposers=2),
-               release=A([0, NA], np.int32))
-
-
+# ------------------------------------------------- model-selection regressions
 def test_run_trace_netplane_false_rejects_delayed_scenario():
     """Regression: netplane=False used to silently run a faulty scenario
     through the sync step, discarding its delay/drop planes."""
@@ -315,45 +236,15 @@ def test_failed_step_does_not_corrupt_network_model():
     """Regression: a step that fails validation must not flip the engine
     onto the delayed model."""
     e = LeaseArrayEngine(4, n_acceptors=3, n_proposers=2)
-    with pytest.raises(ValueError):
-        e.step(delay=np.zeros(7, np.int32))  # wrong acceptor count
-    att = np.full((2, 4), NA, np.int32)
-    e.run_trace(att, netplane=False)  # still a pure-sync engine
+    # wrong acceptor count, nonzero delay: validate_for must fire before
+    # the tick's delay plane can flip the engine onto the netplane
+    bad = make_tick(n_cells=4, n_acceptors=7, n_proposers=2,
+                    delay=np.ones(7, np.int32))
+    with pytest.raises(ValueError, match="engine geometry wants"):
+        e.step(bad)
+    sc = Scenario.build(2, **GEOM)
+    e.run_trace(sc, netplane=False)  # still a pure-sync engine
     assert e.t == 2
-
-
-def test_run_trace_accepts_legacy_attempts_keyword():
-    att = np.zeros((3, 2), np.int32)
-    e1 = LeaseArrayEngine(2, n_acceptors=3, n_proposers=2)
-    o1, _ = e1.run_trace(attempts=att)
-    e2 = LeaseArrayEngine(2, n_acceptors=3, n_proposers=2)
-    o2, _ = e2.run_trace(att)
-    assert np.array_equal(o1, o2)
-    with pytest.raises(TypeError, match="not both"):
-        e2.run_trace(att, attempts=att)
-
-
-def test_deprecated_step_shims_stay_jit_traceable():
-    """The pre-Scenario step functions were @jax.jit; callers tracing them
-    (e.g. inside their own lax.scan) must keep working."""
-    state = init_state(4, 3, 2)
-    rel = jnp.full(4, NA, jnp.int32)
-    up = jnp.ones(3, jnp.int32)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        traced = jax.jit(lambda s, a: lease_plane_step(
-            s, 0, a, rel, up, majority=2, lease_q4=lease_quarters(2),
-        ))
-        new_state, count = traced(state, jnp.array([0, 1, NA, NA], jnp.int32))
-        assert count.tolist() == [1, 1, 0, 0]
-        net = init_netplane(4, 3)
-        traced_d = jax.jit(lambda s, n, a: lease_plane_step_delayed(
-            s, n, 0, a, rel, up, jnp.ones(3, jnp.int32), jnp.zeros(3, jnp.int32),
-            majority=2, lease_q4=lease_quarters(2), round_q4=8,
-        ))
-        st2, net2, c2 = traced_d(state, net, jnp.array([0, NA, NA, NA], jnp.int32))
-        assert c2.tolist() == [0, 0, 0, 0]  # request still in flight
-        assert (np.asarray(net2.preq_b) > 0).any()
 
 
 def test_scenario_and_tick_pickle_roundtrip():
